@@ -1,0 +1,45 @@
+"""Shared benchmark helpers: size sweeps, CSV emission, timers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List
+
+import numpy as np
+
+# Empirical matrices up to 2^22 rows are generated for real; beyond that the
+# synthetic profiles (core.cache_model.profile_fd / profile_rmat) carry the
+# sweep to the paper's 2^26 without materializing 5x10^8-nnz matrices.
+EMPIRICAL_MAX_LOG2 = 20        # keep CI fast; paper sweep goes to 26
+PAPER_MIN_LOG2, PAPER_MAX_LOG2 = 11, 26
+THREADS = (1, 2, 4, 8, 16)
+
+
+def emit(rows: Iterable[Iterable], header: List[str], title: str) -> str:
+    lines = [f"# {title}", ",".join(header)]
+    for row in rows:
+        lines.append(",".join(
+            f"{v:.4g}" if isinstance(v, float) else str(v) for v in row))
+    out = "\n".join(lines)
+    print(out)
+    return out
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time (seconds) with block_until_ready on jax outputs."""
+    import jax
+
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def size_sweep(max_log2: int = EMPIRICAL_MAX_LOG2,
+               min_log2: int = PAPER_MIN_LOG2) -> List[int]:
+    return [2 ** k for k in range(min_log2, max_log2 + 1)]

@@ -1,0 +1,50 @@
+"""Benchmark aggregator: `PYTHONPATH=src python -m benchmarks.run`.
+
+Runs one bench per paper table/figure plus the TPU-side benches, printing
+CSV blocks.  `--fast` trims the empirical sweep (CI); default reproduces
+the full paper sweep via synthetic profiles to 2^26.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="cap empirical matrices at 2^16 rows")
+    ap.add_argument("--only", default=None,
+                    help="comma list: paper,kernels,traffic,moe,serve")
+    args = ap.parse_args(argv)
+
+    from . import common
+    if args.fast:
+        common.EMPIRICAL_MAX_LOG2 = 16
+
+    want = set((args.only or "paper,kernels,traffic,moe,serve").split(","))
+    t0 = time.time()
+
+    if "paper" in want:
+        from . import paper_metrics
+        paper_metrics.main()
+    if "kernels" in want:
+        from . import kernel_bench
+        kernel_bench.main()
+    if "traffic" in want:
+        from . import traffic_bench
+        traffic_bench.main()
+    if "moe" in want:
+        from . import moe_dispatch_bench
+        moe_dispatch_bench.main()
+    if "serve" in want:
+        from . import serve_bench
+        serve_bench.main()
+
+    print(f"# benchmarks.run completed in {time.time()-t0:.1f}s",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Graph analytics on SpMV (paper §I motivation): PageRank and the dominant
+eigenvector via power iteration, on structured vs unstructured graphs.
+
+    PYTHONPATH=src python examples/graph_analytics.py
+
+SpMV dominates both analytics' runtime, so the structure-aware dispatch is
+what decides end-to-end throughput -- the paper's point, applied.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analyze, auto_format, fd_matrix, rmat_matrix
+from repro.core.spmv import pagerank, power_iteration, spmv
+
+N = 1 << 13
+
+for name, gen in (("FD", fd_matrix), ("R-MAT", rmat_matrix)):
+    m = gen(N)
+    rep = analyze(m)
+    print(f"=== {name}: {rep.kind}, {m.nnz} nnz ===")
+
+    # PageRank (network anomaly pipelines run this repeatedly)
+    t0 = time.time()
+    r = pagerank(m, n_iters=24)
+    r.block_until_ready()
+    print(f"  pagerank  : {time.time()-t0:5.2f}s   "
+          f"mass={float(r.sum()):.4f}  top={float(r.max()):.3e}")
+
+    # Dominant eigenvalue via repeated SpMV on the dispatched format
+    fmt = auto_format(m, rep)
+    x0 = jnp.ones((N,), jnp.float32) / np.sqrt(N)
+    t0 = time.time()
+    lam, v = power_iteration(fmt, x0, n_iters=24)
+    v.block_until_ready()
+    print(f"  power-iter: {time.time()-t0:5.2f}s   "
+          f"lambda~{float(lam):8.3f}  via {type(fmt).__name__}")
+
+    # residual check: ||A v - lam v|| / ||lam v||
+    av = spmv(m, v)
+    res = float(jnp.linalg.norm(av - lam * v) / jnp.linalg.norm(lam * v))
+    print(f"  eig residual: {res:.3e}")

@@ -1,0 +1,23 @@
+"""Batched serving with continuous batching + paged-KV admission control.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Submits a burst of mixed-length requests against a 4-slot engine whose KV
+pool is deliberately undersized -- exercising admission control and
+(depending on trace) preemption, while per-slot cache positions keep
+mixed-depth batches correct.
+"""
+from repro.launch import serve as serve_mod
+
+out, stats = serve_mod.main([
+    "--arch", "stablelm-1.6b", "--reduced",
+    "--requests", "12",
+    "--max-new", "16",
+    "--max-batch", "4",
+    "--max-context", "128",
+    "--block-size", "16",
+])
+
+assert len(out) == 12, "all requests must complete"
+print(f"\n[example] completed {len(out)} requests; "
+      f"pool peak utilization seen via stats={stats}")

@@ -1,0 +1,285 @@
+"""Sparse-matrix containers used throughout the framework.
+
+The paper stores matrices in CSR (values / col-indices / row-pointers,
+2m + n + 1 elements).  On TPU we additionally provide formats whose access
+pattern is *structurally* friendly to the HBM->VMEM DMA engine:
+
+  * CSR   -- the paper's format; row-pointer driven, good for scalar-prefetch
+             Pallas grids.
+  * ELL   -- fixed nnz/row, row-major padded; vectorizes on the VPU.
+  * BELL  -- blocked-ELL: (bm x bn) dense blocks, fixed blocks per row-block.
+             The TPU-native unstructured format (blocks are lane-aligned, so
+             every gather moves a useful 2-D tile instead of 8 wasted lanes).
+  * DIA   -- diagonal/banded storage; the FD fast path (x-windows contiguous).
+
+All containers are registered pytrees of jnp arrays so they pass through
+jit/pjit unharmed; construction happens host-side in numpy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _register(cls):
+    """Register a dataclass as a pytree (arrays = leaves, ints = static)."""
+    fields = [f.name for f in dataclasses.fields(cls)]
+    array_fields = [f for f in fields if f not in cls._static]
+    static_fields = [f for f in fields if f in cls._static]
+
+    def flatten(obj):
+        return (
+            tuple(getattr(obj, f) for f in array_fields),
+            tuple(getattr(obj, f) for f in static_fields),
+        )
+
+    def unflatten(static, arrays):
+        kwargs = dict(zip(array_fields, arrays))
+        kwargs.update(dict(zip(static_fields, static)))
+        return cls(**kwargs)
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed sparse row.  2m + n + 1 stored elements (paper §II-A)."""
+
+    _static = ("n_rows", "n_cols")
+
+    data: Array        # (nnz,) values
+    indices: Array     # (nnz,) column index per nonzero
+    indptr: Array      # (n_rows + 1,) offsets into data
+    n_rows: int
+    n_cols: int
+
+    @property
+    def nnz(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n_rows, self.n_cols)
+
+    def storage_bytes(self) -> int:
+        return (
+            self.data.size * self.data.dtype.itemsize
+            + self.indices.size * self.indices.dtype.itemsize
+            + self.indptr.size * self.indptr.dtype.itemsize
+        )
+
+    @staticmethod
+    def from_coo(rows, cols, vals, n_rows, n_cols, dtype=np.float32) -> "CSR":
+        rows = np.asarray(rows)
+        cols = np.asarray(cols)
+        vals = np.asarray(vals, dtype=dtype)
+        order = np.lexsort((cols, rows))
+        rows, cols, vals = rows[order], cols[order], vals[order]
+        indptr = np.zeros(n_rows + 1, dtype=np.int32)
+        np.add.at(indptr, rows + 1, 1)
+        indptr = np.cumsum(indptr, dtype=np.int64)
+        if indptr[-1] < np.iinfo(np.int32).max:
+            indptr = indptr.astype(np.int32)
+        return CSR(
+            data=jnp.asarray(vals),
+            indices=jnp.asarray(cols.astype(np.int32)),
+            indptr=jnp.asarray(indptr),
+            n_rows=int(n_rows),
+            n_cols=int(n_cols),
+        )
+
+    def to_dense(self) -> Array:
+        out = np.zeros(self.shape, dtype=np.asarray(self.data).dtype)
+        indptr = np.asarray(self.indptr)
+        cols = np.asarray(self.indices)
+        vals = np.asarray(self.data)
+        for r in range(self.n_rows):
+            lo, hi = int(indptr[r]), int(indptr[r + 1])
+            np.add.at(out[r], cols[lo:hi], vals[lo:hi])
+        return jnp.asarray(out)
+
+    def row_lengths(self) -> np.ndarray:
+        indptr = np.asarray(self.indptr)
+        return np.diff(indptr)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class ELL:
+    """ELLPACK: every row padded to `max_nnz` entries (pad col = 0, val = 0)."""
+
+    _static = ("n_rows", "n_cols", "max_nnz")
+
+    data: Array        # (n_rows, max_nnz)
+    indices: Array     # (n_rows, max_nnz) int32; padding points at col 0
+    n_rows: int
+    n_cols: int
+    max_nnz: int
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n_rows, self.n_cols)
+
+    @staticmethod
+    def from_csr(csr: CSR, max_nnz: int | None = None) -> "ELL":
+        lengths = csr.row_lengths()
+        width = int(lengths.max()) if max_nnz is None else int(max_nnz)
+        data = np.zeros((csr.n_rows, width), dtype=np.asarray(csr.data).dtype)
+        idx = np.zeros((csr.n_rows, width), dtype=np.int32)
+        indptr = np.asarray(csr.indptr)
+        cols = np.asarray(csr.indices)
+        vals = np.asarray(csr.data)
+        for r in range(csr.n_rows):
+            lo, hi = int(indptr[r]), int(indptr[r + 1])
+            k = min(hi - lo, width)
+            data[r, :k] = vals[lo:lo + k]
+            idx[r, :k] = cols[lo:lo + k]
+        return ELL(
+            data=jnp.asarray(data),
+            indices=jnp.asarray(idx),
+            n_rows=csr.n_rows,
+            n_cols=csr.n_cols,
+            max_nnz=width,
+        )
+
+    def storage_bytes(self) -> int:
+        return (
+            self.data.size * self.data.dtype.itemsize
+            + self.indices.size * self.indices.dtype.itemsize
+        )
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class BELL:
+    """Blocked-ELL: (bm, bn) dense blocks, fixed `blocks_per_row` per block-row.
+
+    This is the TPU-native unstructured format: each gathered unit is a dense
+    (bm, bn) tile whose bn is lane-aligned, so a "random access" still moves a
+    fully-useful 2-D tile through the DMA engine.  Padding blocks have
+    block_col 0 and all-zero data.
+    """
+
+    _static = ("n_rows", "n_cols", "bm", "bn", "blocks_per_row")
+
+    data: Array        # (n_block_rows, blocks_per_row, bm, bn)
+    block_cols: Array  # (n_block_rows, blocks_per_row) int32 block-col index
+    n_rows: int
+    n_cols: int
+    bm: int
+    bn: int
+    blocks_per_row: int
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n_rows, self.n_cols)
+
+    @property
+    def n_block_rows(self) -> int:
+        return -(-self.n_rows // self.bm)
+
+    @staticmethod
+    def from_csr(csr: CSR, bm: int = 8, bn: int = 128,
+                 blocks_per_row: int | None = None) -> "BELL":
+        nbr = -(-csr.n_rows // bm)
+        nbc = -(-csr.n_cols // bn)
+        indptr = np.asarray(csr.indptr)
+        cols = np.asarray(csr.indices)
+        vals = np.asarray(csr.data)
+        # bucket nonzeros by (block_row, block_col)
+        from collections import defaultdict
+        buckets: dict = defaultdict(list)
+        for r in range(csr.n_rows):
+            br = r // bm
+            for p in range(int(indptr[r]), int(indptr[r + 1])):
+                c = int(cols[p])
+                buckets[(br, c // bn)].append((r % bm, c % bn, vals[p]))
+        per_row: dict = defaultdict(list)
+        for (br, bc), entries in buckets.items():
+            per_row[br].append((bc, entries))
+        width = blocks_per_row or max(
+            (len(v) for v in per_row.values()), default=1)
+        width = max(width, 1)
+        data = np.zeros((nbr, width, bm, bn), dtype=vals.dtype)
+        bcols = np.zeros((nbr, width), dtype=np.int32)
+        for br, blocks in per_row.items():
+            blocks.sort(key=lambda t: t[0])
+            for k, (bc, entries) in enumerate(blocks[:width]):
+                bcols[br, k] = bc
+                for (ri, ci, v) in entries:
+                    data[br, k, ri, ci] += v
+        del nbc
+        return BELL(
+            data=jnp.asarray(data),
+            block_cols=jnp.asarray(bcols),
+            n_rows=csr.n_rows, n_cols=csr.n_cols,
+            bm=bm, bn=bn, blocks_per_row=width,
+        )
+
+    def storage_bytes(self) -> int:
+        return (
+            self.data.size * self.data.dtype.itemsize
+            + self.block_cols.size * self.block_cols.dtype.itemsize
+        )
+
+    def density(self) -> float:
+        """Fraction of stored block entries that are true nonzeros."""
+        return float(np.count_nonzero(np.asarray(self.data))) / self.data.size
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class DIA:
+    """Diagonal (banded) storage: the FD fast path.
+
+    `data[k, i]` is A[i, i + offsets[k]].  Out-of-range entries are zero.
+    x-accesses for diagonal k are the contiguous window x[off_k : off_k + n] --
+    the structurally perfect case from the paper's Fig. 2.
+    """
+
+    _static = ("n_rows", "n_cols")
+
+    data: Array      # (n_diags, n_rows)
+    offsets: Array   # (n_diags,) int32, column offset of each diagonal
+    n_rows: int
+    n_cols: int
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n_rows, self.n_cols)
+
+    @staticmethod
+    def from_csr(csr: CSR) -> "DIA":
+        indptr = np.asarray(csr.indptr)
+        cols = np.asarray(csr.indices)
+        vals = np.asarray(csr.data)
+        rows = np.repeat(np.arange(csr.n_rows), np.diff(indptr))
+        offs = cols.astype(np.int64) - rows
+        uniq = np.unique(offs)
+        data = np.zeros((len(uniq), csr.n_rows), dtype=vals.dtype)
+        pos = {int(o): k for k, o in enumerate(uniq)}
+        for r, c, v in zip(rows, cols, vals):
+            data[pos[int(c) - int(r)], r] += v
+        return DIA(
+            data=jnp.asarray(data),
+            offsets=jnp.asarray(uniq.astype(np.int32)),
+            n_rows=csr.n_rows, n_cols=csr.n_cols,
+        )
+
+    @property
+    def n_diags(self) -> int:
+        return int(self.offsets.shape[0])
+
+    def storage_bytes(self) -> int:
+        return (
+            self.data.size * self.data.dtype.itemsize
+            + self.offsets.size * self.offsets.dtype.itemsize
+        )

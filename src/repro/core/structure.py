@@ -1,0 +1,205 @@
+"""Structure metrics for sparse matrices.
+
+The paper's central variable is *matrix structure*: FD matrices produce
+sequential + reused x-accesses, R-MAT matrices produce random ones.  This
+module turns that qualitative axis into numbers the framework can act on
+(format dispatch, partitioning, traffic prediction).
+
+All metrics are computed host-side from the CSR column stream -- the exact
+stream of x-indices the SpMV kernel will issue (paper Fig. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .formats import CSR
+
+
+@dataclasses.dataclass(frozen=True)
+class StructureReport:
+    n_rows: int
+    nnz: int
+    avg_nnz_per_row: float
+    row_nnz_cv: float           # coefficient of variation: load-balance proxy
+    bandwidth: int              # max |col - row|
+    bandwidth_p95: int          # 95th percentile |col - row|
+    n_distinct_offsets: int     # diagonals present (DIA viability)
+    n_band_groups: int          # contiguous diagonal groups (FD: 3)
+    spatial_locality: float     # frac of consecutive x-accesses within 1 line
+    temporal_locality: float    # frac of x-accesses re-touching a recent line
+    stream_servable: float      # frac servable by a K-stream next-line prefetcher
+    block_density_8x128: float  # density within touched 8x128 blocks
+    kind: str                   # 'banded' | 'blocked' | 'unstructured'
+
+    def summary(self) -> str:
+        return (
+            f"{self.kind}: n={self.n_rows} nnz={self.nnz} "
+            f"bw={self.bandwidth} bw95={self.bandwidth_p95} "
+            f"bands={self.n_band_groups} "
+            f"spatial={self.spatial_locality:.3f} "
+            f"temporal={self.temporal_locality:.3f} "
+            f"stream={self.stream_servable:.3f} "
+            f"blockdens={self.block_density_8x128:.4f}"
+        )
+
+
+LINE_ELEMS = 8          # 64-byte line of f64 (paper) -- locality window
+RECENT_WINDOW = 64      # lines considered "recent" for temporal locality
+STREAM_WINDOW = 24      # accesses a 16-stream prefetcher can look back over
+
+
+def x_access_stream(csr: CSR) -> np.ndarray:
+    """The exact sequence of x-indices touched by CSR SpMV (row-major)."""
+    return np.asarray(csr.indices, dtype=np.int64)
+
+
+def analyze(csr: CSR, sample_rows: int | None = 65536) -> StructureReport:
+    indptr = np.asarray(csr.indptr)
+    lengths = np.diff(indptr)
+    n_rows = csr.n_rows
+
+    if sample_rows is not None and n_rows > sample_rows:
+        # contiguous row windows (stream metrics need the true sequence)
+        n_chunks = 8
+        chunk = sample_rows // n_chunks
+        starts = np.linspace(0, n_rows - chunk, n_chunks).astype(np.int64)
+        sel = np.concatenate([np.arange(s, s + chunk) for s in starts])
+    else:
+        sel = np.arange(n_rows, dtype=np.int64)
+
+    cols_all = np.asarray(csr.indices, dtype=np.int64)
+    lo = indptr[sel]
+    hi = indptr[sel + 1]
+    seg_len = (hi - lo).astype(np.int64)
+    # vectorized extraction of the sampled rows' nonzeros
+    total = int(seg_len.sum())
+    pos = np.repeat(lo, seg_len) + (
+        np.arange(total) - np.repeat(np.cumsum(seg_len) - seg_len, seg_len))
+    cols = cols_all[pos] if total else np.zeros(0, np.int64)
+    rows_rep = np.repeat(sel, seg_len) if total else np.zeros(0, np.int64)
+
+    offs = cols - rows_rep
+    bandwidth = int(np.abs(offs).max()) if offs.size else 0
+    bandwidth_p95 = int(np.percentile(np.abs(offs), 95)) if offs.size else 0
+    uniq_offs = np.unique(offs) if offs.size else np.zeros(0, np.int64)
+    n_offsets = int(len(uniq_offs))
+    if n_offsets:
+        gaps = np.diff(np.sort(uniq_offs))
+        n_band_groups = int(1 + np.sum(gaps > 2 * LINE_ELEMS))
+    else:
+        n_band_groups = 0
+
+    # --- spatial locality: consecutive accesses land in the same/adjacent line
+    lines = cols // LINE_ELEMS
+    if lines.size > 1:
+        d = np.abs(np.diff(lines))
+        spatial = float(np.mean(d <= 1))
+    else:
+        spatial = 1.0
+
+    # --- temporal locality: access re-touches one of the last RECENT_WINDOW
+    #     distinct lines (cheap windowed approximation of reuse distance)
+    temporal = _windowed_reuse(lines, RECENT_WINDOW)
+
+    # --- stream servability: access line is within +-1 of one of the last
+    #     STREAM_WINDOW accesses -> a K-stream next-line prefetcher (or the
+    #     line already resident from that neighbour's fill) covers it.
+    stream = _stream_servable(lines, STREAM_WINDOW)
+
+    # --- density inside touched 8x128 blocks (BELL viability)
+    br = rows_rep // 8
+    bc = cols // 128
+    key = br * ((csr.n_cols // 128) + 2) + bc
+    n_blocks = len(np.unique(key)) if key.size else 1
+    block_density = float(cols.size) / (n_blocks * 8 * 128)
+
+    avg_nnz = float(lengths.mean()) if lengths.size else 0.0
+    cv = float(lengths.std() / max(avg_nnz, 1e-9)) if lengths.size else 0.0
+
+    if n_offsets <= 32 and bandwidth_p95 <= 4 * LINE_ELEMS * 16:
+        kind = "banded"
+    elif block_density >= 0.05:
+        kind = "blocked"
+    else:
+        kind = "unstructured"
+
+    return StructureReport(
+        n_rows=n_rows, nnz=csr.nnz, avg_nnz_per_row=avg_nnz, row_nnz_cv=cv,
+        bandwidth=bandwidth, bandwidth_p95=bandwidth_p95,
+        n_distinct_offsets=n_offsets, n_band_groups=n_band_groups,
+        spatial_locality=spatial, temporal_locality=temporal,
+        stream_servable=stream, block_density_8x128=block_density,
+        kind=kind,
+    )
+
+
+def _stream_servable(lines: np.ndarray, window: int) -> float:
+    """Fraction of accesses whose line is within +-1 of one of the previous
+    `window` accesses' lines -- i.e. coverable by a multi-stream next-line
+    prefetcher or already resident from the neighbouring access's fill.
+
+    Vectorized: O(window * m) numpy comparisons.
+    """
+    if lines.size < 2:
+        return 1.0
+    served = np.zeros(lines.size, dtype=bool)
+    for k in range(1, window + 1):
+        d = np.abs(lines[k:] - lines[:-k])
+        served[k:] |= d <= 1
+    served[0] = True
+    return float(np.mean(served))
+
+
+def _windowed_reuse(lines: np.ndarray, window: int) -> float:
+    """Fraction of accesses whose line was seen within the last `window`
+    *accesses* (vectorized lower bound on LRU-of-`window`-lines hits)."""
+    if lines.size < 2:
+        return 1.0
+    # position of previous access to the same line
+    order = np.argsort(lines, kind="stable")
+    sorted_lines = lines[order]
+    same = sorted_lines[1:] == sorted_lines[:-1]
+    prev_pos = np.full(lines.size, -10 ** 12, dtype=np.int64)
+    prev_pos[order[1:][same]] = order[:-1][same]
+    idx = np.arange(lines.size, dtype=np.int64)
+    return float(np.mean((idx - prev_pos) <= window))
+
+
+def reuse_distance_histogram(lines: np.ndarray, max_bits: int = 30):
+    """Exact LRU stack distances via a Fenwick tree (O(m log m)).
+
+    Returns (distances, counts) where distance is the number of *distinct*
+    lines touched since the previous access to the same line (inf -> cold).
+    Used by the cache model for exact small/medium-size simulation.
+    """
+    m = lines.size
+    tree = np.zeros(m + 1, dtype=np.int64)
+
+    def bit_add(i, v):
+        i += 1
+        while i <= m:
+            tree[i] += v
+            i += i & (-i)
+
+    def bit_sum(i):  # sum of [0, i)
+        s = 0
+        while i > 0:
+            s += tree[i]
+            i -= i & (-i)
+        return s
+
+    last = {}
+    dists = np.empty(m, dtype=np.int64)
+    for t in range(m):
+        ln = lines[t]
+        p = last.get(ln, -1)
+        if p < 0:
+            dists[t] = -1  # cold miss
+        else:
+            dists[t] = bit_sum(t) - bit_sum(p + 1)
+            bit_add(p, -1)
+        bit_add(t, 1)
+        last[ln] = t
+    return dists

@@ -1,0 +1,165 @@
+"""TPU HBM<->VMEM data-movement model for SpMV (hardware adaptation).
+
+The paper's CPU metrics (cache miss rates) have no direct TPU counterpart:
+v5e has no demand caches and no hardware prefetcher.  What *does* transfer is
+the underlying quantity the misses proxy for -- bytes moved per nonzero --
+and the paper's proposals P1-P3 become explicit software policies:
+
+  stream    : matrix tiles stream HBM->VMEM once (P1: no cache to pollute)
+  gather    : each x access is a DMA of `gather_granularity` bytes (the
+              pathology; analogue of the R-MAT demand-miss plateau)
+  col-block : partition A into column stripes; pin each stripe's x slice in
+              VMEM and sweep the matrix once per stripe (P2+P3: software-
+              managed cache + kernel-directed placement)
+
+This model predicts bytes/nnz and a bandwidth-roofline GFLOP/s for each
+policy, quantifying on TPU the structured-vs-unstructured gap the paper
+measured on Sandy Bridge.  `benchmarks/traffic_bench.py` tabulates it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .formats import CSR
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUModel:
+    name: str = "TPU v5e"
+    peak_flops_bf16: float = 197e12
+    hbm_bw: float = 819e9                 # bytes/s per chip
+    vmem_bytes: int = 128 * 1024 * 1024   # per core (v5e: 128 MiB)
+    lane_bytes: int = 512                 # min useful 2nd-minor DMA width
+    gather_granularity: int = 512         # bytes moved per random x gather
+    ici_bw_per_link: float = 50e9         # bytes/s/link (given constant)
+    elem_bytes: int = 4                   # f32 values on TPU path
+    idx_bytes: int = 4
+
+
+TPU_V5E = TPUModel()
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficReport:
+    policy: str
+    bytes_per_nnz: float
+    hbm_bytes: float
+    arithmetic_intensity: float      # flop / HBM byte
+    roofline_gflops: float           # min(peak, AI * BW) / 1e9
+    vmem_resident_bytes: int
+    x_reload_factor: float           # times each x byte crosses HBM->VMEM
+
+    def summary(self) -> str:
+        return (f"{self.policy:>10}: {self.bytes_per_nnz:7.2f} B/nnz  "
+                f"AI={self.arithmetic_intensity:6.4f}  "
+                f"roofline={self.roofline_gflops:8.2f} GFLOP/s  "
+                f"x_reload={self.x_reload_factor:5.2f}")
+
+
+def _matrix_stream_bytes(csr: CSR, tpu: TPUModel) -> float:
+    """CSR arrays + y, streamed exactly once (P1)."""
+    return (csr.nnz * (tpu.elem_bytes + tpu.idx_bytes)
+            + (csr.n_rows + 1) * tpu.idx_bytes
+            + 2 * csr.n_rows * tpu.elem_bytes)
+
+
+def gather_policy(csr: CSR, tpu: TPUModel = TPU_V5E) -> TrafficReport:
+    """Naive port of CPU SpMV: per-nonzero random gather of x from HBM.
+
+    Each gather moves `gather_granularity` bytes of which 4 are useful --
+    the TPU analogue of the paper's R-MAT demand-miss regime, but worse
+    (512B DMA tile vs 64B cache line).
+    """
+    mat = _matrix_stream_bytes(csr, tpu)
+    x_bytes = csr.nnz * tpu.gather_granularity
+    total = mat + x_bytes
+    ai = 2.0 * csr.nnz / total
+    return TrafficReport(
+        policy="gather",
+        bytes_per_nnz=total / csr.nnz,
+        hbm_bytes=total,
+        arithmetic_intensity=ai,
+        roofline_gflops=min(tpu.peak_flops_bf16, ai * tpu.hbm_bw) / 1e9,
+        vmem_resident_bytes=0,
+        x_reload_factor=x_bytes / max(csr.n_cols * tpu.elem_bytes, 1),
+    )
+
+
+def stream_policy(csr: CSR, bandwidth: int, tpu: TPUModel = TPU_V5E
+                  ) -> TrafficReport:
+    """Banded/DIA policy (FD fast path): x windows stream alongside the
+    matrix; each x byte crosses HBM once per diagonal *band group* that
+    cannot share a window.  For the FD 9-point matrix there are 3 bands ->
+    x streams ~3x (grid-row window reuse covers the 3 in-band diagonals)."""
+    n_windows = max(1, min(3, bandwidth // max(1, int(csr.n_rows ** 0.5))
+                           + 1)) if bandwidth > 0 else 1
+    mat = _matrix_stream_bytes(csr, tpu)
+    x_bytes = n_windows * csr.n_cols * tpu.elem_bytes
+    total = mat + x_bytes
+    ai = 2.0 * csr.nnz / total
+    return TrafficReport(
+        policy="stream",
+        bytes_per_nnz=total / csr.nnz,
+        hbm_bytes=total,
+        arithmetic_intensity=ai,
+        roofline_gflops=min(tpu.peak_flops_bf16, ai * tpu.hbm_bw) / 1e9,
+        vmem_resident_bytes=3 * int(csr.n_rows ** 0.5) * tpu.elem_bytes,
+        x_reload_factor=float(n_windows),
+    )
+
+
+def col_blocked_policy(csr: CSR, n_stripes: int | None = None,
+                       tpu: TPUModel = TPU_V5E) -> TrafficReport:
+    """Column-blocked SpMV: the paper's P2+P3 realized in software.
+
+    A is split into `n_stripes` column stripes; stripe s's x-slice
+    (n_cols/n_stripes * 4 bytes) is DMA'd into VMEM once and *pinned* while
+    the stripe's nonzeros stream through.  x crosses HBM exactly once per
+    full sweep; matrix bytes stream once (partial y accumulators stay in
+    VMEM for the current row block, spilling adds the n_stripes y factor
+    only when rows are also blocked -- we keep y in VMEM, stripes iterate
+    inner, so y spills n_stripes times for very large n).
+    """
+    if n_stripes is None:
+        x_bytes_total = csr.n_cols * tpu.elem_bytes
+        n_stripes = max(1, -(-x_bytes_total // int(tpu.vmem_bytes * 0.5)))
+    mat = _matrix_stream_bytes(csr, tpu)
+    x_bytes = csr.n_cols * tpu.elem_bytes           # once: stripes partition x
+    y_spill = (n_stripes - 1) * 2 * csr.n_rows * tpu.elem_bytes
+    total = mat + x_bytes + y_spill
+    ai = 2.0 * csr.nnz / total
+    return TrafficReport(
+        policy="col-block",
+        bytes_per_nnz=total / csr.nnz,
+        hbm_bytes=total,
+        arithmetic_intensity=ai,
+        roofline_gflops=min(tpu.peak_flops_bf16, ai * tpu.hbm_bw) / 1e9,
+        vmem_resident_bytes=csr.n_cols * tpu.elem_bytes // n_stripes,
+        x_reload_factor=1.0,
+    )
+
+
+def bell_policy(density: float, csr: CSR, tpu: TPUModel = TPU_V5E
+                ) -> TrafficReport:
+    """Blocked-ELL: random block-gathers move useful 2-D tiles.
+
+    bytes/nnz = block bytes / (true nnz per block) for both matrix and the
+    gathered x tile (bn columns * 4B each).
+    """
+    bm, bn = 8, 128
+    block_bytes = bm * bn * tpu.elem_bytes
+    nnz_per_block = max(density * bm * bn, 1e-9)
+    mat = (block_bytes + tpu.idx_bytes) / nnz_per_block * csr.nnz
+    x_bytes = (bn * tpu.elem_bytes) / nnz_per_block * csr.nnz
+    y_bytes = 2 * csr.n_rows * tpu.elem_bytes
+    total = mat + x_bytes + y_bytes
+    ai = 2.0 * csr.nnz / total
+    return TrafficReport(
+        policy="bell",
+        bytes_per_nnz=total / csr.nnz,
+        hbm_bytes=total,
+        arithmetic_intensity=ai,
+        roofline_gflops=min(tpu.peak_flops_bf16, ai * tpu.hbm_bw) / 1e9,
+        vmem_resident_bytes=block_bytes * 2,
+        x_reload_factor=x_bytes / max(csr.n_cols * tpu.elem_bytes, 1),
+    )

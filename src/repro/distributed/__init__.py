@@ -1,0 +1,2 @@
+"""Distribution layer: mesh context, sharding rules, collectives, fault tolerance."""
+from . import api

@@ -1,0 +1,62 @@
+"""Mesh context + sharding-constraint helper used inside model code.
+
+Model code calls `constrain(x, "dp", None, "model")` with *logical* axis
+names; if the launch layer has installed a mesh context, this becomes a
+`with_sharding_constraint`, otherwise it is a no-op (CPU smoke tests).
+
+Logical axes:
+  dp     -> ("pod", "data") when the mesh has a pod axis, else ("data",)
+  data   -> "data"
+  model  -> "model"
+  None   -> replicated
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def resolve_axis(mesh: Mesh, logical: Optional[str]):
+    if logical is None:
+        return None
+    if logical == "dp":
+        return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if logical == "dpm":   # every axis: fully shard one dim (e.g. batch
+        return tuple(mesh.axis_names)  # for attention-free recurrences)
+    if logical in mesh.axis_names:
+        return logical
+    return None   # axis absent on this mesh -> replicate
+
+
+def logical_spec(mesh: Mesh, *logical_axes) -> P:
+    return P(*[resolve_axis(mesh, a) for a in logical_axes])
+
+
+def constrain(x: jax.Array, *logical_axes) -> jax.Array:
+    """with_sharding_constraint if a mesh is active, else identity."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_spec(mesh, *logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

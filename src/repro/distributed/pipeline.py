@@ -1,0 +1,120 @@
+"""Pipeline parallelism (GPipe-style) over a mesh axis, as a shard_map.
+
+Not used by the production dry-run meshes (scan-over-layers + FSDP + TP
+dominates at 512 chips -- DESIGN.md §6); provided and unit-tested at toy
+scale as the stage-over-`pod` variant for scaling beyond ICI domains,
+where activations crossing the slow axis once per stage beat gradient
+all-reduces crossing it every step.
+
+Model: `n_stages` devices along `axis_name`, each owning `layers/n_stages`
+consecutive layers (stacked leading dim on its param shard).  A microbatch
+enters stage 0, and each step every stage processes one microbatch and
+ppermutes its activation to the next stage.  With M microbatches the
+schedule runs M + n_stages - 1 ticks (the classic bubble); utilization =
+M / (M + S - 1).
+
+The implementation is deliberately jnp-pure (runs under jit on any mesh)
+and avoids host control flow over ticks: a lax.scan over the schedule with
+a rotating buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    n_stages: int
+    n_microbatches: int
+    axis_name: str = "stage"
+
+    @property
+    def n_ticks(self) -> int:
+        return self.n_microbatches + self.n_stages - 1
+
+    @property
+    def bubble_fraction(self) -> float:
+        return (self.n_stages - 1) / self.n_ticks
+
+
+def pipeline_apply(stage_fn: Callable, cfg: PipelineConfig,
+                   stage_params, x_microbatches: jax.Array) -> jax.Array:
+    """Run microbatches through the pipeline inside shard_map.
+
+    stage_fn(params_slice, x) -> x : one stage's computation.
+    stage_params: this device's parameter shard (layers of its stage).
+    x_microbatches: (M, mb, ...) -- every stage receives the same input
+    array; only stage 0 actually consumes it (others ignore, standard
+    GPipe data feeding).
+
+    Returns (M, mb, ...) outputs, valid on the LAST stage (other stages
+    return zeros -- caller selects stage n-1's shard).
+    """
+    axis = cfg.axis_name
+    s = cfg.n_stages
+    idx = jax.lax.axis_index(axis)
+    m = cfg.n_microbatches
+    mb_shape = x_microbatches.shape[1:]
+
+    def tick(carry, t):
+        held, outputs = carry
+        # stage 0 ingests microbatch t (if in range), others use held
+        feed = jax.lax.dynamic_index_in_dim(
+            x_microbatches, jnp.clip(t, 0, m - 1), axis=0, keepdims=False)
+        x_in = jnp.where(idx == 0,
+                         jnp.where(t < m, feed, jnp.zeros(mb_shape,
+                                                          feed.dtype)),
+                         held)
+        y = stage_fn(stage_params, x_in)
+        # last stage emits microbatch (t - (s-1)) at tick t
+        out_slot = t - (s - 1)
+        outputs = jax.lax.cond(
+            (idx == s - 1) & (out_slot >= 0),
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, y, jnp.clip(out_slot, 0, m - 1), axis=0),
+            lambda o: o, outputs)
+        # rotate activations forward one stage
+        nxt = jax.lax.ppermute(
+            y, axis, perm=[(i, (i + 1) % s) for i in range(s)])
+        return (nxt, outputs), None
+
+    held0 = jnp.zeros(mb_shape, x_microbatches.dtype)
+    outs0 = jnp.zeros_like(x_microbatches)
+    (_, outputs), _ = jax.lax.scan(tick, (held0, outs0),
+                                   jnp.arange(cfg.n_ticks))
+    return outputs
+
+
+def make_pipelined_mlp(cfg: PipelineConfig, layer_widths, key):
+    """Toy stage model for tests: each stage holds layers/n_stages dense
+    layers; returns (per-stage params stacked on axis 0, stage_fn)."""
+    n_layers = len(layer_widths) - 1
+    assert n_layers % cfg.n_stages == 0
+    per = n_layers // cfg.n_stages
+    keys = jax.random.split(key, n_layers)
+    ws = [jax.random.normal(keys[i], (layer_widths[i], layer_widths[i + 1]))
+          / jnp.sqrt(layer_widths[i]) for i in range(n_layers)]
+    # uniform widths required for stacking; tests use equal widths
+    stacked = jnp.stack(ws).reshape(cfg.n_stages, per, *ws[0].shape)
+
+    def stage_fn(params_slice, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        y, _ = jax.lax.scan(body, x, params_slice)
+        return y
+
+    return stacked, stage_fn
+
+
+def reference_apply(stacked, x):
+    """Sequential oracle for the toy pipelined MLP."""
+    s, per = stacked.shape[:2]
+    y = x
+    for i in range(s):
+        for j in range(per):
+            y = jnp.tanh(y @ stacked[i, j])
+    return y

@@ -1,0 +1,260 @@
+"""Parameter/activation sharding rules (FSDP on 'data', TP on 'model').
+
+Rules are *logical* (axis names resolved against whatever mesh is active) and
+divisibility-checked: a dim that does not divide evenly falls back to
+replication rather than failing to lower -- e.g. RWKV's 40 heads on a
+16-way model axis, or GQA kv-projections when kv_heads < model.
+
+Megatron-style layout:
+    embed (V, d)            -> (model, data)     vocab-sharded
+    head  (d, V)            -> (data, model)
+    attn  wq/wk/wv (d, out) -> (data, model)     column parallel
+    attn  wo (out, d)       -> (model, data)     row parallel
+    mlp   up/gate (d, ff)   -> (data, model)
+    mlp   down (ff, d)      -> (model, data)
+    moe   experts (E, d, f) -> (model, data, -)  expert parallel + FSDP
+    scalars / norms         -> replicated
+
+The 'pod' axis is deliberately absent here: parameters are replicated
+across pods (pure DP); only gradients cross the DCN (DESIGN.md §6).
+Leaves under a scan stack ('stacks', 'enc_stack', 'dec_stack', 'prefix')
+get a leading None for the layer dimension.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from .api import resolve_axis
+
+Params = Any
+
+_STACK_MARKERS = ("stacks", "enc_stack", "dec_stack")
+
+# (name-suffix, logical spec per trailing dims)
+_RULES_2D = {
+    "embed": ("model", "data"),
+    "tok_embed": ("model", "data"),
+    "head": ("data", "model"),
+    "wq": ("data", "model"),
+    "wk": ("data", "kv_model"),      # kv_model: model iff kv divisible
+    "wv": ("data", "kv_model"),
+    "wo": ("model", "data"),
+    "wg": ("data", "model"),
+    "wr": ("data", "model"),
+    "w_up": ("data", "model"),
+    "w_gate": ("data", "model"),
+    "w_down": ("model", "data"),
+    "in_proj": ("data", "model"),
+    "out_proj": ("model", "data"),
+    "x_proj": ("model", None),
+    "dt_proj": (None, "model"),
+    "A_log": ("model", None),
+    "conv_w": (None, "model"),
+    "wA": ("data", None),
+    "wB": (None, "model"),
+    "router": ("data", None),
+    "dec_pos": (None, "data"),
+}
+
+_RULES_3D = {
+    "w_gate": ("model", "data", None),
+    "w_up": ("model", "data", None),
+    "w_down": ("model", None, "data"),
+    "shared_gate": (None, "data", "model"),
+    "shared_up": (None, "data", "model"),
+    "shared_down": (None, "model", "data"),
+}
+
+_RULES_1D = {
+    "bq": ("model",),
+    "bk": ("kv_model",),
+    "bv": ("kv_model",),
+    "conv_b": ("model",),
+    "dt_bias": ("model",),
+    "D": ("model",),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return entry.name
+    return ""
+
+
+def _in_stack(path) -> bool:
+    for entry in path:
+        if isinstance(entry, jax.tree_util.DictKey) and \
+                str(entry.key) in _STACK_MARKERS:
+            return True
+    return False
+
+
+def _axis_size(mesh: Mesh, logical: Optional[str]) -> int:
+    axis = resolve_axis(mesh, logical)
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= mesh.shape[a]
+        return size
+    return mesh.shape[axis]
+
+
+def spec_for_leaf(path, shape: Tuple[int, ...], cfg: ModelConfig,
+                  mesh: Mesh) -> P:
+    name = _leaf_name(path)
+    stacked = _in_stack(path)
+    dims = shape[1:] if stacked else shape
+    rank = len(dims)
+    table = {1: _RULES_1D, 2: _RULES_2D, 3: _RULES_3D}.get(rank, {})
+    logical = table.get(name)
+    if logical is None and rank >= 2:
+        # fallback: biggest-dims heuristic (covers future additions)
+        logical = tuple([None] * (rank - 2) + ["data", "model"])
+    if logical is None:
+        logical = (None,) * rank
+
+    resolved = []
+    for dim_size, lax_name in zip(dims, logical):
+        if lax_name == "kv_model":
+            lax_name = "model" if cfg.n_kv_heads % _axis_size(
+                mesh, "model") == 0 else None
+        if lax_name is None:
+            resolved.append(None)
+            continue
+        if dim_size % max(_axis_size(mesh, lax_name), 1) != 0:
+            resolved.append(None)        # not divisible -> replicate
+            continue
+        resolved.append(resolve_axis(mesh, lax_name))
+    if stacked:
+        resolved = [None] + resolved
+    return P(*resolved)
+
+
+def param_specs(params_shape: Params, cfg: ModelConfig, mesh: Mesh) -> Params:
+    """ShapeDtypeStruct tree (from eval_shape) -> PartitionSpec tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [spec_for_leaf(path, leaf.shape, cfg, mesh)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params_shape: Params, cfg: ModelConfig,
+                    mesh: Mesh) -> Params:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_shape, cfg, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state shardings (derived from the param specs, never re-derived
+# from leaf names: moment tensors must be axis-aligned with their parameter
+# or every optimizer step pays a resharding collective)
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(opt_state_shape: Params, params_shape: Params,
+                    cfg: ModelConfig, mesh: Mesh) -> Params:
+    """PartitionSpecs for AdamWState / AdafactorState, built by construction.
+
+    mu/nu mirror the param spec exactly (axis-aligned moments -> no
+    resharding in the update).  Adafactor's factored stats drop the last
+    (vr) / second-to-last (vc) dim of the param spec.  Scalars and the
+    step counter are replicated.
+    """
+    from repro.optim.adamw import AdafactorState, AdamWState
+
+    pspecs = param_specs(params_shape, cfg, mesh)
+    if isinstance(opt_state_shape, AdamWState):
+        return AdamWState(step=P(), mu=pspecs, nu=pspecs)
+    if not isinstance(opt_state_shape, AdafactorState):
+        raise TypeError(f"unknown optimizer state {type(opt_state_shape)}")
+
+    is_p = lambda s: isinstance(s, P)  # noqa: E731
+    spec_leaves, spec_def = jax.tree_util.tree_flatten(pspecs, is_leaf=is_p)
+    param_leaves = jax.tree_util.tree_flatten(params_shape)[0]
+
+    def _fit(axes, leaf_shape):
+        axes = tuple(axes)[: len(leaf_shape)]
+        axes = axes + (None,) * (len(leaf_shape) - len(axes))
+        return P(*axes)
+
+    vr_leaves, vc_leaves = [], []
+    for spec, p in zip(spec_leaves, param_leaves):
+        t = tuple(spec) + (None,) * (len(p.shape) - len(tuple(spec)))
+        if len(p.shape) >= 2:
+            vr_leaves.append(_fit(t[:-1], p.shape[:-1]))
+            vc_leaves.append(_fit(t[:-2] + t[-1:],
+                                  p.shape[:-2] + p.shape[-1:]))
+        else:   # <2-D params use v_full; vr/vc are scalars
+            vr_leaves.append(P())
+            vc_leaves.append(P())
+    vr = jax.tree_util.tree_unflatten(spec_def, vr_leaves)
+    vc = jax.tree_util.tree_unflatten(spec_def, vc_leaves)
+    vf = jax.tree_util.tree_unflatten(spec_def, [P()] * len(spec_leaves))
+    return AdafactorState(step=P(), vr=vr, vc=vc, v_full=vf)
+
+
+# ---------------------------------------------------------------------------
+# Data / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_shape: Params, mesh: Mesh) -> Params:
+    """Shard the leading (global-batch) dim of every input on dp."""
+    dp = resolve_axis(mesh, "dp")
+
+    def one(leaf):
+        dims = [None] * len(leaf.shape)
+        total_dp = _axis_size(mesh, "dp")
+        if leaf.shape and leaf.shape[0] % max(total_dp, 1) == 0:
+            dims[0] = dp
+        return P(*dims)
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_specs(cache_shape: Params, cfg: ModelConfig, mesh: Mesh) -> Params:
+    """KV caches: batch on dp AND sequence on model (both where divisible).
+
+    A 32k-deep qwen2-72b cache is 1.4 TB -- it only fits 16 GiB chips with
+    full 256-way sharding, so the batch dim shards on dp and the KV length
+    dim on model (GQA kv=8 heads cannot take a 16-way axis).  GSPMD lowers
+    attention over seq-sharded KV as partial-softmax + small all-reduce.
+    long_500k (B=1) gets sequence sharding only.  Non-KV state (SSM/RWKV
+    states, enc_out) shards its batch dim and, for enc_out, sequence too.
+    """
+    dp = resolve_axis(mesh, "dp")
+    dp_size = _axis_size(mesh, "dp")
+    model = resolve_axis(mesh, "model")
+    model_size = _axis_size(mesh, "model")
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        dims: list = [None] * len(leaf.shape)
+        stacked = _in_stack(path)
+        rank = len(leaf.shape)
+        if rank == 0:
+            return P()
+        # find the batch dim: stacked caches are (L, B, ...), prefix (B, ...)
+        b_dim = 1 if (stacked and rank >= 2) else 0
+        if b_dim >= rank:
+            return P(*dims)
+        if leaf.shape[b_dim] % max(dp_size, 1) == 0 and leaf.shape[b_dim] > 1:
+            dims[b_dim] = dp
+        if name in ("k", "v", "enc_out") and rank >= b_dim + 2:
+            # sequence dim: (L, B, S, KV, hd) / (B, S, KV, hd) / (B, S, d)
+            s_dim = b_dim + 1
+            if (leaf.shape[s_dim] % max(model_size, 1) == 0
+                    and leaf.shape[s_dim] >= 4 * model_size):
+                dims[s_dim] = model
+        return P(*dims)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = [one(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)

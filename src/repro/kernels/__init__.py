@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  spmv_dia         banded SpMV (FD fast path): pure streaming, no gathers
+  spmv_csr         column-blocked CSR: x stripes pinned in VMEM (paper P2+P3)
+  spmv_bell        blocked-ELL: data-dependent block-tile gathers (paper P3)
+  flash_attention  causal + sliding-window (banded) attention
+  paged_attention  decode over block-table KV (BELL pattern on the cache)
+
+Validated with interpret=True on CPU against the jnp oracles in ref.py;
+compiled by Mosaic on real TPUs.
+"""

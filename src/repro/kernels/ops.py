@@ -1,0 +1,162 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+These are what the rest of the framework calls.  Each wrapper:
+  * does host-side layout prep (padding, stripe splitting),
+  * runs the Pallas kernel (interpret=True on CPU, Mosaic on TPU),
+  * restores the caller's shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BELL, CSR, DIA
+from . import flash_attention as _fa
+from . import spmv_bell as _bell
+from . import spmv_csr as _csr
+from . import spmv_dia as _dia
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+# ---------------------------------------------------------------------------
+# DIA
+# ---------------------------------------------------------------------------
+
+def spmv_dia(dia: DIA, x: jax.Array, bn: int = 512,
+             interpret: bool = True) -> jax.Array:
+    n = dia.n_rows
+    n_pad = _round_up(n, bn)
+    band = jnp.pad(dia.data, ((0, 0), (0, n_pad - n)))
+    xp = jnp.pad(x, (0, n_pad - n))
+    y = _dia.spmv_dia_pallas(band, dia.offsets, xp, bn=bn,
+                             interpret=interpret)
+    return y[:n]
+
+
+# ---------------------------------------------------------------------------
+# BELL
+# ---------------------------------------------------------------------------
+
+def spmv_bell(bell: BELL, x: jax.Array, interpret: bool = True) -> jax.Array:
+    nbc = -(-bell.n_cols // bell.bn)
+    xp = jnp.pad(x, (0, nbc * bell.bn - bell.n_cols))
+    y = _bell.spmv_bell_pallas(bell.data, bell.block_cols, xp,
+                               interpret=interpret)
+    return y[: bell.n_rows]
+
+
+# ---------------------------------------------------------------------------
+# CSR (column-blocked, padded)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PaddedCSR:
+    """Host-prepped column-blocked layout for the spmv_csr kernel."""
+    vals: jax.Array    # (S, B, W)
+    cols: jax.Array    # (S, B, W) stripe-rebased
+    rowin: jax.Array   # (S, B, W) row within block
+    n_rows: int
+    n_cols: int
+    stripe_w: int
+    bm: int
+
+
+def prepare_csr(csr: CSR, n_stripes: int = 1, bm: int = 128,
+                pad_mult: int = 128) -> PaddedCSR:
+    """Pad each (stripe x row-block) cell to the max nonzero count."""
+    stripe_w = _round_up(-(-csr.n_cols // n_stripes), 128)
+    n_blocks = -(-csr.n_rows // bm)
+    indptr = np.asarray(csr.indptr, dtype=np.int64)
+    cols = np.asarray(csr.indices, dtype=np.int64)
+    vals = np.asarray(csr.data)
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), np.diff(indptr))
+    s_of = cols // stripe_w
+    b_of = rows // bm
+    cell = s_of * n_blocks + b_of
+    order = np.argsort(cell, kind="stable")
+    cell_s, rows_s, cols_s, vals_s = (cell[order], rows[order], cols[order],
+                                      vals[order])
+    counts = np.bincount(cell_s, minlength=n_stripes * n_blocks)
+    w = max(int(counts.max()), 1)
+    w = _round_up(w, pad_mult)
+    V = np.zeros((n_stripes, n_blocks, w), dtype=vals.dtype)
+    C = np.zeros((n_stripes, n_blocks, w), dtype=np.int32)
+    R = np.zeros((n_stripes, n_blocks, w), dtype=np.int32)
+    # position within cell
+    cell_start = np.zeros(n_stripes * n_blocks + 1, dtype=np.int64)
+    np.cumsum(counts, out=cell_start[1:])
+    inner = np.arange(len(cell_s)) - cell_start[cell_s]
+    s_idx = cell_s // n_blocks
+    b_idx = cell_s % n_blocks
+    V[s_idx, b_idx, inner] = vals_s
+    C[s_idx, b_idx, inner] = (cols_s % stripe_w).astype(np.int32)
+    R[s_idx, b_idx, inner] = (rows_s % bm).astype(np.int32)
+    return PaddedCSR(
+        vals=jnp.asarray(V), cols=jnp.asarray(C), rowin=jnp.asarray(R),
+        n_rows=csr.n_rows, n_cols=csr.n_cols, stripe_w=stripe_w, bm=bm,
+    )
+
+
+def spmv_csr_prepared(prep: PaddedCSR, x: jax.Array,
+                      interpret: bool = True) -> jax.Array:
+    s_dim = prep.vals.shape[0]
+    xp = jnp.pad(x, (0, s_dim * prep.stripe_w - prep.n_cols))
+    x_stripes = xp.reshape(s_dim, prep.stripe_w)
+    partials = _csr.spmv_csr_pallas(prep.vals, prep.cols, prep.rowin,
+                                    x_stripes, interpret=interpret)
+    y = partials.sum(axis=0).reshape(-1)      # reduce over stripes
+    return y[: prep.n_rows]
+
+
+def spmv_csr(csr: CSR, x: jax.Array, n_stripes: int = 1,
+             interpret: bool = True) -> jax.Array:
+    """Convenience wrapper: preps layout per call (cache PaddedCSR via
+    prepare_csr for repeated multiplies)."""
+    return spmv_csr_prepared(prepare_csr(csr, n_stripes=n_stripes), x,
+                             interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Paged attention (decode over block-table KV, GQA broadcast here)
+# ---------------------------------------------------------------------------
+
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    tables: jax.Array, lengths: jax.Array,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, H, hd); pools: (n_blocks, block, KVH, hd) with KVH | H;
+    tables: (B, max_blocks) int32; lengths: (B,) -> (B, H, hd)."""
+    from . import paged_attention as _pa
+
+    b, h, hd = q.shape
+    kvh = k_pool.shape[2]
+    if kvh != h:                      # GQA: broadcast KV heads to H
+        g = h // kvh
+        k_pool = jnp.repeat(k_pool, g, axis=2)
+        v_pool = jnp.repeat(v_pool, g, axis=2)
+    return _pa.paged_attention_pallas(q, k_pool, v_pool, tables, lengths,
+                                      interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int | None = None,
+                    interpret: bool = True) -> jax.Array:
+    """q/k/v: (batch, heads, seq, head_dim); GQA callers broadcast kv first."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, skv, d)
+    vf = v.reshape(b * h, skv, d)
+    of = _fa.flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                                    interpret=interpret)
+    return of.reshape(b, h, sq, d)

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+Each function computes the same mathematical result as its kernel without
+Pallas, so tests can `assert_allclose(kernel(...), ref(...))` across shape
+and dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# SpMV oracles are the format-level jnp implementations in core.spmv
+from repro.core.spmv import (  # noqa: F401  (re-exported oracles)
+    spmv_bell_jnp,
+    spmv_csr_jnp,
+    spmv_dia_jnp,
+    spmv_ell_jnp,
+)
+
+
+def spmv_dia_ref(band: jax.Array, offsets: jax.Array, x: jax.Array
+                 ) -> jax.Array:
+    """y[i] = sum_k band[k, i] * x[i + offsets[k]] (zero outside range)."""
+    n = band.shape[1]
+    xp = jnp.pad(x, (n, n))
+
+    def one(bk, off):
+        return bk * jax.lax.dynamic_slice(xp, (n + off,), (n,))
+
+    return jax.vmap(one)(band, offsets).sum(axis=0)
+
+
+def spmv_bell_ref(data: jax.Array, block_cols: jax.Array, x: jax.Array
+                  ) -> jax.Array:
+    nbr, bpr, bm, bn = data.shape
+    x_tiles = x.reshape(-1, bn)
+    gathered = jnp.take(x_tiles, block_cols, axis=0)     # (nbr, bpr, bn)
+    y = jnp.einsum("rkmn,rkn->rm", data.astype(jnp.float32),
+                   gathered.astype(jnp.float32))
+    return y.reshape(-1).astype(data.dtype)
+
+
+def spmv_csr_padded_ref(vals: jax.Array, cols: jax.Array, rowin: jax.Array,
+                        x_stripes: jax.Array) -> jax.Array:
+    """Oracle for the padded column-blocked layout: (S,B,W) -> (B*bm,)."""
+    s_dim, b_dim, w = vals.shape
+    bm = 128
+    xg = jax.vmap(lambda c, xs: jnp.take(xs, c, axis=0),
+                  in_axes=(0, 0))(cols.reshape(s_dim, -1),
+                                  x_stripes)             # (S, B*W)
+    prods = vals.reshape(s_dim, -1) * xg                 # (S, B*W)
+    prods = prods.reshape(s_dim, b_dim, w)
+    seg = jax.nn.one_hot(rowin, bm, dtype=prods.dtype)   # (S, B, W, bm)
+    y = jnp.einsum("sbw,sbwm->bm", prods, seg)
+    return y.reshape(-1)
+
+
+def paged_attention_ref(q, k_pool, v_pool, tables, lengths):
+    """Oracle for the paged decode kernel.
+
+    q: (B, H, hd); pools: (n_blocks, block, H, hd);
+    tables: (B, max_blocks); lengths: (B,) -> (B, H, hd)."""
+    bsz, h, hd = q.shape
+    block = k_pool.shape[1]
+    max_blocks = tables.shape[1]
+    kb = jnp.take(k_pool, tables, axis=0)      # (B, mb, blk, H, hd)
+    vb = jnp.take(v_pool, tables, axis=0)
+    kf = kb.reshape(bsz, max_blocks * block, h, hd).astype(jnp.float32)
+    vf = vb.reshape(bsz, max_blocks * block, h, hd).astype(jnp.float32)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kf)
+    s = s / (hd ** 0.5)
+    pos = jnp.arange(max_blocks * block)[None, None, :]
+    s = jnp.where(pos < lengths[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, vf).astype(q.dtype)
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+            causal: bool = True, window: int | None = None) -> jax.Array:
+    """Masked softmax attention oracle. q:(bh,sq,d) k/v:(bh,skv,d)."""
+    sq, skv = q.shape[1], k.shape[1]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_idx = jnp.arange(sq)[:, None]
+    k_idx = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= q_idx >= k_idx
+    if window is not None:
+        mask &= (q_idx - k_idx) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows that are fully masked produce uniform softmax over -1e30; zero them
+    any_valid = mask.any(axis=1)[None, :, None]
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return jnp.where(any_valid, out, 0.0).astype(q.dtype)

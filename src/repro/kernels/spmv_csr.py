@@ -1,0 +1,77 @@
+"""Column-blocked padded-CSR SpMV Pallas kernel -- the paper's P2+P3.
+
+This is the software realization of the paper's proposed architecture fixes:
+partition A into column stripes whose x slice fits VMEM, *pin* the slice
+(P2: dedicate cache to x), and let the row-pointer metadata drive the DMA
+schedule (P3: kernel-directed placement).  The matrix arrays stream exactly
+once (P1: no cache to pollute).
+
+Host-side prep (ops.py) pads each (row_block x stripe) cell to a fixed
+nonzero count W so shapes are static:
+
+  vals  : (S, B, W)  f32   padding value 0.0
+  cols  : (S, B, W)  int32 stripe-rebased column, padding 0
+  rowin : (S, B, W)  int32 row-within-block, padding 0
+
+Grid = (S, B) with the stripe dimension OUTER so the x stripe block index is
+constant across the inner sweep -- Mosaic keeps it resident in VMEM (the
+"pin").  Each (s, b) cell writes a partial y block; a cheap dense reduction
+over S finishes the sum (the y-spill term of core.traffic.col_blocked_policy).
+
+In-kernel accumulation uses a one-hot matmul (rows x W @ W) so the segment
+sum runs on the MXU instead of a scatter -- scatters don't exist in the TPU
+memory model.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(vals_ref, cols_ref, rowin_ref, x_ref, part_ref, *, bm):
+    xg = jnp.take(x_ref[0, :], cols_ref[0, 0, :], axis=0)      # VMEM gather
+    prods = vals_ref[0, 0, :] * xg                             # (W,)
+    rows = rowin_ref[0, 0, :]                                  # (W,)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (bm, rows.shape[0]), 0)
+              == rows[None, :])
+    part_ref[0, 0, :] = jax.lax.dot_general(
+        onehot.astype(prods.dtype), prods[:, None],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0].astype(part_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmv_csr_pallas(vals: jax.Array, cols: jax.Array, rowin: jax.Array,
+                    x_stripes: jax.Array, interpret: bool = True
+                    ) -> jax.Array:
+    """Partial-product pass: returns (S, B, bm) partials; sum over S outside.
+
+    vals/cols/rowin : (S, B, W)
+    x_stripes       : (S, stripe_w)
+    """
+    s_dim, b_dim, w = vals.shape
+    bm = 128  # rows per block (fixed by ops.py prep)
+
+    partials = pl.pallas_call(
+        functools.partial(_kernel, bm=bm),
+        grid=(s_dim, b_dim),
+        in_specs=[
+            pl.BlockSpec((1, 1, w), lambda s, b: (s, b, 0)),
+            pl.BlockSpec((1, 1, w), lambda s, b: (s, b, 0)),
+            pl.BlockSpec((1, 1, w), lambda s, b: (s, b, 0)),
+            # stripe pinned: block index depends only on the OUTER dim
+            pl.BlockSpec((1, x_stripes.shape[1]), lambda s, b: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bm), lambda s, b: (s, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_dim, b_dim, bm), vals.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+    )(vals, cols, rowin, x_stripes)
+    return partials

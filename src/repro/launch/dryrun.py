@@ -1,0 +1,178 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes and extract the roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun.jsonl]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+The XLA_FLAGS line above MUST run before any jax import: it gives this
+CPU-only container 512 placeholder devices so `jax.make_mesh` can build the
+2 x 16 x 16 production mesh.  Nothing is ever allocated at full size -- the
+inputs are ShapeDtypeStructs and only `.lower().compile()` runs.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import CONFIGS, SHAPES, applicable_shapes, get_config
+from repro.launch.mesh import make_production_mesh, mesh_dict
+from repro.launch.steps import build_plan, optimizer_for
+from repro.roofline import analysis as roofline
+
+
+def _cost_dict(compiled):
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        return dict(cost)
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)}
+
+
+def _memory_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return {}
+        out = {}
+        for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+            if hasattr(ma, field):
+                out[field] = int(getattr(ma, field))
+        return out
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)}
+
+
+def tokens_per_step(shape) -> float:
+    if shape.kind == "train":
+        return shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch * 1.0        # decode: one token per sequence
+
+
+def model_flops(cfg, shape) -> float:
+    n_active = cfg.active_param_count()
+    toks = tokens_per_step(shape)
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * n_active * toks
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             hlo_dir: str | None = None, save_hlo: bool = False,
+             profile: str = "baseline") -> dict:
+    from repro.models import tuning
+    tuning.set_profile(profile)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(mesh.devices.size)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": mesh_dict(mesh), "n_chips": n_chips,
+        "kind": shape.kind, "optimizer": optimizer_for(cfg).name,
+        "profile": profile, "knobs": tuning.snapshot(),
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+    }
+    t0 = time.time()
+    try:
+        plan = build_plan(cfg, shape, mesh)
+        lowered = plan.lower(mesh)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        cost = _cost_dict(compiled)
+        mem = _memory_dict(compiled)
+        hlo = compiled.as_text()
+        mf = model_flops(cfg, shape)
+        rl = roofline.analyze(cost, hlo, n_chips=n_chips, model_flops=mf)
+
+        rec.update(
+            status="ok",
+            cost={k: float(v) for k, v in cost.items()
+                  if isinstance(v, (int, float))},
+            memory=mem,
+            flops_per_chip=rl.flops,
+            hbm_bytes_per_chip=rl.hbm_bytes,
+            collective_bytes_per_chip=rl.collective_bytes,
+            collectives=rl.collectives,
+            collective_counts=rl.collective_counts,
+            compute_s=rl.compute_s, memory_s=rl.memory_s,
+            collective_s=rl.collective_s, bottleneck=rl.bottleneck,
+            model_flops=mf, useful_flops_frac=rl.useful_flops_frac,
+        )
+        print(f"[dryrun] {arch} x {shape_name} x "
+              f"{'multi' if multi_pod else 'single'}-pod: "
+              f"lower {rec['lower_s']}s compile {rec['compile_s']}s")
+        if mem and "error" not in mem:
+            print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops={cost.get('flops', 0):.3e} "
+              f"bytes={cost.get('bytes accessed', 0):.3e}")
+        print(f"  roofline: {rl.summary()}")
+        if save_hlo and hlo_dir:
+            os.makedirs(hlo_dir, exist_ok=True)
+            tag = (f"{arch}_{shape_name}_{'mp' if multi_pod else 'sp'}"
+                   + ("" if profile == "baseline" else f"_{profile}"))
+            with open(os.path.join(hlo_dir, tag + ".hlo.txt"), "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"[dryrun] {arch} x {shape_name} FAILED: {rec['error']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(CONFIGS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun.jsonl")
+    ap.add_argument("--hlo-dir", default="experiments/hlo")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--profile", default="baseline",
+                    choices=["baseline", "optimized"])
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch, cfg in sorted(CONFIGS.items()):
+            for shape_name in applicable_shapes(cfg):
+                cells.append((arch, shape_name, False))
+                cells.append((arch, shape_name, True))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        meshes = ([False, True] if args.both_meshes else [args.multi_pod])
+        cells = [(args.arch, args.shape, mp) for mp in meshes]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    n_ok = 0
+    with open(args.out, "a") as f:
+        for arch, shape_name, mp in cells:
+            rec = run_cell(arch, shape_name, mp, hlo_dir=args.hlo_dir,
+                           save_hlo=args.save_hlo, profile=args.profile)
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+            n_ok += rec["status"] == "ok"
+    print(f"[dryrun] {n_ok}/{len(cells)} cells OK -> {args.out}")
+    if n_ok < len(cells):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh definitions.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before the first jax call).
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model); the pod axis
+is the slow DCN/ICI boundary -- only (compressed) gradients cross it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_local_mesh(model: int = 1):
+    """Whatever this host has (CPU smoke tests: 1 device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+def mesh_dict(mesh) -> dict:
+    return {name: size for name, size in
+            zip(mesh.axis_names, mesh.devices.shape)}

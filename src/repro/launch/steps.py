@@ -1,0 +1,165 @@
+"""Step builders: the jittable (train / prefill / decode) step for one
+(arch x shape), plus its in/out shardings.  Shared by the dry-run, the
+training launcher and the serving engine.
+
+Every builder returns a `LoweredPlan`:
+    fn            -- the pure step function
+    in_specs      -- ShapeDtypeStruct tree for .lower()
+    in_shardings  -- NamedSharding tree matching in_specs
+    out_shardings -- NamedSharding tree (or None leaves = compiler choice)
+    donate        -- argnums donated (params/opt-state/cache buffers)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shard_rules
+from repro.distributed.api import use_mesh
+from repro.models import registry
+from repro.optim import OptimizerConfig, make_optimizer
+from repro.train.loop import TrainConfig, make_train_step
+
+Params = Any
+
+# Arch -> optimizer: AdamW's 8 B/param fp32 moments do not fit for the
+# >= 200B-param configs on 256 x 16 GiB chips; they use factored Adafactor
+# (DESIGN.md §8 "giant-model memory honesty").
+ADAFACTOR_THRESHOLD = 2.0e11
+
+
+def optimizer_for(cfg: ModelConfig) -> OptimizerConfig:
+    name = "adafactor" if cfg.param_count() > ADAFACTOR_THRESHOLD else "adamw"
+    return OptimizerConfig(name=name)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredPlan:
+    kind: str
+    fn: Callable
+    in_specs: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate: Tuple[int, ...]
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate)
+
+    def lower(self, mesh: Mesh):
+        with use_mesh(mesh):
+            return self.jitted().lower(*self.in_specs)
+
+
+def _named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def params_and_shardings(cfg: ModelConfig, mesh: Mesh):
+    api = registry.get_model(cfg)
+    params_shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    pspecs = shard_rules.param_specs(params_shape, cfg, mesh)
+    return api, params_shape, pspecs
+
+
+# ---------------------------------------------------------------------------
+# Train step plan
+# ---------------------------------------------------------------------------
+
+def build_train_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     tc: Optional[TrainConfig] = None) -> LoweredPlan:
+    tc = tc or TrainConfig(optimizer=optimizer_for(cfg))
+    api, params_shape, pspecs = params_and_shardings(cfg, mesh)
+    opt_init, _ = make_optimizer(tc.optimizer)
+    opt_shape = jax.eval_shape(opt_init, params_shape)
+    ospecs = shard_rules.opt_state_specs(opt_shape, params_shape, cfg, mesh)
+
+    batch_specs_sds = registry.input_specs(cfg, shape)
+    bspecs = shard_rules.batch_specs(batch_specs_sds, mesh)
+
+    step = make_train_step(api, tc)
+
+    metrics_spec = {"loss": P(), "grad_norm": P(), "lr": P()}
+    return LoweredPlan(
+        kind="train",
+        fn=step,
+        in_specs=(params_shape, opt_shape, batch_specs_sds),
+        in_shardings=(_named(pspecs, mesh), _named(ospecs, mesh),
+                      _named(bspecs, mesh)),
+        out_shardings=(_named(pspecs, mesh), _named(ospecs, mesh),
+                       _named(metrics_spec, mesh)),
+        donate=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prefill plan
+# ---------------------------------------------------------------------------
+
+def build_prefill_plan(cfg: ModelConfig, shape: ShapeConfig,
+                       mesh: Mesh) -> LoweredPlan:
+    api, params_shape, pspecs = params_and_shardings(cfg, mesh)
+    batch_sds = registry.input_specs(cfg, shape)
+    bspecs = shard_rules.batch_specs(batch_sds, mesh)
+
+    def prefill_step(params, batch):
+        return api.prefill(params, batch, shape.seq_len)
+
+    logits_cache_shape = jax.eval_shape(prefill_step, params_shape, batch_sds)
+    _, cache_shape = logits_cache_shape
+    cspecs = shard_rules.cache_specs(cache_shape, cfg, mesh)
+    out_shardings = (None, _named(cspecs, mesh))
+
+    return LoweredPlan(
+        kind="prefill",
+        fn=prefill_step,
+        in_specs=(params_shape, batch_sds),
+        in_shardings=(_named(pspecs, mesh), _named(bspecs, mesh)),
+        out_shardings=out_shardings,
+        donate=(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step) plan: one new token against a seq_len-deep cache
+# ---------------------------------------------------------------------------
+
+def build_decode_plan(cfg: ModelConfig, shape: ShapeConfig,
+                      mesh: Mesh) -> LoweredPlan:
+    api, params_shape, pspecs = params_and_shardings(cfg, mesh)
+    sds = registry.input_specs(cfg, shape)   # {'cache', 'tokens'}
+    cache_shape, tok_shape = sds["cache"], sds["tokens"]
+    cspecs = shard_rules.cache_specs(cache_shape, cfg, mesh)
+    tspecs = shard_rules.batch_specs(tok_shape, mesh)
+
+    def serve_step(params, cache, tokens):
+        return api.decode_step(params, cache, tokens)
+
+    return LoweredPlan(
+        kind="decode",
+        fn=serve_step,
+        in_specs=(params_shape, cache_shape, tok_shape),
+        in_shardings=(_named(pspecs, mesh), _named(cspecs, mesh),
+                      _named(tspecs, mesh)),
+        out_shardings=(None, _named(cspecs, mesh)),
+        donate=(1,),
+    )
+
+
+def build_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               **kw) -> LoweredPlan:
+    if shape.kind == "train":
+        return build_train_plan(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_plan(cfg, shape, mesh)
+    if shape.kind == "decode":
+        return build_decode_plan(cfg, shape, mesh)
+    raise ValueError(shape.kind)

@@ -1,0 +1,3 @@
+"""Model zoo: unified pure-JAX implementations of the assigned architectures."""
+from . import common, mamba, moe, registry, rwkv6, transformer, whisper
+from .registry import ModelAPI, get_model, input_specs

@@ -1,0 +1,375 @@
+"""Shared model building blocks (pure-JAX pytrees, no framework deps).
+
+Conventions:
+  * init_* functions return (params, ...) dicts of jnp arrays.
+  * apply functions are pure; dtype policy: params in cfg.dtype, layernorm
+    and softmax accumulate in fp32.
+  * Attention is CHUNKED over queries (lax.scan) so 32k-sequence prefill
+    never materializes an (S x S) score matrix -- the jnp analogue of the
+    flash kernel, and what the dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+ATTN_CHUNK = 1024      # query-chunk size for chunked attention
+ATTN_SCORE_BUDGET = 1 << 22   # target elements per (chunk x skv) score slab
+
+
+def attn_chunk_for(skv: int) -> int:
+    """Adapt the query-chunk so the transient score tensor stays bounded:
+    32k-KV prefill uses 128-query chunks, 4k training keeps 1024."""
+    return int(min(ATTN_CHUNK, max(128, ATTN_SCORE_BUDGET // max(skv, 1))))
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / np.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), dtype=jnp.float32)}
+    if cfg.norm == "ln":
+        p["bias"] = jnp.zeros((d,), dtype=jnp.float32)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:   # LayerNorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:             # RMSNorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (partial rotary supported: StableLM rope_pct=0.25)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(hd_rot: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd_rot, 2, dtype=jnp.float32)
+                            / hd_rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rope_pct: float = 1.0) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    if rope_pct <= 0.0:
+        return x
+    hd = x.shape[-1]
+    hd_rot = int(hd * rope_pct)
+    hd_rot -= hd_rot % 2
+    if hd_rot == 0:
+        return x
+    freqs = rope_frequencies(hd_rot, theta)                    # (hd_rot/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (...,S,1,hr/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x_rot, x_pass = x[..., :hd_rot], x[..., hd_rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([o1, o2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, chunked, optional sliding window / cross / qk-norm)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 6)
+    dt = dtype_of(cfg)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dt),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dt),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dt),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype=dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype=dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype=dt)
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), dtype=jnp.float32)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), dtype=jnp.float32)}
+    return p
+
+
+def _use_onehot_write() -> bool:
+    from . import tuning
+    return tuning.kv_onehot_write
+
+
+def _qk_norm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * p["scale"]).astype(x.dtype)
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, window: Optional[int],
+                  q_offset, chunk: Optional[int] = None) -> jax.Array:
+    """softmax(QK^T)V with queries chunked by lax.scan (flash-style memory).
+
+    q: (B, Sq, H, hd)   k/v: (B, Skv, KVH, hd) with H = G*KVH
+    q_offset: scalar -- position of q[0] within the kv timeline.
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, sq, kvh, g, hd)
+    k_idx = jnp.arange(skv)
+
+    chunk = min(chunk if chunk is not None else attn_chunk_for(skv), sq)
+    n_chunks = sq // chunk if sq % chunk == 0 else 1
+    if sq % chunk != 0:
+        chunk = sq
+
+    # q_offset may be a scalar (train/prefill) or a (B,) vector (serving
+    # slots at different depths); both broadcast to a (B|1, chunk) q_idx.
+    q_off = jnp.asarray(q_offset)
+    q_off = q_off.reshape(-1, 1)          # (B,1) or (1,1)
+
+    def one_chunk(ci, qc):
+        # qc: (B, chunk, KVH, G, hd)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", qc.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        q_idx = q_off + ci * chunk + jnp.arange(chunk)[None, :]  # (B|1,chunk)
+        mask = jnp.ones(q_idx.shape + (skv,), dtype=bool)
+        if causal:
+            mask &= q_idx[..., None] >= k_idx[None, None, :]
+        if window is not None:
+            mask &= (q_idx[..., None] - k_idx[None, None, :]) < window
+        s = jnp.where(mask[:, :, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bqkgs,bskd->bqkgd", p,
+                          v.astype(jnp.float32))
+
+    # Flash-style memory behaviour: recompute scores/probs in the backward
+    # pass instead of saving the (B, chunk, KVH, G, S) slabs per chunk --
+    # without this, an L-layer model saves L*n_chunks probability tensors
+    # (the dominant HBM term in the train-cell roofline).  Knob: §Perf.
+    from . import tuning
+    if tuning.attn_chunk_remat:
+        one_chunk = jax.checkpoint(
+            one_chunk, policy=jax.checkpoint_policies.nothing_saveable)
+
+    # Causal-unrolled path (train-time self-attention): chunk ci only ever
+    # sees keys < (ci+1)*chunk, so slice the KV prefix statically -- future
+    # blocks are skipped outright (the flash kernel's block-skip, in jnp:
+    # ~37.5% of score flops+bytes for 4 chunks) and the boolean where()
+    # mask collapses to an additive bias on the diagonal block alone.
+    if (tuning.causal_chunk_unroll and causal and window is None
+            and isinstance(q_offset, int) and q_offset == 0
+            and n_chunks > 1 and n_chunks <= 16):
+        tri_bias = jnp.where(
+            jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :],
+            0.0, -1e30).astype(jnp.float32)        # (chunk, chunk)
+
+        def causal_chunk(ci, qc):
+            hi = (ci + 1) * chunk
+            kc, vc = k[:, :hi], v[:, :hi]
+            s_ci = jnp.einsum("bqkgd,bskd->bqkgs", qc.astype(jnp.float32),
+                              kc.astype(jnp.float32)) * scale
+            bias = jnp.concatenate(
+                [jnp.zeros((chunk, ci * chunk), jnp.float32), tri_bias],
+                axis=1)                            # (chunk, hi)
+            s_ci = s_ci + bias[None, :, None, None, :]
+            p_ci = jax.nn.softmax(s_ci, axis=-1)
+            return jnp.einsum("bqkgs,bskd->bqkgd", p_ci,
+                              vc.astype(jnp.float32))
+
+        if tuning.attn_chunk_remat:
+            causal_chunk = jax.checkpoint(
+                causal_chunk, policy=jax.checkpoint_policies
+                .nothing_saveable, static_argnums=(0,))
+        qcs = qg.reshape(b, n_chunks, chunk, kvh, g, hd)
+        outs = [causal_chunk(ci, qcs[:, ci]) for ci in range(n_chunks)]
+        out = jnp.stack(outs, axis=1).reshape(b, sq, kvh, g, hd)
+        return out.reshape(b, sq, h, hd)
+
+    if n_chunks == 1:
+        out = one_chunk(0, qg)
+    else:
+        qcs = qg.reshape(b, n_chunks, chunk, kvh, g, hd)
+        qcs = jnp.moveaxis(qcs, 1, 0)               # (n, B, chunk, KVH, G, hd)
+
+        def body(_, xs):
+            ci, qc = xs
+            return None, one_chunk(ci, qc)
+
+        _, outs = jax.lax.scan(body, None, (jnp.arange(n_chunks), qcs))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, kvh, g, hd)
+    return out.reshape(b, sq, h, hd)
+
+
+def apply_attention(p: Params, cfg: ModelConfig, x: jax.Array,
+                    positions: jax.Array, *,
+                    kv_x: Optional[jax.Array] = None,
+                    causal: bool = True,
+                    cache: Optional[Params] = None,
+                    cache_pos=None):
+    """Returns (out, new_cache).  Self-attention unless kv_x given (cross).
+
+    cache: {'k','v'}: (B, S_max, KVH, hd); cache_pos: scalar write index.
+    """
+    b, s, d = x.shape
+    hd = cfg.hd
+    src = kv_x if kv_x is not None else x
+    q = x @ p["wq"]
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    v = v.reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = _qk_norm(p["q_norm"], q)
+        k = _qk_norm(p["k_norm"], k)
+    if kv_x is None and cfg.rope_pct > 0:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_pct)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_pct)
+
+    new_cache = None
+    q_offset = 0
+    if cache is not None:
+        # decode / incremental: write new kv at cache_pos, attend over the
+        # prefix.  cache_pos is a scalar (uniform batch) or a (B,) vector
+        # (serving slots at different depths).
+        #
+        # The per-slot single-token write uses a one-hot select, NOT a
+        # vmapped dynamic-update-slice: vmapped DUS lowers to scatter,
+        # which XLA legalizes for bf16 via f32 round-trips of the whole
+        # stacked cache (measured: ~0.5 TB/step of pure convert traffic on
+        # the decode_32k cells).  The select is the TPU-idiomatic pattern
+        # (cf. MaxText decode) and stays a fused bf16 elementwise op.
+        # NOTE(§Perf): a B==1 scalar-DUS special case was tried for
+        # long_500k and measured WORSE (98->111 ms): a dynamic index into
+        # the sequence-SHARDED cache dim makes GSPMD reshard, while the
+        # one-hot select below stays shard-local.
+        pos = jnp.asarray(cache_pos)
+        dt = cache["k"].dtype
+        if pos.ndim == 0:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(dt), (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(dt), (0, pos, 0, 0))
+        elif s == 1 and _use_onehot_write():
+            s_max = cache["k"].shape[1]
+            oh = (jnp.arange(s_max)[None, :] == pos[:, None]
+                  )[:, :, None, None]                       # (B, S, 1, 1)
+            ck = jnp.where(oh, k.astype(dt), cache["k"])
+            cv = jnp.where(oh, v.astype(dt), cache["v"])
+        elif s == 1:
+            upd = jax.vmap(
+                lambda c, u, pp: jax.lax.dynamic_update_slice(
+                    c, u, (pp, 0, 0)))
+            ck = upd(cache["k"], k.astype(dt), pos)
+            cv = upd(cache["v"], v.astype(dt), pos)
+        else:
+            # batched multi-token prefill: slots share the write offset
+            # (the serving engine prefills one slot at a time, so this
+            # branch only sees aligned offsets)
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(dt), (0, pos[0], 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(dt), (0, pos[0], 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        q_offset = cache_pos
+        # mask out beyond cache_pos + s via causal indexing
+        causal = True
+    out = _sdpa_chunked(q, k, v, causal=causal and kv_x is None,
+                        window=cfg.attn_window, q_offset=q_offset)
+    out = out.astype(x.dtype).reshape(b, s, cfg.n_heads * hd)
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d, ff, dt),
+         "w_down": dense_init(ks[1], ff, d, dt)}
+    if cfg.act == "swiglu":
+        p["w_gate"] = dense_init(ks[2], d, ff, dt)
+    return p
+
+
+def apply_mlp(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    up = x @ p["w_up"]
+    if cfg.act == "swiglu":
+        up = jax.nn.silu(x @ p["w_gate"]) * up
+    else:
+        up = jax.nn.gelu(up)
+    return up @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked over sequence; vocab stays shardable on 'model')
+# ---------------------------------------------------------------------------
+
+def lm_loss(head: jax.Array, x: jax.Array, labels: jax.Array,
+            n_chunks: int = 8) -> jax.Array:
+    """Cross-entropy( x @ head , labels ) without materializing full logits.
+
+    x: (B, S, d), head: (d, V), labels: (B, S) int32 (-1 = masked).
+    Chunked over S: transient logits are (B, S/n_chunks, V).
+    """
+    b, s, d = x.shape
+    if s % n_chunks != 0:
+        n_chunks = 1
+    cs = s // n_chunks
+    xc = jnp.moveaxis(x.reshape(b, n_chunks, cs, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n_chunks, cs), 1, 0)
+
+    def body(carry, xs):
+        xi, li = xs
+        logits = (xi @ head).astype(jnp.float32)      # (B, cs, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(li, 0)[..., None], axis=-1)[..., 0]
+        valid = (li >= 0).astype(jnp.float32)
+        loss = ((logz - gold) * valid).sum()
+        return (carry[0] + loss, carry[1] + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (xc, lc))
+    return tot / jnp.maximum(cnt, 1.0)

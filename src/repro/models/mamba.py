@@ -1,0 +1,156 @@
+"""Mamba (S6) block for the Jamba hybrid.
+
+Paper tie-in: the selective-scan recurrence is the *perfectly structured*
+streaming case -- state updates touch contiguous memory exactly once per
+step (DIA-like), which is why SSM layers keep long_500k viable while full
+attention cannot (DESIGN.md §5).
+
+Sequence processing uses a chunked scan: `lax.scan` over chunks carries the
+(B, d_inner, d_state) state; inside a chunk the recurrence is materialized
+with `associative_scan` (parallel prefix), bounding the transient to
+(B, chunk, d_inner, d_state).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SSMConfig
+from .common import dense_init, dtype_of
+
+Params = Dict[str, Any]
+
+SCAN_CHUNK = 128
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 7)
+    dt_rank = max(d // 16, 1)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, di)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di,), dtype=dt),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * s.d_state, dt),
+        "dt_proj": dense_init(ks[3], dt_rank, di, dt),
+        "dt_bias": jnp.zeros((di,), dtype=jnp.float32),
+        "A_log": jnp.log(jnp.tile(
+            jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None, :],
+            (di, 1))),                                   # (di, ds)
+        "D": jnp.ones((di,), dtype=jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dt),
+    }
+
+
+def _causal_conv(p: Params, x: jax.Array, state=None):
+    """Depthwise causal conv1d.  x: (B, S, di).  state: (B, d_conv-1, di)."""
+    dconv = p["conv_w"].shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (dconv - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(p["conv_w"][j] * xp[:, j: j + x.shape[1], :]
+              for j in range(dconv))
+    new_state = xp[:, -(dconv - 1):, :] if dconv > 1 else None
+    return jax.nn.silu(out + p["conv_b"]), new_state
+
+
+def _ssm_params(p: Params, cfg: ModelConfig, xc: jax.Array):
+    """xc: (B, L, di) -> (dA (B,L,di,ds), dBx (B,L,di,ds), C (B,L,ds))."""
+    s = cfg.ssm
+    dt_rank = p["dt_proj"].shape[0]
+    proj = xc @ p["x_proj"]
+    dt_in, b_mat, c_mat = jnp.split(proj, [dt_rank, dt_rank + s.d_state],
+                                    axis=-1)
+    delta = jax.nn.softplus((dt_in @ p["dt_proj"]).astype(jnp.float32)
+                            + p["dt_bias"])               # (B, L, di)
+    a = -jnp.exp(p["A_log"])                              # (di, ds)
+    d_a = jnp.exp(delta[..., None] * a)                   # (B, L, di, ds)
+    d_bx = (delta * xc.astype(jnp.float32))[..., None] \
+        * b_mat.astype(jnp.float32)[..., None, :]         # (B, L, di, ds)
+    return d_a, d_bx, c_mat.astype(jnp.float32)
+
+
+def apply_mamba(p: Params, cfg: ModelConfig, x: jax.Array,
+                state: Params | None = None
+                ) -> Tuple[jax.Array, Params | None]:
+    """x: (B, S, d).  state (decode): {'h': (B,di,ds), 'conv': (B,dc-1,di)}.
+
+    Returns (out, new_state); new_state is None in training mode.
+    """
+    b, s_len, d = x.shape
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                     # (B, S, di) each
+
+    if state is not None and s_len == 1:
+        # ---- single-step decode ----
+        xc, conv_state = _causal_conv(p, xi, state["conv"])
+        d_a, d_bx, c_mat = _ssm_params(p, cfg, xc)
+        h = state["h"] * d_a[:, 0] + d_bx[:, 0]           # (B, di, ds)
+        y = jnp.einsum("bis,bs->bi", h, c_mat[:, 0])[:, None, :]
+        new_state = {"h": h, "conv": conv_state}
+    else:
+        xc, _ = _causal_conv(p, xi)
+        chunk = min(SCAN_CHUNK, s_len)
+        if s_len % chunk != 0:
+            chunk = s_len
+        n_chunks = s_len // chunk
+        ssm = cfg.ssm or SSMConfig()
+        di = ssm.expand * d
+        ds = ssm.d_state
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        def chunk_body(h0, xc_chunk):
+            # the (B, chunk, di, ds) decay/input tensors are computed HERE,
+            # inside the chunk, never for the full sequence: materializing
+            # them at S=32k was 34 TB/chip and the whole of jamba's prefill
+            # memory term (§Perf).  checkpointed so backward recomputes.
+            da_c, dbx_c, c_c = _ssm_params(p, cfg, xc_chunk)
+            acc_a, acc_b = jax.lax.associative_scan(
+                combine, (da_c, dbx_c), axis=1)
+            h_t = acc_a * h0[:, None] + acc_b             # (B,chunk,di,ds)
+            y_c = jnp.einsum("blis,bls->bli", h_t, c_c)
+            return h_t[:, -1], y_c
+
+        from . import tuning
+        if tuning.mamba_fused_params:
+            chunk_body = jax.checkpoint(
+                chunk_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+        h0 = (state["h"] if state is not None
+              else jnp.zeros((b, di, ds), jnp.float32))
+        if n_chunks == 1:
+            h_last, y = chunk_body(h0, xc)
+        else:
+            xcs = jnp.moveaxis(
+                xc.reshape(b, n_chunks, chunk, di), 1, 0)
+            h_last, ys = jax.lax.scan(chunk_body, h0, xcs)
+            y = jnp.moveaxis(ys, 0, 1).reshape(b, s_len, di)
+        new_state = None
+        if state is not None:
+            dconv = p["conv_w"].shape[0]
+            xp = jnp.pad(xi, ((0, 0), (dconv - 1, 0), (0, 0)))
+            new_state = {"h": h_last, "conv": xp[:, -(dconv - 1):, :]}
+
+    y = y + p["D"] * xc.astype(jnp.float32)
+    out = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return out @ p["out_proj"], new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> Params:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, di), dtype_of(cfg)),
+    }

@@ -1,0 +1,160 @@
+"""Uniform model API: every assigned architecture behind four functions.
+
+    api = get_model(cfg)
+    params = api.init(rng)
+    loss   = api.loss_fn(params, batch)            # train shapes
+    logits, cache = api.prefill(params, batch, max_len)
+    logits, cache = api.decode_step(params, cache, tokens)
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every input
+of the step function that the multi-pod dry-run lowers (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import transformer, whisper
+from .common import dtype_of
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.is_encdec:
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: whisper.init_params(rng, cfg),
+            loss_fn=functools.partial(_flip(whisper.loss_fn), cfg),
+            prefill=functools.partial(_flip(whisper.prefill), cfg),
+            decode_step=functools.partial(_flip(whisper.decode_step), cfg),
+        )
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda rng: transformer.init_params(rng, cfg),
+        loss_fn=functools.partial(_flip(transformer.loss_fn), cfg),
+        prefill=functools.partial(_flip(transformer.prefill), cfg),
+        decode_step=functools.partial(_flip(transformer.decode_step), cfg),
+    )
+
+
+def _flip(fn):
+    """(params, cfg, ...) -> (cfg, params, ...) for partial application."""
+    def wrapped(cfg, params, *a, **k):
+        return fn(params, cfg, *a, **k)
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# Input specs for the dry-run (ShapeDtypeStruct, no allocation)
+# ---------------------------------------------------------------------------
+
+def _tok(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:
+        return {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                           dtype_of(cfg)),
+            "tokens": _tok((b, cfg.decoder_len)),
+            "labels": _tok((b, cfg.decoder_len)),
+        }
+    if cfg.family == "vlm":
+        # early-fusion VLM: the VQ tokenizer frontend is a stub per the
+        # assignment -- input_specs provides precomputed patch-token embeds
+        return {
+            "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                           dtype_of(cfg)),
+            "labels": _tok((b, s)),
+        }
+    return {"tokens": _tok((b, s)), "labels": _tok((b, s))}
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                        ) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:
+        return {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                           dtype_of(cfg)),
+            "tokens": _tok((b, cfg.decoder_len)),
+        }
+    if cfg.family == "vlm":
+        return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                               dtype_of(cfg))}
+    return {"tokens": _tok((b, s))}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Specs for (cache, tokens) of one serve_step with a seq_len-long
+    context already in the cache."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:
+        enc_spec = jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype_of(cfg))
+        cache = jax.eval_shape(
+            lambda e: whisper.init_cache(cfg, b, cfg.decoder_len, e),
+            enc_spec)
+        return {"cache": cache, "tokens": _tok((b, 1))}
+    cache = jax.eval_shape(
+        functools.partial(transformer.init_cache, cfg, b, s))
+    return {"cache": cache, "tokens": _tok((b, 1))}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# Random batches for smoke tests / examples (reduced configs only)
+# ---------------------------------------------------------------------------
+
+def random_train_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0
+                       ) -> Dict[str, jax.Array]:
+    rng = np.random.default_rng(seed)
+    if cfg.is_encdec:
+        t = max(1, min(seq, cfg.decoder_len - 8))
+        return {
+            "frames": jnp.asarray(
+                rng.normal(size=(batch, seq, cfg.d_model)).astype(np.float32),
+                dtype=dtype_of(cfg)),
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab, (batch, t)), dtype=jnp.int32),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab, (batch, t)), dtype=jnp.int32),
+        }
+    if cfg.family == "vlm":
+        return {
+            "embeds": jnp.asarray(
+                rng.normal(size=(batch, seq, cfg.d_model)).astype(np.float32),
+                dtype=dtype_of(cfg)),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab, (batch, seq)), dtype=jnp.int32),
+        }
+    return {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)),
+                              dtype=jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)),
+                              dtype=jnp.int32),
+    }

@@ -1,0 +1,260 @@
+"""RWKV-6 (Finch) block: attention-free time mix with data-dependent decay.
+
+Paper tie-in: RWKV's state update is a sequential stream (structured access),
+so decode cost is O(1) in context length -- the arch runs long_500k where
+full attention cannot.  The paper's sparse-dispatch technique itself is
+inapplicable (no sparse operator); noted in DESIGN.md §5.
+
+Faithful-to-Finch pieces: token-shift lerp with learned mix, low-rank (LoRA)
+data-dependent decay  w_t = exp(-exp(w0 + tanh(x A) B)),  per-head wkv state
+S in R^{hd x hd} with bonus u, and squared-relu channel mix.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import dense_init, dtype_of
+
+Params = Dict[str, Any]
+
+
+def init_rwkv_time(key, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    h = d // hd
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 10)
+    lora = max(32, d // 32)
+    return {
+        "mix_r": jnp.full((d,), 0.5, dt), "mix_k": jnp.full((d,), 0.5, dt),
+        "mix_v": jnp.full((d,), 0.5, dt), "mix_w": jnp.full((d,), 0.5, dt),
+        "mix_g": jnp.full((d,), 0.5, dt),
+        "wr": dense_init(ks[0], d, d, dt), "wk": dense_init(ks[1], d, d, dt),
+        "wv": dense_init(ks[2], d, d, dt), "wg": dense_init(ks[3], d, d, dt),
+        "wo": dense_init(ks[4], d, d, dt),
+        # data-dependent decay LoRA (the Finch novelty)
+        "w0": jnp.zeros((d,), jnp.float32),
+        "wA": dense_init(ks[5], d, lora, dt, scale=0.01),
+        "wB": dense_init(ks[6], lora, d, dt, scale=0.01),
+        "u": (jax.random.normal(ks[7], (h, hd)) * 0.1).astype(jnp.float32),
+        "ln_x": {"scale": jnp.ones((d,), jnp.float32),
+                 "bias": jnp.zeros((d,), jnp.float32)},
+    }
+
+
+def init_rwkv_channel(key, cfg: ModelConfig) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "mix_k": jnp.full((d,), 0.5, dt), "mix_r": jnp.full((d,), 0.5, dt),
+        "wk": dense_init(ks[0], d, ff, dt),
+        "wv": dense_init(ks[1], ff, d, dt),
+        "wr": dense_init(ks[2], d, d, dt),
+    }
+
+
+def _group_norm(p, x, h, eps=1e-5):
+    """per-head layernorm on (B, S, d) viewed as (B, S, H, hd)."""
+    b, s, d = x.shape
+    xf = x.reshape(b, s, h, -1).astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf.reshape(b, s, d) * p["scale"] + p["bias"])
+
+
+def _token_shift(x: jax.Array, last: jax.Array | None):
+    """x_{t-1} stream: shift right by one; `last` supplies t=-1 (decode)."""
+    if last is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([last[:, None, :].astype(x.dtype),
+                                x[:, :-1]], axis=1)
+    return prev
+
+
+def apply_rwkv_time(p: Params, cfg: ModelConfig, x: jax.Array,
+                    state: Params | None = None
+                    ) -> Tuple[jax.Array, Params | None]:
+    """x: (B,S,d); state: {'S': (B,H,hd,hd), 'last': (B,d)} for decode."""
+    b, s, d = x.shape
+    hd = cfg.hd
+    h = d // hd
+    last = state["last"] if state is not None else None
+    prev = _token_shift(x, last)
+
+    def lerp(mix):
+        return x + (prev - x) * mix
+
+    r = (lerp(p["mix_r"]) @ p["wr"]).reshape(b, s, h, hd)
+    k = (lerp(p["mix_k"]) @ p["wk"]).reshape(b, s, h, hd)
+    v = (lerp(p["mix_v"]) @ p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(lerp(p["mix_g"]) @ p["wg"])
+    # data-dependent decay in (0, 1):  w = exp(-exp(...))  (Finch eq. 4)
+    w_log = p["w0"] + (jnp.tanh(lerp(p["mix_w"]) @ p["wA"]) @ p["wB"]) \
+        .astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(b, s, h, hd)
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def step(s_carry, xs):
+        rt, kt, vt, wt = xs                    # (B,H,hd) each
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,hd,hd)
+        out = jnp.einsum("bhi,bhij->bhj", rt,
+                         s_carry + p["u"][..., None] * kv)
+        s_new = wt[..., None] * s_carry + kv
+        return s_new, out
+
+    s0 = (state["S"] if state is not None
+          else jnp.zeros((b, h, hd, hd), jnp.float32))
+
+    # Chunked (FLA-style) recurrence: the naive per-token scan both saves a
+    # (B, H, hd, hd) state per TIMESTEP for backward (1.7 TB/chip at
+    # train_4k -- the worst memory term in the baseline table) and runs
+    # 131k sequential VPU steps.  Restructuring the stream into dense
+    # chunks (the paper's banded/blocked argument applied to a recurrence)
+    # turns the intra-chunk work into masked CxC matmuls on the MXU and
+    # touches the state once per chunk.  §Perf cell 2.
+    from . import tuning
+    chunk = 256
+    if tuning.rwkv_chunked_scan and s % chunk == 0 and s >= chunk:
+        w_log_f = -jnp.exp(w_log.astype(jnp.float32)) \
+            .reshape(b, s, h, hd)                          # log w_t < 0
+        if tuning.rwkv_batch_shard:
+            # 40 heads do not divide a 16-way model axis, so the recurrence
+            # would replicate across 'model'.  There IS spare parallelism:
+            # shard the BATCH over every mesh axis for the recurrence
+            # (256 sequences over 256 chips) and let GSPMD all-to-all back.
+            from repro.distributed.api import constrain
+            rf, kf, vf, w_log_f = (
+                constrain(t, "dpm", None, None, None)
+                for t in (rf, kf, vf, w_log_f))
+        s_last, out = _wkv_chunked(rf, kf, vf, w_log_f, p["u"], s0, chunk)
+        out = out.reshape(b, s, d)
+    else:
+        xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, w))
+        s_last, outs = jax.lax.scan(step, s0, xs)
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, d)   # (B,S,d)
+    out = _group_norm(p["ln_x"], out.astype(jnp.float32), h)
+    out = (out * g.astype(jnp.float32)).astype(x.dtype) @ p["wo"]
+    new_state = None
+    if state is not None:
+        new_state = {"S": s_last, "last": x[:, -1, :]}
+    return out, new_state
+
+
+_SUB = 32          # factored sub-chunk length
+_LW_CLIP = -2.6    # per-step log-decay floor for the FACTORED term only:
+                   # e^(32 * 2.6) = e^83 stays inside f32; a step with
+                   # w < e^-2.6 = 0.074 kills cross-position terms within
+                   # two steps anyway, so the overestimate is <= e^-2.6-
+                   # relative on already-dead contributions.
+
+
+def _wkv_subchunk(s_carry, rc, kc, vc, lwc, u):
+    """One factored sub-chunk (C = _SUB steps) of the RWKV-6 recurrence.
+
+    Layout is (B, C, H, hd) THROUGHOUT -- the natural layout of the
+    residual stream -- so no chunk<->head transposes are ever materialized
+    (they were 30% of the memory term in the first lowering).
+
+    With cumulative log-decay cum_t = sum_{i<=t} log w_i (per key dim):
+        out_t = (r_t * exp(cum_{t-1})) @ S_0
+              + sum_{i<t} <r_t * exp(cum_{t-1}), k_i * exp(-cum_i)> v_i
+              + <r_t * u, k_t> v_t
+        S_out = diag(exp(cum_C)) S_0 + (k * exp(cum_C - cum))^T V
+    The two matmul factors are bounded by e^(C*|log w|); C=32 with the
+    _LW_CLIP floor keeps them inside f32.  Exponents feeding the inter and
+    state terms are exact (<= 0, no clipping needed).
+    """
+    lw_f = jnp.maximum(lwc, _LW_CLIP)
+    cum = jnp.cumsum(lwc, axis=1)                          # exact, (B,C,H,d)
+    cum_f = jnp.cumsum(lw_f, axis=1)
+    c = rc.shape[1]
+    mask = jnp.tril(jnp.ones((c, c), bool), -1)            # strict lower
+    r_dec = rc * jnp.exp(cum_f - lw_f)                     # <= 1
+    k_inv = kc * jnp.exp(-cum_f)                           # <= e^83
+    scores = jnp.einsum("bthd,bihd->bhti", r_dec, k_inv)
+    scores = jnp.where(mask[None, None], scores, 0.0)
+    out = jnp.einsum("bhti,bihd->bthd", scores, vc)        # intra
+    r_exact = rc * jnp.exp(cum - lwc)                      # exact cum_{t-1}
+    out = out + jnp.einsum("bthd,bhde->bthe", r_exact, s_carry)   # inter
+    bonus = (rc * u[None, None, :, :] * kc).sum(-1)        # (B,C,H)
+    out = out + bonus[..., None] * vc
+    total = cum[:, -1:]                                    # (B,1,H,hd)
+    k2 = kc * jnp.exp(total - cum)                         # exact, <= 1
+    s_new = (jnp.exp(total[:, 0])[..., None] * s_carry
+             + jnp.einsum("bihd,bihe->bhde", k2, vc))
+    return s_new, out
+
+
+def _wkv_chunked(r, k, v, log_w, u, s0, chunk: int):
+    """Two-level chunked RWKV-6 wkv recurrence.
+
+    Outer: checkpointed scan over `chunk`-step super-chunks (backward
+    recomputes interiors; only super-chunk boundary states are saved --
+    the 1.7 TB/chip per-timestep residual problem becomes ~5 GB).
+    Inner: scan over _SUB-step factored sub-chunks whose intra-chunk work
+    is two (C x C) matmuls on the MXU instead of C sequential VPU steps.
+
+    r/k/v/log_w: (B, S, H, hd) f32, log_w < 0; u: (H, hd);
+    s0: (B, H, hd, hd).  Returns (s_last, out (B, S, H, hd)).
+    """
+    b, s, h, hd = r.shape
+    n = s // chunk
+    n_sub = chunk // _SUB
+
+    def to_chunks(x):   # (B,S,H,hd) -> (n, B, chunk, H, hd): no transpose,
+        return jnp.moveaxis(          # just the scan-dim split
+            x.reshape(b, n, chunk, h, hd), 1, 0)
+
+    rs, ks, vs, lws = map(to_chunks, (r, k, v, log_w))
+
+    def super_chunk(s_carry, xs):
+        rc, kc, vc, lwc = xs                       # (B, chunk, H, hd)
+
+        def sub(s_c, xs_sub):
+            return _wkv_subchunk(s_c, *xs_sub, u)
+
+        subs = tuple(
+            jnp.moveaxis(a.reshape(b, n_sub, _SUB, h, hd), 1, 0)
+            for a in (rc, kc, vc, lwc))            # (n_sub, B, SUB, H, hd)
+        s_new, outs = jax.lax.scan(sub, s_carry, subs)
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, chunk, h, hd)
+        return s_new, out
+
+    super_chunk = jax.checkpoint(
+        super_chunk, policy=jax.checkpoint_policies.nothing_saveable)
+    s_last, outs = jax.lax.scan(super_chunk, s0, (rs, ks, vs, lws))
+    # (n, B, chunk, H, hd) -> (B, S, H, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+    return s_last, out
+
+
+def apply_rwkv_channel(p: Params, cfg: ModelConfig, x: jax.Array,
+                       state: Params | None = None
+                       ) -> Tuple[jax.Array, Params | None]:
+    last = state["last"] if state is not None else None
+    prev = _token_shift(x, last)
+    xk = x + (prev - x) * p["mix_k"]
+    xr = x + (prev - x) * p["mix_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    new_state = {"last": x[:, -1, :]} if state is not None else None
+    return out, new_state
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    h = d // hd
+    return {
+        "time": {"S": jnp.zeros((batch, h, hd, hd), jnp.float32),
+                 "last": jnp.zeros((batch, d), dtype_of(cfg))},
+        "channel": {"last": jnp.zeros((batch, d), dtype_of(cfg))},
+    }

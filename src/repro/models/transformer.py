@@ -1,0 +1,359 @@
+"""Unified decoder LM covering dense / MoE / hybrid / VLM architectures.
+
+Layer layout is a (kind, is_moe) list derived from the config.  To keep
+compile time O(1) in depth, layers are grouped as
+
+    [prefix layers]  +  n_super x [period positions]
+
+where the periodic tail is run under `jax.lax.scan` with per-position
+parameter stacks (leading n_super dim).  Dense qwen2 has period 1; Jamba's
+1:7 mamba:attn interleave with MoE-every-2 has period 8; Kimi's
+dense-first-layer is a prefix of length 1.
+
+Caches mirror the grouping: {'prefix': [...], 'stacks': (per-position
+pytrees with leading n_super dim)}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.api import constrain
+from . import mamba as _mamba
+from . import moe as _moe
+from . import rwkv6 as _rwkv
+from .common import (apply_attention, apply_mlp, apply_norm, dtype_of,
+                     embed_init, init_attention, init_mlp, init_norm, lm_loss)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Layout
+# ---------------------------------------------------------------------------
+
+def layer_layout(cfg: ModelConfig) -> List[Tuple[str, bool]]:
+    return [(cfg.block_kind(i), cfg.is_moe_layer(i))
+            for i in range(cfg.n_layers)]
+
+
+def split_layout(cfg: ModelConfig):
+    """-> (prefix_len, period, n_super); layout[prefix:] repeats `period`."""
+    layout = layer_layout(cfg)
+    n = len(layout)
+    for prefix in range(0, 3):
+        rem = n - prefix
+        for period in range(1, 9):
+            if rem % period:
+                continue
+            tail = layout[prefix:]
+            if all(tail[i] == tail[i % period] for i in range(rem)):
+                return prefix, period, rem // period
+    return n, 1, 0   # fully irregular: all layers in prefix
+
+
+# ---------------------------------------------------------------------------
+# One block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, kind: str, is_moe: bool) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": init_norm(cfg), "norm2": init_norm(cfg)}
+    if kind == "attn":
+        p["attn"] = init_attention(ks[0], cfg)
+    elif kind == "mamba":
+        p["mamba"] = _mamba.init_mamba(ks[0], cfg)
+    elif kind == "rwkv":
+        p["time"] = _rwkv.init_rwkv_time(ks[0], cfg)
+    if is_moe:
+        p["moe"] = _moe.init_moe(ks[1], cfg)
+        if cfg.moe.dense_residual:
+            p["mlp"] = init_mlp(ks[2], cfg)
+    elif kind == "rwkv":
+        p["channel"] = _rwkv.init_rwkv_channel(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    return p
+
+
+def _residual_spec(x: jax.Array, cache) -> tuple:
+    """Residual-stream sharding between blocks: sequence-parallel shards S
+    over 'model' (Megatron-SP: per-layer all-reduces lower to
+    reduce-scatter + all-gather and saved activations shrink by the
+    model-axis factor).  TRAINING ONLY: prefill/decode have no backward
+    residuals to save, and the measured prefill cells paid ~10% extra
+    resharding under SP -- so cache-bearing passes stay batch-sharded."""
+    from . import tuning
+    if tuning.sequence_parallel and cache is None and x.shape[1] >= 64:
+        return ("dp", "model", None)
+    return ("dp", None, None)
+
+
+def apply_block(p: Params, cfg: ModelConfig, kind: str, is_moe: bool,
+                x: jax.Array, positions, cache: Optional[Params],
+                cache_pos) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Returns (x, new_cache, aux_loss_scalar)."""
+    aux = jnp.float32(0.0)
+    h = apply_norm(p["norm1"], x)
+    if kind == "attn":
+        attn_cache = cache.get("kv") if cache else None
+        out, new_kv = apply_attention(p["attn"], cfg, h, positions,
+                                      cache=attn_cache, cache_pos=cache_pos)
+        new_cache = {"kv": new_kv} if new_kv is not None else None
+    elif kind == "mamba":
+        out, new_ms = _mamba.apply_mamba(p["mamba"], cfg, h,
+                                         state=cache.get("ssm") if cache
+                                         else None)
+        new_cache = {"ssm": new_ms} if new_ms is not None else None
+    elif kind == "rwkv":
+        out, new_ts = _rwkv.apply_rwkv_time(p["time"], cfg, h,
+                                            state=cache.get("time") if cache
+                                            else None)
+        new_cache = {"time": new_ts} if new_ts is not None else None
+    else:
+        raise ValueError(kind)
+    x = x + out
+    x = constrain(x, *_residual_spec(x, cache))
+
+    h2 = apply_norm(p["norm2"], x)
+    if is_moe:
+        mo, moe_aux = _moe.apply_moe_auto(p["moe"], cfg, h2)
+        aux = aux + sum(moe_aux.values())
+        if cfg.moe.dense_residual:
+            mo = mo + apply_mlp(p["mlp"], cfg, h2)
+        x = x + mo
+    elif kind == "rwkv":
+        co, new_cs = _rwkv.apply_rwkv_channel(p["channel"], cfg, h2,
+                                              state=cache.get("channel")
+                                              if cache else None)
+        if new_cache is not None or new_cs is not None:
+            new_cache = dict(new_cache or {})
+            new_cache["channel"] = new_cs
+        x = x + co
+    else:
+        x = x + apply_mlp(p["mlp"], cfg, h2)
+    x = constrain(x, *_residual_spec(x, cache))
+    return x, new_cache, aux
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int,
+                     max_len: int) -> Params:
+    if kind == "attn":
+        return {"kv": {
+            "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd),
+                           dtype_of(cfg)),
+            "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd),
+                           dtype_of(cfg)),
+        }}
+    if kind == "mamba":
+        return {"ssm": _mamba.init_mamba_state(cfg, batch)}
+    if kind == "rwkv":
+        st = _rwkv.init_rwkv_state(cfg, batch)
+        return {"time": st["time"], "channel": st["channel"]}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    prefix_len, period, n_super = split_layout(cfg)
+    layout = layer_layout(cfg)
+    dt = dtype_of(cfg)
+    keys = jax.random.split(key, 4 + prefix_len + period)
+    p: Params = {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dt),
+        "final_norm": init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = embed_init(keys[1], cfg.vocab, cfg.d_model, dt).T
+    p["prefix"] = [
+        init_block(keys[4 + i], cfg, *layout[i]) for i in range(prefix_len)]
+    stacks = []
+    for pos in range(period):
+        kind, is_moe = layout[prefix_len + pos]
+        per_layer = [
+            init_block(
+                jax.random.fold_in(keys[4 + prefix_len + pos], u),
+                cfg, kind, is_moe)
+            for u in range(n_super)]
+        stacks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+                      if n_super else None)
+    p["stacks"] = stacks
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    prefix_len, period, n_super = split_layout(cfg)
+    layout = layer_layout(cfg)
+    cache: Params = {
+        "prefix": [init_block_cache(cfg, layout[i][0], batch, max_len)
+                   for i in range(prefix_len)],
+        # per-slot positions: serving slots sit at different depths
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    stacks = []
+    for pos in range(period):
+        kind, _ = layout[prefix_len + pos]
+        per_layer = [init_block_cache(cfg, kind, batch, max_len)
+                     for _ in range(n_super)]
+        stacks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+                      if n_super else None)
+    cache["stacks"] = stacks
+    return cache
+
+
+def _cache_batch_dim(path) -> int:
+    """Batch dim of a cache leaf: stacked leaves are (n_super, B, ...)."""
+    for entry in path:
+        if isinstance(entry, jax.tree_util.DictKey) and \
+                str(entry.key) == "stacks":
+            return 1
+    return 0
+
+
+def slice_cache(cache: Params, slot, width: int = 1) -> Params:
+    """Extract `width` batch rows starting at `slot` (dynamic index)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = [jax.lax.dynamic_slice_in_dim(leaf, slot, width,
+                                        _cache_batch_dim(path))
+           for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def merge_cache(cache: Params, sub: Params, slot) -> Params:
+    """Write a sliced sub-cache back into the batch at `slot`."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    sub_leaves = jax.tree_util.tree_leaves(sub)
+    out = [jax.lax.dynamic_update_slice_in_dim(
+        leaf, s.astype(leaf.dtype), slot, _cache_batch_dim(path))
+        for (path, leaf), s in zip(flat, sub_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens=None, embeds=None,
+            cache: Optional[Params] = None, remat: str = "full"
+            ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """-> (hidden (B,S,d), new_cache, aux_loss).
+
+    Training/prefill: cache None / zero-pos cache.  Decode: S==1.
+    """
+    prefix_len, period, n_super = split_layout(cfg)
+    layout = layer_layout(cfg)
+
+    if embeds is None:
+        embeds = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(embeds, "dp", None, None)
+    b, s, _ = x.shape
+
+    cache_pos = cache["pos"] if cache is not None else None
+    positions = (jnp.arange(s) if cache is None
+                 else cache_pos[:, None] + jnp.arange(s)[None, :])
+
+    aux_total = jnp.float32(0.0)
+    new_prefix = []
+    for i in range(prefix_len):
+        kind, is_moe = layout[i]
+        blk_cache = cache["prefix"][i] if cache is not None else None
+        x, nc, aux = apply_block(params["prefix"][i], cfg, kind, is_moe,
+                                 x, positions, blk_cache, cache_pos)
+        new_prefix.append(nc)
+        aux_total = aux_total + aux
+
+    if n_super:
+        def run_positions(x, aux_acc, stack_slices, cache_slices):
+            new_caches = []
+            for pos in range(period):
+                kind, is_moe = layout[prefix_len + pos]
+                blk_cache = (cache_slices[pos]
+                             if cache_slices is not None else None)
+                x, nc, aux = apply_block(stack_slices[pos], cfg, kind,
+                                         is_moe, x, positions,
+                                         blk_cache, cache_pos)
+                new_caches.append(nc if nc is not None else blk_cache)
+                aux_acc = aux_acc + aux
+            return x, aux_acc, tuple(new_caches)
+
+        def maybe_remat(fn):
+            if remat == "full":
+                return jax.checkpoint(
+                    fn, policy=jax.checkpoint_policies.nothing_saveable)
+            if remat == "dots":
+                return jax.checkpoint(
+                    fn,
+                    policy=jax.checkpoint_policies
+                    .checkpoint_dots_with_no_batch_dims)
+            return fn
+
+        if cache is None:
+            def superblock(carry, stack_slices):
+                x, aux_acc = carry
+                x, aux_acc, _ = run_positions(x, aux_acc, stack_slices, None)
+                return (x, aux_acc), None
+
+            (x, aux_total), _ = jax.lax.scan(
+                maybe_remat(superblock), (x, aux_total),
+                tuple(params["stacks"]))
+            new_stacks = ()
+        else:
+            def superblock(carry, xs):
+                x, aux_acc = carry
+                stack_slices, cache_slices = xs
+                x, aux_acc, new_caches = run_positions(
+                    x, aux_acc, stack_slices, cache_slices)
+                return (x, aux_acc), new_caches
+
+            (x, aux_total), new_stacks = jax.lax.scan(
+                maybe_remat(superblock), (x, aux_total),
+                (tuple(params["stacks"]), tuple(cache["stacks"])))
+    else:
+        new_stacks = ()
+
+    x = apply_norm(params["final_norm"], x)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"prefix": new_prefix, "stacks": list(new_stacks),
+                     "pos": cache_pos + s}
+    return x, new_cache, aux_total
+
+
+def head_matrix(params: Params, cfg: ModelConfig) -> jax.Array:
+    return (params["embed"].T if cfg.tie_embeddings else params["head"])
+
+
+# ---------------------------------------------------------------------------
+# Task-level entry points
+# ---------------------------------------------------------------------------
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            remat: str = "full") -> jax.Array:
+    x, _, aux = forward(params, cfg, tokens=batch.get("tokens"),
+                        embeds=batch.get("embeds"), remat=remat)
+    return lm_loss(head_matrix(params, cfg), x, batch["labels"]) + aux
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            max_len: int) -> Tuple[jax.Array, Params]:
+    """Run the prompt, build the cache, return last-position logits."""
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")
+    b = (tokens if tokens is not None else embeds).shape[0]
+    cache = init_cache(cfg, b, max_len)
+    x, new_cache, _ = forward(params, cfg, tokens=tokens, embeds=embeds,
+                              cache=cache, remat="none")
+    logits = x[:, -1:, :] @ head_matrix(params, cfg)
+    return logits, new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jax.Array) -> Tuple[jax.Array, Params]:
+    """tokens: (B, 1) -> (logits (B,1,V), new_cache)."""
+    x, new_cache, _ = forward(params, cfg, tokens=tokens, cache=cache,
+                              remat="none")
+    logits = x @ head_matrix(params, cfg)
+    return logits, new_cache

@@ -1,0 +1,77 @@
+"""Performance knobs (the §Perf hillclimb switches).
+
+Module-level so the dry-run / perf drivers can lower the SAME model code in
+baseline and optimized configurations:
+
+    from repro.models import tuning
+    tuning.set_profile("baseline")   # paper-faithful first lowering
+    tuning.set_profile("optimized")  # shipping defaults
+
+Knobs:
+  attn_chunk_remat   recompute attention scores/probs in backward
+                     (flash-style memory) instead of saving per-chunk slabs
+  sequence_parallel  shard the residual stream's sequence dim over 'model'
+                     between blocks -> Megatron-SP: the per-layer
+                     all-reduces become reduce-scatter + all-gather (half
+                     the wire bytes) and saved activations shrink by the
+                     model-axis factor
+  moe_combine_bf16   psum the MoE combine in bf16 instead of f32 (half the
+                     EP combine wire bytes; <=top_k shards contribute per
+                     token so the accumulation error stays tiny)
+"""
+from __future__ import annotations
+
+attn_chunk_remat: bool = True
+sequence_parallel: bool = True
+moe_combine_bf16: bool = True
+moe_all_to_all: bool = True      # a2a expert parallelism (tokens stay
+                                 # sharded on every axis; two all_to_alls
+                                 # replace all-gather + psum combine)
+moe_decode_weight_stationary: bool = True   # decode MoE: weights never
+                                 # move; psum tiny activations instead
+causal_chunk_unroll: bool = True  # static causal chunking: skip future KV
+                                  # blocks + bias-only diagonal masking
+mamba_fused_params: bool = True   # compute (B,chunk,di,ds) SSM tensors per
+                                  # chunk + checkpoint (never full-sequence)
+rwkv_chunked_scan: bool = True   # chunked-matmul wkv recurrence (FLA form)
+rwkv_batch_shard: bool = True    # shard recurrence batch over ALL axes
+kv_onehot_write: bool = True     # one-hot select KV write (vs vmapped DUS
+                                 # that legalizes to f32 scatter)
+
+_PROFILES = {
+    "baseline": dict(attn_chunk_remat=False, sequence_parallel=False,
+                     moe_combine_bf16=False, moe_all_to_all=False,
+                     causal_chunk_unroll=False, rwkv_chunked_scan=False,
+                     rwkv_batch_shard=False, kv_onehot_write=False,
+                     moe_decode_weight_stationary=False,
+                     mamba_fused_params=False),
+    # rwkv_batch_shard measured WORSE on the dry-run (memory +7.2s for
+    # collective -5.6s: GSPMD already extracts the batch parallelism and
+    # the explicit constraint only forces resharding copies) -- kept as a
+    # knob for the §Perf record, default off.
+    # moe_all_to_all measured WORSE on the dominant (memory) term: its
+    # full-E send/return buffers cost ~80s/step of HBM for a 7s collective
+    # win (kimi train_4k).  Kept as a knob for the §Perf record.
+    "optimized": dict(attn_chunk_remat=True, sequence_parallel=True,
+                      moe_combine_bf16=True, moe_all_to_all=False,
+                      causal_chunk_unroll=True, rwkv_chunked_scan=True,
+                      rwkv_batch_shard=False, kv_onehot_write=True,
+                      moe_decode_weight_stationary=True,
+                      mamba_fused_params=True),
+}
+
+
+def set_profile(name: str) -> None:
+    g = globals()
+    for k, v in _PROFILES[name].items():
+        g[k] = v
+
+
+def set_knob(name: str, value: bool) -> None:
+    if name not in _PROFILES["baseline"]:
+        raise KeyError(name)
+    globals()[name] = value
+
+
+def snapshot() -> dict:
+    return {k: globals()[k] for k in _PROFILES["baseline"]}

@@ -1,0 +1,172 @@
+"""Whisper-style encoder-decoder (audio backbone, conv frontend stubbed).
+
+Per the assignment, the modality frontend is a STUB: `input_specs()`
+provides precomputed frame embeddings (B, S_audio, d_model) as if the two
+conv layers had already run.  The transformer backbone is faithful:
+sinusoidal encoder positions, learned decoder positions, pre-LN blocks,
+GELU MLPs, decoder with causal self-attention + cross-attention.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.api import constrain
+from .common import (apply_attention, apply_mlp, apply_norm, dtype_of,
+                     embed_init, init_attention, init_mlp, init_norm, lm_loss)
+
+Params = Dict[str, Any]
+
+
+def sinusoids(length: int, d: int) -> jnp.ndarray:
+    half = d // 2
+    log_timescale = np.log(10000.0) / (half - 1)
+    inv = np.exp(-log_timescale * np.arange(half))
+    scaled = np.arange(length)[:, None] * inv[None, :]
+    return jnp.asarray(
+        np.concatenate([np.sin(scaled), np.cos(scaled)], axis=1),
+        dtype=jnp.float32)
+
+
+def init_enc_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"norm1": init_norm(cfg), "attn": init_attention(ks[0], cfg),
+            "norm2": init_norm(cfg), "mlp": init_mlp(ks[1], cfg)}
+
+
+def init_dec_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    return {"norm1": init_norm(cfg), "self_attn": init_attention(ks[0], cfg),
+            "norm_x": init_norm(cfg), "cross_attn": init_attention(ks[1], cfg),
+            "norm2": init_norm(cfg), "mlp": init_mlp(ks[2], cfg)}
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    dt = dtype_of(cfg)
+    n_enc = cfg.n_encoder_layers
+    n_dec = cfg.n_layers
+    enc_blocks = [init_enc_block(jax.random.fold_in(ks[0], i), cfg)
+                  for i in range(n_enc)]
+    dec_blocks = [init_dec_block(jax.random.fold_in(ks[1], i), cfg)
+                  for i in range(n_dec)]
+    return {
+        "tok_embed": embed_init(ks[2], cfg.vocab, cfg.d_model, dt),
+        "dec_pos": embed_init(ks[3], cfg.decoder_len, cfg.d_model, dt),
+        "enc_norm": init_norm(cfg),
+        "dec_norm": init_norm(cfg),
+        "enc_stack": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_blocks),
+        "dec_stack": jax.tree.map(lambda *xs: jnp.stack(xs), *dec_blocks),
+    }
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array,
+           remat: str = "full") -> jax.Array:
+    """frames: (B, S_audio, d) stub embeddings -> encoder states."""
+    s = frames.shape[1]
+    x = frames + sinusoids(s, cfg.d_model).astype(frames.dtype)
+    x = constrain(x, "dp", None, None)
+    positions = jnp.arange(s)
+
+    def block(x, p):
+        h = apply_norm(p["norm1"], x)
+        out, _ = apply_attention(p["attn"], cfg, h, positions, causal=False)
+        x = x + out
+        x = x + apply_mlp(p["mlp"], cfg, apply_norm(p["norm2"], x))
+        return constrain(x, "dp", None, None), None
+
+    if remat == "full":
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(block, x, params["enc_stack"])
+    return apply_norm(params["enc_norm"], x)
+
+
+def decode(params: Params, cfg: ModelConfig, tokens: jax.Array,
+           enc_out: Optional[jax.Array],
+           cache: Optional[Params] = None, remat: str = "full"
+           ) -> Tuple[jax.Array, Optional[Params]]:
+    """tokens: (B, T).  cache (decode): per-layer stacked self-KV +
+    precomputed cross-KV."""
+    b, t = tokens.shape
+    cache_pos = cache["pos"] if cache is not None else None
+    positions = (jnp.arange(t) if cache is None
+                 else cache_pos[:, None] + jnp.arange(t)[None, :])
+    x = jnp.take(params["tok_embed"], tokens, axis=0)
+    x = x + jnp.take(params["dec_pos"], positions, axis=0, mode="clip")
+    x = constrain(x, "dp", None, None)
+
+    def block(carry, xs):
+        x = carry
+        p, kv_slice = xs
+        h = apply_norm(p["norm1"], x)
+        self_cache = kv_slice["kv"] if kv_slice is not None else None
+        out, new_kv = apply_attention(p["self_attn"], cfg, h, positions,
+                                      cache=self_cache, cache_pos=cache_pos)
+        x = x + out
+        hx = apply_norm(p["norm_x"], x)
+        cross, _ = apply_attention(p["cross_attn"], cfg, hx, positions,
+                                   kv_x=enc_out, causal=False)
+        x = x + cross
+        x = x + apply_mlp(p["mlp"], cfg, apply_norm(p["norm2"], x))
+        x = constrain(x, "dp", None, None)
+        new_slice = {"kv": new_kv} if new_kv is not None else kv_slice
+        return x, new_slice
+
+    if cache is None:
+        def nb(c, p):
+            c, _ = block(c, (p, None))
+            return c, None
+        if remat == "full":
+            nb = jax.checkpoint(
+                nb, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(nb, x, params["dec_stack"])
+        new_cache = None
+    else:
+        x, new_kvs = jax.lax.scan(block, x,
+                                  (params["dec_stack"], cache["kv_stack"]))
+        new_cache = {"kv_stack": new_kvs, "pos": cache_pos + t,
+                     "enc_out": cache["enc_out"]}
+    return apply_norm(params["dec_norm"], x), new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_out: jax.Array) -> Params:
+    dt = dtype_of(cfg)
+    kv = {"kv": {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                        cfg.hd), dt),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                        cfg.hd), dt),
+    }}
+    return {"kv_stack": kv, "pos": jnp.zeros((batch,), jnp.int32),
+            "enc_out": enc_out}
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            remat: str = "full") -> jax.Array:
+    enc_out = encode(params, cfg, batch["frames"], remat=remat)
+    x, _ = decode(params, cfg, batch["tokens"], enc_out, remat=remat)
+    return lm_loss(params["tok_embed"].T, x, batch["labels"])
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            max_len: int) -> Tuple[jax.Array, Params]:
+    enc_out = encode(params, cfg, batch["frames"], remat="none")
+    cache = init_cache(cfg, batch["tokens"].shape[0], max_len, enc_out)
+    x, new_cache = decode(params, cfg, batch["tokens"], enc_out,
+                          cache=cache, remat="none")
+    logits = x[:, -1:, :] @ params["tok_embed"].T
+    return logits, new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jax.Array) -> Tuple[jax.Array, Params]:
+    x, new_cache = decode(params, cfg, tokens, cache["enc_out"],
+                          cache=cache, remat="none")
+    logits = x @ params["tok_embed"].T
+    return logits, new_cache

@@ -1,0 +1,5 @@
+"""Optimizers: AdamW, factored Adafactor, cosine schedule, int8 grad compression."""
+from . import grad_compress
+from .adamw import (AdamWState, AdafactorState, OptimizerConfig, adamw_init,
+                    adamw_update, adafactor_init, adafactor_update, cosine_lr,
+                    make_optimizer, optimizer_bytes_per_param)

@@ -1,0 +1,183 @@
+"""Optimizers (pure-JAX, pytree-native): AdamW and factored Adafactor.
+
+AdamW keeps fp32 master weights + two fp32 moments (12 bytes/param) -- fine
+up to ~100B params on the production mesh.  The trillion-parameter MoE
+(kimi-k2) uses Adafactor with factored second moment and bf16 accumulators
+(~2.5 bytes/param), selected per-arch by the launcher (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # schedule
+    warmup_steps: int = 2000
+    total_steps: int = 100_000
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Params
+    nu: Params
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    # per-leaf: either (row, col) factored stats or a full `nu` for <2D
+    vr: Params
+    vc: Params
+    v_full: Params
+
+
+def cosine_lr(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params: Params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def adamw_update(cfg: OptimizerConfig, grads: Params, state: AdamWState,
+                 params: Params) -> Tuple[Params, AdamWState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mhat = m2 / (1 - b1 ** step)
+        vhat = v2 / (1 - b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step, new_mu, new_nu), metrics
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, bf16 accumulators)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params: Params) -> AdafactorState:
+    def vr(p):
+        return (jnp.zeros(p.shape[:-1], jnp.bfloat16) if p.ndim >= 2
+                else jnp.zeros((), jnp.bfloat16))
+
+    def vc(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.bfloat16)
+                if p.ndim >= 2 else jnp.zeros((), jnp.bfloat16))
+
+    def vf(p):
+        return (jnp.zeros((), jnp.bfloat16) if p.ndim >= 2
+                else jnp.zeros(p.shape, jnp.bfloat16))
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree.map(vr, params),
+                          vc=jax.tree.map(vc, params),
+                          v_full=jax.tree.map(vf, params))
+
+
+def adafactor_update(cfg: OptimizerConfig, grads: Params,
+                     state: AdafactorState, params: Params
+                     ) -> Tuple[Params, AdafactorState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    decay = 1.0 - (step.astype(jnp.float32) + 1) ** -0.8
+
+    def upd(g, vr, vc, vf, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + 1e-30
+        if p.ndim >= 2:
+            vr2 = decay * vr.astype(jnp.float32) + (1 - decay) * g2.mean(-1)
+            vc2 = decay * vc.astype(jnp.float32) + (1 - decay) * g2.mean(-2)
+            denom = (vr2[..., None] * vc2[..., None, :]
+                     / jnp.maximum(vr2.mean(-1)[..., None, None], 1e-30))
+            delta = gf / (jnp.sqrt(denom) + cfg.eps)
+            vf2 = vf
+        else:
+            vf2 = decay * vf.astype(jnp.float32) + (1 - decay) * g2
+            delta = gf / (jnp.sqrt(vf2) + cfg.eps)
+            vr2, vc2 = vr, vc
+        # update clipping (Adafactor RMS rule)
+        rms = jnp.sqrt(jnp.mean(delta * delta) + 1e-30)
+        delta = delta / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, vr2.astype(jnp.bfloat16), vc2.astype(jnp.bfloat16), \
+            (vf2.astype(jnp.bfloat16) if p.ndim < 2 else vf)
+
+    out = jax.tree.map(upd, grads, state.vr, state.vc, state.v_full, params)
+    pick = lambda i: jax.tree.map(  # noqa: E731
+        lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return pick(0), AdafactorState(step, pick(1), pick(2), pick(3)), metrics
+
+
+# ---------------------------------------------------------------------------
+# Uniform facade
+# ---------------------------------------------------------------------------
+
+def make_optimizer(cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        return adamw_init, lambda g, s, p: adamw_update(cfg, g, s, p)
+    if cfg.name == "adafactor":
+        return adafactor_init, lambda g, s, p: adafactor_update(cfg, g, s, p)
+    raise ValueError(cfg.name)
+
+
+def optimizer_bytes_per_param(name: str) -> float:
+    return {"adamw": 8.0, "adafactor": 2.1}[name]

@@ -1,0 +1,430 @@
+"""Loop-aware cost analysis of optimized HLO text.
+
+XLA's built-in `compiled.cost_analysis()` visits every computation ONCE, so
+anything inside a `while` (every `lax.scan` -- our layer stacks, attention
+chunks, loss chunks) is under-counted by its trip count: an 80-layer scanned
+transformer reports ~1/80th of its true FLOPs, and collectives inside the
+scan disappear from the totals.  The optimized HLO, however, carries
+`backend_config={"known_trip_count":{"n":"24"}}` on every counted loop, so
+this module re-derives module costs by
+
+  1. parsing the HLO text into computations and ops,
+  2. computing per-op flops (exact for `dot`: 2 * result * contraction) and
+     bytes (operands + result for memory-moving ops, fusion interiors
+     excluded),
+  3. folding the call graph bottom-up with while-loop trip-count
+     multipliers (fusion/call/conditional weight 1).
+
+Collective wire bytes use ring-algorithm factors:
+  all-reduce      2x operand bytes  (reduce-scatter + all-gather phases)
+  all-gather      1x result bytes
+  reduce-scatter  1x operand bytes
+  all-to-all      1x operand bytes
+  collective-permute 1x result bytes
+
+All returned numbers are per-device (the SPMD-partitioned module IS the
+per-device program).  CPU-backend caveat: fusion boundaries differ from the
+TPU backend, so `bytes` is an upper-bound style proxy for HBM traffic --
+used consistently across baselines and hillclimb steps, so *deltas* are
+meaningful even where absolute calibration is not.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+# ops that move no real data / are free relabelings
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "opt-barrier",
+}
+# container ops whose operand/result bytes double-count their interior
+_CONTAINER_OPS = {"while", "call", "conditional", "fusion"}
+
+# elementwise-ish ops: 1 flop per output element
+_EW_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "power", "remainder", "atan2", "and", "or", "xor",
+    "not", "shift-left", "shift-right-arithmetic", "shift-right-logical",
+    "compare", "select", "clamp", "map",
+}
+# transcendental: count as 1 flop too (XLA convention), tracked separately
+_TRANS_OPS = {
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "rsqrt",
+    "sqrt", "cbrt", "tanh", "logistic", "sine", "cosine", "tan", "erf",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(?P<type>\([^()]*\)|\S+?)\s+"
+    r"(?P<opcode>[\w\-]+)\((?P<operands>[^)]*)\)(?P<attrs>.*)$")
+_TRIP_RE = re.compile(r'known_trip_count"?:\{"?n"?:"?(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_COMP_RE = re.compile(r"(?:true|false)_computation=%?([\w\.\-]+)")
+_DIMS_RE = {
+    "lhs_c": re.compile(r"lhs_contracting_dims=\{([\d,]*)\}"),
+    "lhs_b": re.compile(r"lhs_batch_dims=\{([\d,]*)\}"),
+}
+
+
+def shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) of an HLO type string (tuples summed)."""
+    elems = 0
+    nbytes = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dtype]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    type_str: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    defs: Dict[str, str]        # %name -> type string
+
+
+def parse_module(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER_RE.match(line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = Op(name=m.group(1), opcode=m.group("opcode"),
+                type_str=m.group("type"),
+                operands=[t.strip().lstrip("%") for t in
+                          m.group("operands").split(",") if t.strip()
+                          .startswith("%")],
+                attrs=m.group("attrs"))
+        cur.ops.append(op)
+        cur.defs[op.name] = op.type_str
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    transcendental: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    unknown_trip_counts: int = 0
+
+    def scaled(self, k: float) -> "Costs":
+        return Costs(
+            flops=self.flops * k,
+            transcendental=self.transcendental * k,
+            bytes=self.bytes * k,
+            collective_bytes={o: b * k for o, b in
+                              self.collective_bytes.items()},
+            collective_counts={o: c * k for o, c in
+                               self.collective_counts.items()},
+            unknown_trip_counts=self.unknown_trip_counts,
+        )
+
+    def add(self, other: "Costs") -> None:
+        self.flops += other.flops
+        self.transcendental += other.transcendental
+        self.bytes += other.bytes
+        for o, b in other.collective_bytes.items():
+            self.collective_bytes[o] = self.collective_bytes.get(o, 0.0) + b
+        for o, c in other.collective_counts.items():
+            self.collective_counts[o] = (
+                self.collective_counts.get(o, 0.0) + c)
+        self.unknown_trip_counts += other.unknown_trip_counts
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _dot_flops(op: Op, defs: Dict[str, str]) -> float:
+    out_elems, _ = shape_elems_bytes(op.type_str)
+    contract = 1
+    m = _DIMS_RE["lhs_c"].search(op.attrs)
+    if m and op.operands:
+        lhs_type = defs.get(op.operands[0])
+        if lhs_type:
+            sm = _SHAPE_RE.search(lhs_type)
+            if sm and sm.group(2):
+                lhs_dims = [int(d) for d in sm.group(2).split(",")]
+                for idx_s in m.group(1).split(","):
+                    if idx_s:
+                        idx = int(idx_s)
+                        if idx < len(lhs_dims):
+                            contract *= lhs_dims[idx]
+    return 2.0 * out_elems * contract
+
+
+def _op_local_costs(op: Op, defs: Dict[str, str],
+                    comps: Optional[Dict[str, "Computation"]] = None
+                    ) -> Costs:
+    c = Costs()
+    opcode = op.opcode
+    if opcode in _FREE_OPS:
+        return c
+    out_elems, out_bytes = shape_elems_bytes(op.type_str)
+    in_bytes = 0
+    for name in op.operands:
+        t = defs.get(name)
+        if t:
+            in_bytes += shape_elems_bytes(t)[1]
+
+    # In-place / sliced accesses move only the slice, not the buffer:
+    # XLA aliases the big operand of (dynamic-)update-slice on TPU, and a
+    # (dynamic-)slice/gather reads just the addressed region.  Counting the
+    # full buffer would charge a 32k-deep KV cache per decoded token.
+    if opcode == "dynamic-update-slice":
+        upd = (shape_elems_bytes(defs.get(op.operands[1], ""))[1]
+               if len(op.operands) > 1 else out_bytes)
+        c.bytes = float(2 * upd)
+        return c
+    if opcode in ("dynamic-slice", "slice"):
+        c.bytes = float(2 * out_bytes)
+        return c
+    if opcode == "gather":
+        idx = (shape_elems_bytes(defs.get(op.operands[1], ""))[1]
+               if len(op.operands) > 1 else 0)
+        c.bytes = float(2 * out_bytes + idx)
+        return c
+    if opcode == "scatter":
+        upd = (shape_elems_bytes(defs.get(op.operands[2], ""))[1]
+               if len(op.operands) > 2 else out_bytes)
+        idx = (shape_elems_bytes(defs.get(op.operands[1], ""))[1]
+               if len(op.operands) > 1 else 0)
+        c.bytes = float(2 * upd + idx)
+        return c
+    if opcode == "fusion" and comps is not None:
+        # A fusion that is an in-place buffer update writes only the slice.
+        # Two shapes of this: (a) root IS a dynamic-update-slice; (b) the
+        # CPU emitter's bf16 quirk -- convert(DUS(convert(buf), update)) --
+        # which round-trips the whole buffer through f32 *on CPU only*
+        # (TPU has native bf16 DUS).  Detect any interior DUS whose result
+        # covers the fusion output and charge 2x the update slice.
+        m = _CALLS_RE.search(op.attrs)
+        callee = comps.get(m.group(1)) if m else None
+        if callee is not None and callee.ops:
+            for cop in callee.ops:
+                if cop.opcode != "dynamic-update-slice":
+                    continue
+                if (shape_elems_bytes(cop.type_str)[0] != out_elems):
+                    continue
+                upd_name = cop.operands[1] if len(cop.operands) > 1 else ""
+                upd = shape_elems_bytes(callee.defs.get(upd_name, ""))[1]
+                if upd == 0:
+                    upd = out_bytes       # conservative fallback
+                small_ins = max(in_bytes - out_bytes, 0)
+                c.bytes = float(min(small_ins, 2 * upd) + 2 * upd)
+                return c
+
+    if opcode.startswith(_COLLECTIVES):
+        base = opcode
+        for coll in _COLLECTIVES:
+            if opcode.startswith(coll):
+                base = coll
+                break
+        if base == "all-reduce":
+            wire = 2.0 * in_bytes
+        elif base in ("reduce-scatter", "all-to-all"):
+            wire = float(in_bytes)
+        else:                      # all-gather, permute, broadcast
+            wire = float(out_bytes)
+        c.collective_bytes[base] = wire
+        c.collective_counts[base] = 1.0
+        c.bytes = float(in_bytes + out_bytes)
+        return c
+
+    if opcode in _CONTAINER_OPS:
+        if opcode == "fusion":
+            # fusion interior not counted for bytes; call site moves data
+            c.bytes = float(in_bytes + out_bytes)
+        return c
+
+    if opcode == "dot":
+        c.flops = _dot_flops(op, defs)
+    elif opcode == "convolution":
+        c.flops = 2.0 * out_elems   # lower bound; no convs in our models
+    elif opcode in _TRANS_OPS:
+        c.flops = float(out_elems)
+        c.transcendental = float(out_elems)
+    elif opcode in _EW_OPS or opcode == "reduce" or opcode == "convert":
+        ref = max(out_elems, 1)
+        if opcode == "reduce":
+            ref = max(in_bytes // 4, out_elems)
+        c.flops = float(ref) if opcode != "convert" else 0.0
+    c.bytes = float(in_bytes + out_bytes)
+    return c
+
+
+def top_ops(hlo_text: str, by: str = "bytes", k: int = 20):
+    """Top-k individual ops by bytes or flops, with loop multipliers applied.
+
+    The hillclimb profiler: shows WHERE the dominant roofline term lives
+    (op name, opcode, metadata op_name tag, cost x trip multiplier).
+    """
+    comps = parse_module(hlo_text)
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, re.M)
+    entry_name = m.group(1) if m else next(reversed(comps))
+
+    # compute multiplier per computation by walking the call graph
+    mult: Dict[str, float] = {entry_name: 1.0}
+    order = [entry_name]
+    seen = {entry_name}
+    while order:
+        cname = order.pop(0)
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        base = mult.get(cname, 1.0)
+        for op in comp.ops:
+            callees: List[Tuple[str, float]] = []
+            if op.opcode == "fusion" or op.opcode == "call":
+                cm = _CALLS_RE.search(op.attrs)
+                if cm:
+                    callees.append((cm.group(1), 1.0))
+            elif op.opcode == "while":
+                trip = 1
+                tm = _TRIP_RE.search(op.attrs)
+                if tm:
+                    trip = int(tm.group(1))
+                bm = _BODY_RE.search(op.attrs)
+                if bm:
+                    callees.append((bm.group(1), float(trip)))
+        # second pass handled below; simple BFS accumulate
+            for callee, w in callees:
+                mult[callee] = mult.get(callee, 0.0) + base * w
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    rows = []
+    for cname, comp in comps.items():
+        k_mult = mult.get(cname, 0.0)
+        if k_mult <= 0:
+            continue
+        for op in comp.ops:
+            c = _op_local_costs(op, comp.defs, comps)
+            val = c.bytes if by == "bytes" else c.flops
+            if val <= 0:
+                continue
+            tag = ""
+            tm = re.search(r'op_name="([^"]*)"', op.attrs)
+            if tm:
+                tag = tm.group(1)[-80:]
+            rows.append((val * k_mult, op.opcode, op.name, k_mult, tag))
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def module_costs(hlo_text: str, entry: Optional[str] = None) -> Costs:
+    comps = parse_module(hlo_text)
+    if not comps:
+        return Costs()
+    # identify entry: the computation named in "ENTRY %name" line
+    entry_name = entry
+    if entry_name is None:
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, re.M)
+        entry_name = m.group(1) if m else next(reversed(comps))
+
+    memo: Dict[str, Costs] = {}
+    visiting: set = set()
+
+    def cost_of(comp_name: str) -> Costs:
+        if comp_name in memo:
+            return memo[comp_name]
+        if comp_name in visiting or comp_name not in comps:
+            return Costs()
+        visiting.add(comp_name)
+        comp = comps[comp_name]
+        total = Costs()
+        for op in comp.ops:
+            total.add(_op_local_costs(op, comp.defs, comps))
+            if op.opcode == "fusion":
+                m = _CALLS_RE.search(op.attrs)
+                if m:
+                    total.add(cost_of(m.group(1)))
+            elif op.opcode == "while":
+                trip = 1
+                tm = _TRIP_RE.search(op.attrs)
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    total.unknown_trip_counts += 1
+                bm = _BODY_RE.search(op.attrs)
+                if bm:
+                    total.add(cost_of(bm.group(1)).scaled(trip))
+                cm = _COND_RE.search(op.attrs)
+                if cm:
+                    total.add(cost_of(cm.group(1)).scaled(trip + 1))
+            elif op.opcode == "call":
+                m = _CALLS_RE.search(op.attrs) or re.search(
+                    r"to_apply=%?([\w\.\-]+)", op.attrs)
+                if m:
+                    total.add(cost_of(m.group(1)))
+            elif op.opcode == "conditional":
+                branches: List[str] = []
+                bm = _BRANCHES_RE.search(op.attrs)
+                if bm:
+                    branches = [b.strip().lstrip("%") for b in
+                                bm.group(1).split(",") if b.strip()]
+                else:
+                    branches = _TF_COMP_RE.findall(op.attrs)
+                if branches:
+                    worst = None
+                    for b in branches:
+                        cb = cost_of(b)
+                        if worst is None or cb.flops > worst.flops:
+                            worst = cb
+                    if worst is not None:
+                        total.add(worst)
+        visiting.discard(comp_name)
+        memo[comp_name] = total
+        return total
+
+    return cost_of(entry_name)

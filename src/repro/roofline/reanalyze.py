@@ -1,0 +1,63 @@
+"""Re-derive roofline records from saved HLO dumps with the CURRENT
+analyzer -- keeps baseline and optimized numbers measured identically even
+when the cost model improves after a sweep ran.
+
+    PYTHONPATH=src python -m repro.roofline.reanalyze \
+        --jsonl experiments/dryrun.jsonl --hlo-dir experiments/hlo \
+        --out experiments/dryrun_reanalyzed.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from . import analysis
+
+
+def reanalyze_record(rec: dict, hlo_dir: str) -> dict:
+    if rec.get("status") != "ok":
+        return rec
+    mp = rec["mesh"].get("pod", 1) > 1
+    profile = rec.get("profile", "baseline")
+    tag = (f"{rec['arch']}_{rec['shape']}_{'mp' if mp else 'sp'}"
+           + ("" if profile == "baseline" else f"_{profile}"))
+    path = os.path.join(hlo_dir, tag + ".hlo.txt")
+    if not os.path.exists(path):
+        rec["reanalyzed"] = False
+        return rec
+    hlo = open(path).read()
+    rl = analysis.analyze(rec.get("cost", {}), hlo,
+                          n_chips=rec["n_chips"],
+                          model_flops=rec.get("model_flops", 0.0))
+    rec.update(
+        flops_per_chip=rl.flops,
+        hbm_bytes_per_chip=rl.hbm_bytes,
+        collective_bytes_per_chip=rl.collective_bytes,
+        collectives=rl.collectives,
+        collective_counts=rl.collective_counts,
+        compute_s=rl.compute_s, memory_s=rl.memory_s,
+        collective_s=rl.collective_s, bottleneck=rl.bottleneck,
+        useful_flops_frac=rl.useful_flops_frac,
+        reanalyzed=True,
+    )
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="experiments/dryrun.jsonl")
+    ap.add_argument("--hlo-dir", default="experiments/hlo")
+    ap.add_argument("--out", default="experiments/dryrun_reanalyzed.jsonl")
+    args = ap.parse_args(argv)
+    n = 0
+    with open(args.out, "w") as out:
+        for line in open(args.jsonl):
+            rec = reanalyze_record(json.loads(line), args.hlo_dir)
+            out.write(json.dumps(rec) + "\n")
+            n += rec.get("reanalyzed", False)
+    print(f"reanalyzed {n} records -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

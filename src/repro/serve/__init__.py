@@ -1,0 +1,4 @@
+"""Serving: paged KV blocks, continuous-batching scheduler, decode engine."""
+from .engine import Engine, EngineConfig, make_engine
+from .kv_blocks import BlockAllocator, PoolConfig, gather_kv, init_pool, write_token
+from .scheduler import Request, Scheduler

@@ -1,0 +1,153 @@
+"""Decode engine: continuous batching over the registry model API.
+
+The engine owns a fixed-capacity slot batch (static shapes -> one compiled
+decode step, reused forever) and drives the Scheduler:
+
+    loop:
+      admit_waiting()  -> prefill new slots (per-slot prefill, padded)
+      pre_decode()     -> extend block tables / preempt
+      decode_step      -> one token for every active slot (inactive masked)
+      post_decode()    -> sampling, EOS bookkeeping, slot recycling
+
+Sampling is greedy or temperature-based (per-request).  The per-slot cache
+positions added to the model layer (cache['pos'] is a (B,) vector) are what
+make mixed-depth batches correct.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import registry, transformer
+from .kv_blocks import PoolConfig
+from .scheduler import Request, Scheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 8
+    max_context: int = 512
+    block_size: int = 16
+    pool_blocks: Optional[int] = None   # default: 75% of dense worst case
+    temperature: float = 0.0            # 0 => greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        worst = ecfg.max_batch * (ecfg.max_context // ecfg.block_size)
+        pool_cfg = PoolConfig(
+            n_blocks=ecfg.pool_blocks or max(int(0.75 * worst), 1),
+            block_size=ecfg.block_size,
+            max_blocks_per_seq=ecfg.max_context // ecfg.block_size,
+        )
+        self.sched = Scheduler(pool_cfg, ecfg.max_batch)
+        self.cache = transformer.init_cache(cfg, ecfg.max_batch,
+                                            ecfg.max_context)
+        self.rng = jax.random.PRNGKey(ecfg.seed)
+        self._decode = jax.jit(
+            lambda p, c, t: transformer.decode_step(p, cfg, c, t))
+        self._prefill_cache = {}
+
+    # -- per-slot prefill -----------------------------------------------------
+
+    def _prefill_one(self, slot_id: int, prompt: List[int]) -> None:
+        """Run the prompt through the model into this slot's cache rows.
+
+        Prompts are bucketed to power-of-two lengths so only O(log L)
+        prefill programs ever compile."""
+        plen = len(prompt)
+        bucket = 1
+        while bucket < plen:
+            bucket *= 2
+        bucket = min(bucket, self.ecfg.max_context)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = prompt
+
+        if bucket not in self._prefill_cache:
+            cfg = self.cfg
+            max_ctx = self.ecfg.max_context
+
+            def prefill_fn(params, tokens, cache, slot, true_len):
+                # fresh width-1 cache, run the (padded) prompt, stamp the
+                # true length, merge into the batch cache at `slot`.
+                sub = transformer.init_cache(cfg, 1, max_ctx)
+                x, new_sub, _ = transformer.forward(
+                    params, cfg, tokens=tokens, cache=sub, remat="none")
+                new_sub = _restamp_pos(new_sub, true_len[None])
+                merged = transformer.merge_cache(cache, new_sub, slot)
+                logits = x @ transformer.head_matrix(params, cfg)
+                return logits, merged
+
+            self._prefill_cache[bucket] = jax.jit(prefill_fn)
+
+        logits, self.cache = self._prefill_cache[bucket](
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.int32(slot_id), jnp.int32(plen))
+        # next-token logits come from the last REAL prompt position
+        self._pending_logits[slot_id] = np.asarray(
+            logits[0, plen - 1], np.float32)
+
+    # -- main loop ------------------------------------------------------------
+
+    def run(self, requests: List[Request], max_steps: int = 10_000
+            ) -> Dict[int, List[int]]:
+        for r in requests:
+            self.sched.submit(r)
+        self._pending_logits: Dict[int, np.ndarray] = {}
+
+        steps = 0
+        while not self.sched.idle and steps < max_steps:
+            steps += 1
+            self.sched.tick()
+
+            for slot in self.sched.admit_waiting():
+                self._prefill_one(slot.slot_id, slot.req.prompt)
+                tok = self._sample(self._pending_logits.pop(slot.slot_id))
+                self.sched.post_decode(slot, tok)
+
+            active = self.sched.pre_decode()
+            if not active:
+                continue
+            tokens = np.zeros((self.ecfg.max_batch, 1), np.int32)
+            for slot in active:
+                seq = slot.req.prompt + slot.req.generated
+                tokens[slot.slot_id, 0] = seq[-1]
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(tokens))
+            logits = np.asarray(logits[:, 0], np.float32)
+            for slot in list(active):
+                tok = self._sample(logits[slot.slot_id])
+                self.sched.post_decode(slot, tok)
+
+        return {r.req_id: r.generated for r in self.sched.finished}
+
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.ecfg.temperature <= 0.0:
+            return int(np.argmax(logits))
+        self.rng, sub = jax.random.split(self.rng)
+        return int(jax.random.categorical(
+            sub, jnp.asarray(logits) / self.ecfg.temperature))
+
+
+def _restamp_pos(cache, pos):
+    out = dict(cache)
+    out["pos"] = pos
+    return out
+
+
+def make_engine(cfg: ModelConfig, params=None, rng=None,
+                ecfg: Optional[EngineConfig] = None) -> Engine:
+    ecfg = ecfg or EngineConfig()
+    if params is None:
+        api = registry.get_model(cfg)
+        params = api.init(rng if rng is not None else jax.random.PRNGKey(0))
+    return Engine(cfg, params, ecfg)

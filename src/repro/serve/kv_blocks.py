@@ -1,0 +1,133 @@
+"""Paged KV-cache block allocator (vLLM-style), tied to the paper.
+
+The KV pool is carved into fixed-size blocks; a sequence's cache is a list
+of block ids (its *block table*).  Serving-time attention then reads KV
+through a data-dependent block-index indirection -- structurally the same
+access pattern as the paper's unstructured SpMV: the block table is the
+column-index array, the pool is x, and the block-gather is exactly what
+`kernels/spmv_bell.py` does with scalar-prefetched block columns (paper P3:
+the kernel directs placement).  On TPU the pool blocks are (block, kv, hd)
+tiles whose last dim is lane-aligned, so every gather moves a fully useful
+tile -- the BELL argument applied to serving.
+
+This module is the host-side allocator: free-list, per-sequence tables,
+admission accounting.  `engine.py` consumes it; the device-side assembly is
+`gather_kv` below (pure jnp; the Pallas path reuses the BELL kernel's
+pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    n_blocks: int            # total physical blocks in the pool
+    block_size: int          # tokens per block
+    max_blocks_per_seq: int  # static bound: ceil(max_context / block_size)
+
+
+class BlockAllocator:
+    """Free-list allocator over the physical pool.  O(1) alloc/free."""
+
+    def __init__(self, cfg: PoolConfig):
+        self.cfg = cfg
+        self.free: List[int] = list(range(cfg.n_blocks - 1, -1, -1))
+        self.tables: Dict[int, List[int]] = {}      # seq_id -> block ids
+        self.lengths: Dict[int, int] = {}           # seq_id -> tokens used
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    def blocks_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.cfg.block_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return (self.blocks_needed(n_tokens) <= self.n_free)
+
+    def admit(self, seq_id: int, n_tokens: int) -> List[int]:
+        need = self.blocks_needed(max(n_tokens, 1))
+        if need > self.n_free or need > self.cfg.max_blocks_per_seq:
+            raise MemoryError(
+                f"seq {seq_id}: need {need} blocks, free {self.n_free}")
+        blocks = [self.free.pop() for _ in range(need)]
+        self.tables[seq_id] = blocks
+        self.lengths[seq_id] = n_tokens
+        return blocks
+
+    def extend(self, seq_id: int, n_new_tokens: int = 1) -> bool:
+        """Grow a sequence; returns False when the pool is exhausted
+        (caller must preempt -- scheduler policy, not allocator policy)."""
+        new_len = self.lengths[seq_id] + n_new_tokens
+        need = self.blocks_needed(new_len)
+        table = self.tables[seq_id]
+        while len(table) < need:
+            if not self.free or len(table) >= self.cfg.max_blocks_per_seq:
+                return False
+            table.append(self.free.pop())
+        self.lengths[seq_id] = new_len
+        return True
+
+    def release(self, seq_id: int) -> None:
+        for b in self.tables.pop(seq_id, []):
+            self.free.append(b)
+        self.lengths.pop(seq_id, None)
+
+    def table_array(self, seq_id: int) -> np.ndarray:
+        """Fixed-width block table (padded with 0) for device code."""
+        t = self.tables.get(seq_id, [])
+        out = np.zeros((self.cfg.max_blocks_per_seq,), np.int32)
+        out[: len(t)] = t
+        return out
+
+    def utilization(self) -> float:
+        return 1.0 - self.n_free / self.cfg.n_blocks
+
+
+# ---------------------------------------------------------------------------
+# Device-side paged KV (pure jnp; BELL-pattern block gather)
+# ---------------------------------------------------------------------------
+
+def init_pool(cfg: PoolConfig, n_kv_heads: int, head_dim: int, n_layers: int,
+              dtype=jnp.bfloat16):
+    """Physical pool: (L, n_blocks, block, KVH, hd) for k and v."""
+    shape = (n_layers, cfg.n_blocks, cfg.block_size, n_kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def write_token(pool, layer: int, block_ids: jax.Array, offsets: jax.Array,
+                k_new: jax.Array, v_new: jax.Array):
+    """Scatter one token's KV for a batch of slots.
+
+    block_ids/offsets: (B,) physical block + within-block offset per slot;
+    k_new/v_new: (B, KVH, hd).
+    """
+    k = pool["k"].at[layer, block_ids, offsets].set(
+        k_new.astype(pool["k"].dtype))
+    v = pool["v"].at[layer, block_ids, offsets].set(
+        v_new.astype(pool["v"].dtype))
+    return {"k": k, "v": v}
+
+
+def gather_kv(pool, layer: int, tables: jax.Array):
+    """Assemble per-slot contiguous KV views from the pool.
+
+    tables: (B, max_blocks) physical block ids (0-padded).
+    Returns k, v: (B, max_blocks * block, KVH, hd).
+
+    This is the BELL block-gather: a data-dependent index per (slot, block)
+    selects a dense lane-aligned tile.  The Pallas realization is
+    `kernels/spmv_bell.py`'s scalar-prefetch index_map with KV tiles in
+    place of matrix blocks.
+    """
+    kb = jnp.take(pool["k"][layer], tables, axis=0)  # (B, mb, blk, KVH, hd)
+    vb = jnp.take(pool["v"][layer], tables, axis=0)
+    b, mb, blk, kvh, hd = kb.shape
+    return (kb.reshape(b, mb * blk, kvh, hd),
+            vb.reshape(b, mb * blk, kvh, hd))

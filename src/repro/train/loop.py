@@ -1,0 +1,81 @@
+"""Training step factory: loss -> grads -> optimizer, with microbatching.
+
+The returned step is a pure function suitable for pjit: the launcher wraps
+it with in/out shardings from distributed.sharding and the dry-run lowers
+it with ShapeDtypeStructs.  Gradient accumulation runs as a lax.scan over
+microbatches (activation memory / accum trade-off is a config knob).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import ModelAPI
+from repro.optim import OptimizerConfig, make_optimizer
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    remat: str = "full"           # none | dots | full
+    accum_steps: int = 1          # microbatch count (grad accumulation)
+    log_every: int = 10
+    checkpoint_every: int = 500
+    n_steps: int = 100
+
+
+def make_train_step(api: ModelAPI, tc: TrainConfig
+                    ) -> Callable[[Params, Any, Dict[str, jax.Array]],
+                                  Tuple[Params, Any, Dict[str, jax.Array]]]:
+    _, opt_update = make_optimizer(tc.optimizer)
+
+    def loss_fn(params, batch):
+        return api.loss_fn(params, batch, remat=tc.remat)
+
+    def train_step(params, opt_state, batch):
+        if tc.accum_steps <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            a = tc.accum_steps
+
+            def slice_mb(x):
+                b = x.shape[0]
+                return jnp.moveaxis(
+                    x.reshape((a, b // a) + x.shape[1:]), 0, 0)
+
+            mbs = jax.tree.map(slice_mb, batch)
+
+            def acc_body(carry, mb):
+                loss_acc, grads_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grads_acc = jax.tree.map(
+                    lambda ga, g: ga + g.astype(jnp.float32),
+                    grads_acc, grads)
+                return (loss_acc + loss, grads_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.float32(0.0), zeros), mbs)
+            loss = loss / a
+            grads = jax.tree.map(lambda g: g / a, grads)
+
+        new_params, new_opt_state, metrics = opt_update(grads, opt_state,
+                                                        params)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(api: ModelAPI, tc: TrainConfig, rng) -> Tuple[Params, Any]:
+    params = api.init(rng)
+    opt_init, _ = make_optimizer(tc.optimizer)
+    return params, opt_init(params)

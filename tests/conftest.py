@@ -1,0 +1,14 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here -- smoke tests and benches must see 1 device.
+# Multi-device behaviour is tested via subprocess in test_multidevice.py.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")

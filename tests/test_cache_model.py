@@ -1,0 +1,97 @@
+"""Cache model: Table I exact, paper findings F1-F4, sim cross-validation."""
+import numpy as np
+import pytest
+
+from repro.core.cache_model import (SANDY_BRIDGE, analytic_metrics,
+                                    analytic_metrics_from_profile,
+                                    profile_fd, profile_of, profile_rmat,
+                                    simulate_exact, table1_capacity)
+from repro.core.generators import fd_matrix, rmat_matrix
+
+
+def test_table1_matches_paper_exactly():
+    """Paper Table I numbers, all eight cells."""
+    assert table1_capacity(nnz_per_row=9) == {"L2": 18432, "L3": 1474560}
+    assert table1_capacity(nnz_per_row=8) == {"L2": 18078, "L3": 1446311}
+    par9 = table1_capacity(nnz_per_row=9, parallel=True)
+    assert par9 == {"L2": 294912, "L3": 2949120}
+    par8 = table1_capacity(nnz_per_row=8, parallel=True)
+    assert par8 == {"L2": 289262, "L3": 2892623}
+
+
+def test_f1_fd_miss_rates_low_and_flat():
+    rates = [analytic_metrics(fd_matrix(2 ** k)).l2_miss_rate
+             for k in (12, 16, 18)]
+    assert max(rates) < 0.5
+    big = analytic_metrics_from_profile(profile_fd(2 ** 26))
+    assert big.l2_miss_rate < 0.5 and big.l3_miss_rate < 0.5
+
+
+def test_f1_rmat_l2_plateau_near_paper():
+    big = analytic_metrics_from_profile(profile_rmat(2 ** 24))
+    assert 20.0 < big.l2_miss_rate < 35.0       # paper: ~26
+
+
+def test_f1_l3_jump_past_capacity():
+    small = analytic_metrics(rmat_matrix(2 ** 16))     # fits L3
+    big = analytic_metrics_from_profile(profile_rmat(2 ** 24))
+    assert small.l3_miss_rate < 0.5
+    assert big.l3_miss_rate > 8.0
+
+
+def test_f2_serial_equals_parallel_miss_rate():
+    m = rmat_matrix(2 ** 18)
+    s = analytic_metrics(m, threads=1)
+    p = analytic_metrics(m, threads=16)
+    assert p.l2_miss_rate == pytest.approx(s.l2_miss_rate, rel=0.5)
+
+
+def test_f3_rmat_stalls_dwarf_fd():
+    m_fd = analytic_metrics_from_profile(profile_fd(2 ** 24))
+    m_rm = analytic_metrics_from_profile(profile_rmat(2 ** 24))
+    assert m_rm.l2_stall_frac > 0.6                   # paper: ~0.7 plateau
+    assert m_rm.l2_stall_frac > m_fd.l2_stall_frac
+
+
+def test_f4_thread_scaling_and_ratio():
+    prof_fd = profile_fd(2 ** 26)
+    prof_rm = profile_rmat(2 ** 26)
+    g = [analytic_metrics_from_profile(profile_fd(2 ** 16), threads=t).gflops
+         for t in (1, 2, 4, 8)]
+    for i in range(len(g) - 1):
+        assert g[i + 1] / g[i] == pytest.approx(2.0, rel=0.2)
+    ratio = (analytic_metrics_from_profile(prof_rm, threads=16).gflops
+             / analytic_metrics_from_profile(prof_fd, threads=16).gflops)
+    assert 0.1 < ratio < 0.35                          # paper: ~0.20
+
+
+def test_synthetic_profile_matches_empirical():
+    """The synthetic profiles must track empirical ones where both exist."""
+    for kind, gen, prof_fn in (("fd", fd_matrix, profile_fd),
+                               ("rmat", rmat_matrix, profile_rmat)):
+        emp = analytic_metrics(gen(2 ** 16))
+        syn = analytic_metrics_from_profile(prof_fn(2 ** 16))
+        assert syn.l2_miss_rate == pytest.approx(emp.l2_miss_rate,
+                                                 rel=0.5, abs=0.5), kind
+        assert syn.nnz == pytest.approx(emp.nnz, rel=0.05), kind
+
+
+def test_exact_sim_orders_fd_below_rmat():
+    """Trace-driven simulator agrees with the analytic model's ordering at
+    a size where x exceeds the per-core L2 (the paper's regime)."""
+    n = 2 ** 16          # x = 512 KiB > 256 KiB L2
+    fd_stats = simulate_exact(fd_matrix(n), sweeps=1)
+    rm_stats = simulate_exact(rmat_matrix(n), sweeps=1)
+    fd_rate = fd_stats["l2_demand"] / fd_stats["accesses"]
+    rm_rate = rm_stats["l2_demand"] / rm_stats["accesses"]
+    assert rm_rate > 3 * fd_rate
+    # FD demand misses stay rare (prefetcher + windows reuse)
+    assert fd_rate < 0.03
+
+
+def test_prefetcher_shutoff_for_large_rmat():
+    """Paper §IV-C: DRAM congestion shuts off the prefetcher for R-MAT."""
+    big_rm = analytic_metrics_from_profile(profile_rmat(2 ** 24))
+    big_fd = analytic_metrics_from_profile(profile_fd(2 ** 24))
+    assert big_fd.prefetch_miss_rate > 5.0       # FD prefetcher working
+    assert big_rm.prefetch_miss_rate < big_fd.prefetch_miss_rate

@@ -1,0 +1,79 @@
+"""Data pipeline: determinism, host sharding, resumability."""
+import os
+import tempfile
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.data.pipeline import (DataConfig, PackedFileDataset, SyntheticLM,
+                                 make_pipeline, write_token_file)
+
+
+def _cfg(**kw):
+    base = dict(vocab=1000, seq_len=16, global_batch=8, seed=7)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_batch_is_pure_function_of_step():
+    a = SyntheticLM(_cfg())
+    b = SyntheticLM(_cfg())
+    for step in (0, 5, 1000):
+        np.testing.assert_array_equal(np.asarray(a.batch_at(step)["tokens"]),
+                                      np.asarray(b.batch_at(step)["tokens"]))
+
+
+def test_restart_replays_exactly():
+    pipe = SyntheticLM(_cfg())
+    seen = [np.asarray(next(pipe)["tokens"]) for _ in range(5)]
+    state = pipe.state()
+    more = [np.asarray(next(pipe)["tokens"]) for _ in range(3)]
+    pipe2 = SyntheticLM(_cfg())
+    pipe2.restore(state)
+    replay = [np.asarray(next(pipe2)["tokens"]) for _ in range(3)]
+    for a, b in zip(more, replay):
+        np.testing.assert_array_equal(a, b)
+    del seen
+
+
+def test_hosts_draw_disjoint_streams():
+    h0 = SyntheticLM(_cfg(host_id=0, n_hosts=2))
+    h1 = SyntheticLM(_cfg(host_id=1, n_hosts=2))
+    t0 = np.asarray(h0.batch_at(0)["tokens"])
+    t1 = np.asarray(h1.batch_at(0)["tokens"])
+    assert t0.shape == (4, 16)      # global 8 split across 2 hosts
+    assert not np.array_equal(t0, t1)
+
+
+def test_labels_are_shifted_tokens():
+    b = SyntheticLM(_cfg()).batch_at(0)
+    # tokens/labels come from one (seq_len+1) window
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+def test_packed_file_dataset_roundtrip():
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 500, size=4096).astype(np.uint16)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tokens.bin")
+        write_token_file(path, toks)
+        pipe = make_pipeline(_cfg(global_batch=4), path)
+        assert isinstance(pipe, PackedFileDataset)
+        b = pipe.batch_at(0)
+        np.testing.assert_array_equal(np.asarray(b["tokens"][0]),
+                                      toks[:16].astype(np.int32))
+        # deterministic across instances
+        pipe2 = make_pipeline(_cfg(global_batch=4), path)
+        np.testing.assert_array_equal(np.asarray(pipe2.batch_at(3)["tokens"]),
+                                      np.asarray(pipe.batch_at(3)["tokens"]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(step=st.integers(0, 10_000), host=st.integers(0, 3))
+def test_property_tokens_in_vocab(step, host):
+    pipe = SyntheticLM(_cfg(host_id=host, n_hosts=4))
+    b = pipe.batch_at(step)
+    t = np.asarray(b["tokens"])
+    assert t.min() >= 0 and t.max() < 1000

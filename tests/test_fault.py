@@ -1,0 +1,76 @@
+"""Fault tolerance: heartbeat, stragglers, elastic rescale, supervisor."""
+import pytest
+
+from repro.distributed.fault import (HeartbeatMonitor, StragglerDetector,
+                                     Supervisor, plan_elastic_rescale)
+
+
+def test_heartbeat_detects_dead_worker():
+    hb = HeartbeatMonitor(n_workers=3, timeout_s=10.0)
+    hb.beat(0, 1, now=100.0)
+    hb.beat(1, 1, now=100.0)
+    hb.beat(2, 1, now=100.0)
+    hb.beat(0, 2, now=120.0)
+    hb.beat(1, 2, now=120.0)
+    assert hb.dead_workers(now=120.5) == [2]
+    assert not hb.healthy(now=120.5)
+
+
+def test_heartbeat_never_seen_is_not_dead():
+    hb = HeartbeatMonitor(n_workers=2, timeout_s=1.0)
+    assert hb.healthy(now=1000.0)     # bootstrap grace
+
+
+def test_straggler_detection():
+    sd = StragglerDetector(k=2.0, window=8)
+    for step in range(8):
+        for w in range(4):
+            sd.record(w, 1.0 if w != 3 else 5.0)
+    assert sd.stragglers() == [3]
+    assert "rebalance" in sd.mitigation(3) or "row-block" in sd.mitigation(3)
+
+
+def test_rescale_plan_shrinks_data_axis():
+    plan = plan_elastic_rescale({"pod": 2, "data": 16, "model": 16},
+                                n_devices_now=384)   # lost 128 chips
+    assert plan.new_mesh[0] == 2 and plan.new_mesh[2] == 16
+    assert plan.new_mesh[1] == 8                     # next pow2 below 12
+    assert plan.data_resize == 0.5
+
+
+def test_rescale_plan_single_pod():
+    plan = plan_elastic_rescale({"data": 16, "model": 16},
+                                n_devices_now=128)
+    assert plan.new_mesh == (8, 16)
+
+
+def test_supervisor_restarts_and_succeeds():
+    calls = {"makes": 0, "fails": 0}
+
+    def make_state():
+        calls["makes"] += 1
+        # pretend checkpoint: resumes from the last multiple of 5
+        return {"step": (calls["makes"] - 1) * 0}
+
+    def step_fn(state, step):
+        if step == 3 and calls["fails"] < 2:
+            calls["fails"] += 1
+            raise RuntimeError("boom")
+        return {"step": step + 1}
+
+    sup = Supervisor(max_restarts=3)
+    state = sup.run(make_state, step_fn, n_steps=6)
+    assert state["step"] == 6
+    assert sup.restarts == 2
+
+
+def test_supervisor_gives_up_after_max_restarts():
+    def make_state():
+        return {"step": 0}
+
+    def step_fn(state, step):
+        raise RuntimeError("always")
+
+    sup = Supervisor(max_restarts=2)
+    with pytest.raises(RuntimeError, match="exceeded"):
+        sup.run(make_state, step_fn, n_steps=3)

@@ -1,0 +1,88 @@
+"""Matrix generators: the paper's FD and R-MAT families."""
+import numpy as np
+
+from repro.core.generators import (banded_matrix, fd_matrix, paper_sizes,
+                                   rmat_matrix, uniform_random_matrix)
+from repro.core.structure import analyze
+
+
+def test_fd_has_exactly_nine_nnz_per_row():
+    csr = fd_matrix(1024)
+    lengths = csr.row_lengths()
+    assert (lengths == 9).all()
+    assert csr.nnz == 9 * 1024        # paper footnote 1: nnz = 9 * 2^k
+
+
+def test_fd_three_bands_of_three():
+    """Rows away from the wrap boundary see three groups of three adjacent
+    columns (paper Fig. 2)."""
+    csr = fd_matrix(1024)   # 32 x 32 grid
+    indptr = np.asarray(csr.indptr)
+    cols = np.sort(np.asarray(csr.indices)[indptr[66]: indptr[67]])
+    gaps = np.diff(cols)
+    # two large gaps split the 9 columns into 3 bands of 3 adjacent cols
+    assert (gaps > 1).sum() == 2
+    assert (gaps == 1).sum() == 6
+
+
+def test_rmat_avg_nnz_close_to_target():
+    csr = rmat_matrix(4096, nnz_per_row=8)
+    avg = csr.nnz / csr.n_rows
+    assert 5.0 < avg <= 8.0   # dedup removes duplicate edges
+
+
+def test_rmat_power_law_column_degrees():
+    """Unpermuted R-MAT columns must be heavy-tailed: the top 1% of columns
+    get far more than 1% of nonzeros."""
+    csr = rmat_matrix(4096, permute=False)
+    deg = np.bincount(np.asarray(csr.indices), minlength=4096)
+    deg = np.sort(deg)[::-1]
+    top1pct = deg[: 41].sum() / max(deg.sum(), 1)
+    assert top1pct > 0.05
+
+
+def test_rmat_permutation_preserves_degree_multiset():
+    a = rmat_matrix(1024, permute=False, seed=7)
+    b = rmat_matrix(1024, permute=True, seed=7)
+    da = np.sort(np.bincount(np.asarray(a.indices), minlength=1024))
+    db = np.sort(np.bincount(np.asarray(b.indices), minlength=1024))
+    np.testing.assert_array_equal(da, db)
+    assert a.nnz == b.nnz
+
+
+def test_rmat_permutation_balances_rows():
+    """The paper permutes to equalize thread load: with fine-grained blocks
+    the unpermuted power-law clustering shows up as imbalance that the
+    permutation removes."""
+    from repro.core.partition import rowblock_equal
+    unperm = rmat_matrix(4096, permute=False, seed=5)
+    perm = rmat_matrix(4096, permute=True, seed=5)
+    imb_u = rowblock_equal(unperm, 64).imbalance()
+    imb_p = rowblock_equal(perm, 64).imbalance()
+    assert imb_p < imb_u / 2        # permutation removes the clustering
+    assert imb_p < 3.0              # hub ROWS remain (power law)
+    # rowblock_balanced tightens further, down to the single-hub-row floor
+    from repro.core.partition import rowblock_balanced
+    bal = rowblock_balanced(perm, 64)
+    assert bal.imbalance() <= imb_p
+    floor = 1.0 + perm.row_lengths().max() / bal.nnz_per_part.mean()
+    assert bal.imbalance() <= floor + 0.05
+
+
+def test_banded_matrix_bandwidth_respected():
+    csr = banded_matrix(512, bandwidth=16)
+    rows = np.repeat(np.arange(512), csr.row_lengths())
+    assert np.abs(np.asarray(csr.indices) - rows).max() <= 16
+
+
+def test_structure_kinds_detected():
+    assert analyze(fd_matrix(1024)).kind == "banded"
+    assert analyze(rmat_matrix(1024)).kind in ("unstructured", "blocked")
+    assert analyze(uniform_random_matrix(1024)).kind in (
+        "unstructured", "blocked")
+
+
+def test_paper_sizes_range():
+    sizes = paper_sizes()
+    assert sizes[0] == 2 ** 11 and sizes[-1] == 2 ** 26
+    assert len(sizes) == 16

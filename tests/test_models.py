@@ -1,0 +1,184 @@
+"""Per-arch smoke tests (all ten assigned architectures, reduced configs)
++ the decode-vs-forward equivalence test that validates the cache path.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, CONFIGS, applicable_shapes
+from repro.models import registry, transformer
+from repro.models.registry import get_model, random_train_batch
+
+ALL_ARCHS = sorted(CONFIGS)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_loss(arch):
+    """REDUCED config: one loss evaluation, finite, correct shapes."""
+    cfg = CONFIGS[arch].reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = random_train_batch(cfg, 2, 32)
+    loss = api.loss_fn(params, batch, remat="none")
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "kimi-k2-1t-a32b",
+                                  "rwkv6-3b", "jamba-v0.1-52b"])
+def test_smoke_train_step_no_nans(arch):
+    cfg = CONFIGS[arch].reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = random_train_batch(cfg, 2, 16)
+    loss, grads = jax.value_and_grad(
+        lambda p: api.loss_fn(p, batch, remat="none"))(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0.0
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "stablelm-1.6b",
+                                  "rwkv6-3b", "jamba-v0.1-52b"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode through the cache must reproduce the full
+    forward pass logits -- the strongest correctness check on the KV /
+    state cache machinery."""
+    cfg = CONFIGS[arch].reduced()
+    if cfg.moe is not None:
+        # capacity drops depend on how many tokens share a dispatch call --
+        # a real semantic difference between prefill and decode, not a
+        # cache bug; give headroom so no token drops either way.
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(1))
+    toks = jnp.asarray(np.random.default_rng(2)
+                       .integers(0, cfg.vocab, (2, 12)), dtype=jnp.int32)
+
+    # full forward logits
+    x, _, _ = transformer.forward(params, cfg, tokens=toks, remat="none")
+    full_logits = x @ transformer.head_matrix(params, cfg)
+
+    # prefill on the first 6, decode the next 6 one at a time
+    logits_p, cache = api.prefill(params, {"tokens": toks[:, :6]}, 16)
+    got = [logits_p[:, -1]]
+    for t in range(6, 12):
+        step_logits, cache = api.decode_step(params, cache, toks[:, t:t + 1])
+        got.append(step_logits[:, 0])
+    got = jnp.stack(got, axis=1)          # (2, 7, V): positions 5..11
+    want = full_logits[:, 5:12]
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=0.08, atol=0.08)
+
+
+def test_whisper_decode_matches_forward():
+    cfg = CONFIGS["whisper-large-v3"].reduced()
+    from repro.models import whisper
+    params = whisper.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    frames = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model))
+                         .astype(np.float32)).astype(jnp.bfloat16)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 8)), dtype=jnp.int32)
+
+    enc = whisper.encode(params, cfg, frames, remat="none")
+    x, _ = whisper.decode(params, cfg, toks, enc, remat="none")
+    want = (x @ params["tok_embed"].T)[:, 3:8]
+
+    logits_p, cache = whisper.prefill(
+        params, cfg, {"frames": frames, "tokens": toks[:, :4]}, 16)
+    got = [logits_p[:, -1]]
+    for t in range(4, 8):
+        sl, cache = whisper.decode_step(params, cfg, cache, toks[:, t:t + 1])
+        got.append(sl[:, 0])
+    got = jnp.stack(got, axis=1)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=0.08, atol=0.08)
+
+
+def test_per_slot_positions_mixed_depth():
+    """Two slots at different cache depths must each attend to their own
+    prefix only (the serving correctness property)."""
+    cfg = CONFIGS["stablelm-1.6b"].reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(4))
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(rng.integers(0, cfg.vocab, (1, 9)), dtype=jnp.int32)
+    b = jnp.asarray(rng.integers(0, cfg.vocab, (1, 5)), dtype=jnp.int32)
+
+    # batched mixed-depth: prefill a[0:8] in slot0, b[0:4] in slot1
+    cache = transformer.init_cache(cfg, 2, 16)
+    sub_a = transformer.slice_cache(cache, 0)
+    _, ca, _ = transformer.forward(params, cfg, tokens=a[:, :8],
+                                   cache=sub_a, remat="none")
+    cache = transformer.merge_cache(cache, ca, 0)
+    sub_b = transformer.slice_cache(cache, 1)
+    _, cb, _ = transformer.forward(params, cfg, tokens=b[:, :4],
+                                   cache=sub_b, remat="none")
+    cache = transformer.merge_cache(cache, cb, 1)
+    toks = jnp.concatenate([a[:, 8:9], b[:, 4:5]], axis=0)
+    logits, _ = api.decode_step(params, cache, toks)
+
+    # reference: each sequence decoded alone
+    _, cache_a = api.prefill(params, {"tokens": a[:, :8]}, 16)
+    ref_a, _ = api.decode_step(params, cache_a, a[:, 8:9])
+    _, cache_b = api.prefill(params, {"tokens": b[:, :4]}, 16)
+    ref_b, _ = api.decode_step(params, cache_b, b[:, 4:5])
+
+    np.testing.assert_allclose(np.asarray(logits[0], np.float32),
+                               np.asarray(ref_a[0], np.float32),
+                               rtol=0.08, atol=0.08)
+    np.testing.assert_allclose(np.asarray(logits[1], np.float32),
+                               np.asarray(ref_b[0], np.float32),
+                               rtol=0.08, atol=0.08)
+
+
+def test_configs_match_assignment_table():
+    """Spot-check the published numbers the assignment pins."""
+    c = CONFIGS["kimi-k2-1t-a32b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == \
+        (61, 7168, 64, 8)
+    assert c.vocab == 163840 and c.moe.n_experts == 384 and c.moe.top_k == 8
+    c = CONFIGS["qwen2-72b"]
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == \
+        (80, 8192, 29568, 152064)
+    assert c.qkv_bias
+    c = CONFIGS["whisper-large-v3"]
+    assert c.is_encdec and c.n_encoder_layers == 32 and c.vocab == 51866
+    c = CONFIGS["jamba-v0.1-52b"]
+    assert c.block_pattern.count("attn") == 1 and len(c.block_pattern) == 8
+    assert c.moe.n_experts == 16 and c.moe.top_k == 2
+    c = CONFIGS["rwkv6-3b"]
+    assert c.block_pattern == ("rwkv",) and c.subquadratic
+
+
+def test_applicable_shapes_long500k_rule():
+    """long_500k only for sub-quadratic archs (SSM/hybrid)."""
+    subq = {a for a in ALL_ARCHS
+            if "long_500k" in applicable_shapes(CONFIGS[a])}
+    assert subq == {"rwkv6-3b", "jamba-v0.1-52b"}
+
+
+def test_param_counts_in_expected_range():
+    """Sanity on the config-derived parameter counts (order of magnitude)."""
+    assert 0.9e12 < CONFIGS["kimi-k2-1t-a32b"].param_count() < 1.4e12
+    assert 25e9 < CONFIGS["kimi-k2-1t-a32b"].active_param_count() < 45e9
+    assert 60e9 < CONFIGS["qwen2-72b"].param_count() < 85e9
+    assert 1.2e9 < CONFIGS["stablelm-1.6b"].param_count() < 2.2e9
+    assert 350e9 < CONFIGS["arctic-480b"].param_count() < 560e9
+
+
+def test_input_specs_cover_all_cells():
+    """input_specs must build for every (arch x applicable shape)."""
+    from repro.configs import SHAPES
+    for arch in ALL_ARCHS:
+        cfg = CONFIGS[arch]
+        for shape_name in applicable_shapes(cfg):
+            specs = registry.input_specs(cfg, SHAPES[shape_name])
+            assert specs, (arch, shape_name)

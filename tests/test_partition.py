@@ -1,0 +1,56 @@
+"""Partitioners: load balance + stripe reassembly property."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.formats import CSR
+from repro.core.generators import rmat_matrix
+from repro.core.partition import (col_stripes, rowblock_balanced,
+                                  rowblock_equal, sort_rows_by_nnz)
+from repro.core.spmv import spmv
+
+
+def test_balanced_beats_equal_on_skewed():
+    csr = rmat_matrix(2048, permute=False, seed=2)   # skewed rows
+    eq = rowblock_equal(csr, 8)
+    bal = rowblock_balanced(csr, 8)
+    assert bal.imbalance() <= eq.imbalance() + 1e-9
+    assert bal.imbalance() < 1.6
+
+
+def test_rowblocks_cover_all_rows():
+    csr = rmat_matrix(1024, seed=3)
+    part = rowblock_balanced(csr, 7)
+    assert part.starts[0] == 0 and part.starts[-1] == 1024
+    assert (np.diff(part.starts) >= 0).all()
+    assert part.nnz_per_part.sum() == csr.nnz
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([64, 128, 256]), stripes=st.integers(1, 6),
+       seed=st.integers(0, 50))
+def test_property_stripe_reassembly(n, stripes, seed):
+    """y = sum_s A_s @ x_s must equal A @ x for any striping."""
+    csr = rmat_matrix(n, seed=seed)
+    x = np.random.default_rng(seed).normal(size=n).astype(np.float32)
+    want = np.asarray(csr.to_dense()) @ x
+    parts = col_stripes(csr, stripes)
+    stripe_w = -(-n // stripes)
+    got = np.zeros(n, np.float32)
+    for s, sub in enumerate(parts):
+        lo = s * stripe_w
+        hi = min(lo + stripe_w, n)
+        got += np.asarray(spmv(sub, jnp.asarray(x[lo:hi])))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_sort_rows_by_nnz_permutation_correct():
+    csr = rmat_matrix(256, permute=False, seed=4)
+    sorted_csr, perm = sort_rows_by_nnz(csr)
+    lengths = sorted_csr.row_lengths()
+    assert (np.diff(lengths) <= 0).all()          # descending
+    x = np.random.default_rng(0).normal(size=256).astype(np.float32)
+    y_perm = np.asarray(spmv(sorted_csr, jnp.asarray(x)))
+    y = np.asarray(spmv(csr, jnp.asarray(x)))
+    np.testing.assert_allclose(y_perm, y[perm], rtol=1e-4, atol=1e-4)

@@ -1,0 +1,92 @@
+"""HLO cost analyzer: golden parsing, trip-count folding, dot flops."""
+import textwrap
+
+import pytest
+
+from repro.roofline import analysis, hlo_costs
+
+GOLDEN = textwrap.dedent("""\
+    HloModule test
+
+    %body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+      %w = f32[16,16]{1,0} constant({...})
+      %y = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16]{1,0} all-reduce(%y), replica_groups={}, to_apply=%add
+      %one = s32[] constant(1)
+      %i2 = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,16]) tuple(%i2, %ar)
+    }
+
+    %cond (p2: (s32[], f32[8,16])) -> pred[] {
+      %p2 = (s32[], f32[8,16]) parameter(0)
+      %i3 = s32[] get-tuple-element(%p2), index=0
+      %lim = s32[] constant(10)
+      ROOT %lt = pred[] compare(%i3, %lim), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+      %a = f32[8,16]{1,0} parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[8,16]) tuple(%zero, %a)
+      %loop = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+      %big = f32[32,64]{1,0} constant({...})
+      %v = f32[64,8]{1,0} constant({...})
+      %final = f32[32,8]{1,0} dot(%big, %v), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      ROOT %out = f32[8,16]{1,0} get-tuple-element(%loop), index=1
+    }
+""")
+
+
+def test_shape_parsing():
+    assert hlo_costs.shape_elems_bytes("f32[8,16]{1,0}") == (128, 512)
+    assert hlo_costs.shape_elems_bytes("bf16[4]") == (4, 8)
+    assert hlo_costs.shape_elems_bytes("(s32[], f32[2,2]{1,0})") == (5, 20)
+    assert hlo_costs.shape_elems_bytes("pred[]") == (1, 1)
+
+
+def test_module_parse_finds_computations():
+    comps = hlo_costs.parse_module(GOLDEN)
+    assert set(comps) == {"body", "cond", "main"}
+    assert any(op.opcode == "while" for op in comps["main"].ops)
+
+
+def test_trip_count_folding():
+    mc = hlo_costs.module_costs(GOLDEN)
+    # loop dot: 2*8*16*16 = 4096 flops, x10 trips = 40960
+    # final dot: 2*32*8*64 = 32768
+    dot_flops = 10 * 4096 + 32768
+    # elementwise adds in body: 1 flop x10; compare in cond: 1 x11
+    assert mc.flops == pytest.approx(dot_flops, rel=0.01)
+
+
+def test_collective_inside_loop_multiplied():
+    mc = hlo_costs.module_costs(GOLDEN)
+    # all-reduce of f32[8,16] = 512B operand, wire 2x, x10 trips
+    assert mc.collective_bytes["all-reduce"] == pytest.approx(
+        2 * 512 * 10)
+    assert mc.collective_counts["all-reduce"] == 10
+
+
+def test_analysis_bottleneck_selection():
+    rl = analysis.analyze({}, GOLDEN, n_chips=4, model_flops=1e6)
+    assert rl.bottleneck in ("compute", "memory", "collective")
+    assert rl.flops > 0 and rl.hbm_bytes > 0
+    # with these tiny sizes, memory dominates compute
+    assert rl.memory_s > rl.compute_s
+
+
+def test_unknown_trip_count_flagged():
+    hlo = GOLDEN.replace(', backend_config={"known_trip_count":{"n":"10"}}',
+                         "")
+    mc = hlo_costs.module_costs(hlo)
+    assert mc.unknown_trip_counts == 1
+    # body counted once without the multiplier
+    assert mc.collective_counts["all-reduce"] == 1
+
+
+def test_model_flops_helpers():
+    assert analysis.model_flops_train(1e9, 1e6) == 6e15
+    assert analysis.model_flops_decode(1e9, 128) == pytest.approx(2.56e11)

@@ -1,0 +1,47 @@
+"""TPU traffic model invariants (hardware-adaptation layer)."""
+import pytest
+
+from repro.core import traffic
+from repro.core.formats import BELL
+from repro.core.generators import banded_matrix, fd_matrix, rmat_matrix
+
+
+def test_colblock_beats_gather_always():
+    for gen in (fd_matrix, rmat_matrix):
+        csr = gen(1 << 12)
+        g = traffic.gather_policy(csr)
+        c = traffic.col_blocked_policy(csr)
+        assert c.bytes_per_nnz < g.bytes_per_nnz
+        assert c.roofline_gflops > g.roofline_gflops
+
+
+def test_stream_policy_optimal_for_banded():
+    csr = fd_matrix(1 << 12)
+    s = traffic.stream_policy(csr, bandwidth=70)
+    # theoretical floor: val+idx bytes per nnz = 8
+    assert 8.0 <= s.bytes_per_nnz < 16.0
+
+
+def test_bell_quality_tracks_density():
+    csr_good = banded_matrix(1 << 12, 8)      # dense-ish blocks
+    csr_bad = rmat_matrix(1 << 12)            # scattered blocks
+    b_good = traffic.bell_policy(BELL.from_csr(csr_good).density(), csr_good)
+    b_bad = traffic.bell_policy(BELL.from_csr(csr_bad).density(), csr_bad)
+    assert b_good.roofline_gflops > b_bad.roofline_gflops
+
+
+def test_roofline_never_exceeds_peak():
+    csr = fd_matrix(1 << 10)
+    for rep in (traffic.gather_policy(csr),
+                traffic.col_blocked_policy(csr),
+                traffic.stream_policy(csr, 40)):
+        assert rep.roofline_gflops <= traffic.TPU_V5E.peak_flops_bf16 / 1e9
+
+
+def test_spmv_is_memory_bound_on_v5e():
+    """The paper's kernel stays bandwidth-bound on TPU too: even the best
+    policy's arithmetic intensity is far below the v5e ridge point."""
+    csr = fd_matrix(1 << 12)
+    best = traffic.col_blocked_policy(csr)
+    ridge = traffic.TPU_V5E.peak_flops_bf16 / traffic.TPU_V5E.hbm_bw
+    assert best.arithmetic_intensity < ridge / 100

@@ -1,0 +1,80 @@
+"""Training loop: accumulation equivalence, end-to-end loss descent,
+launcher fault-tolerance integration."""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS
+from repro.models.registry import get_model, random_train_batch
+from repro.optim import OptimizerConfig
+from repro.train.loop import TrainConfig, init_train_state, make_train_step
+
+
+def _setup(accum=1, lr=1e-3):
+    cfg = CONFIGS["stablelm-1.6b"].reduced()
+    api = get_model(cfg)
+    tc = TrainConfig(optimizer=OptimizerConfig(lr=lr, warmup_steps=1,
+                                               total_steps=100),
+                     remat="none", accum_steps=accum)
+    params, opt = init_train_state(api, tc, jax.random.PRNGKey(0))
+    return cfg, api, tc, params, opt
+
+
+def test_accumulation_matches_single_batch():
+    """accum=2 over a batch == accum=1 over the same batch (same update)."""
+    cfg, api, tc1, params, opt = _setup(accum=1)
+    _, _, tc2, params2, opt2 = _setup(accum=2)
+    batch = random_train_batch(cfg, 4, 16)
+    p1, _, m1 = make_train_step(api, tc1)(params, opt, batch)
+    p2, _, m2 = make_train_step(api, tc2)(params2, opt2, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-3)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-2, atol=5e-3)
+
+
+def test_loss_descends_on_learnable_data():
+    """Fixed repeating batch -> the model must memorize it."""
+    cfg, api, tc, params, opt = _setup(lr=3e-3)
+    step = jax.jit(make_train_step(api, tc))
+    batch = random_train_batch(cfg, 2, 16, seed=1)
+    losses = []
+    for _ in range(30):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5
+
+
+def test_metrics_contract():
+    cfg, api, tc, params, opt = _setup()
+    batch = random_train_batch(cfg, 2, 16)
+    _, _, metrics = make_train_step(api, tc)(params, opt, batch)
+    assert set(metrics) >= {"loss", "grad_norm", "lr"}
+    assert all(np.isfinite(float(v)) for v in metrics.values())
+
+
+def test_launcher_crash_restart_deterministic():
+    """launch.train with an injected crash must resume from the checkpoint
+    and reach the same final state as an uninterrupted run."""
+    from repro.launch import train as T
+
+    def run(fail_at, ckpt):
+        return T.main([
+            "--arch", "stablelm-1.6b", "--reduced",
+            "--steps", "12", "--batch", "2", "--seq", "16",
+            "--ckpt-dir", ckpt, "--ckpt-every", "4",
+            "--log-every", "100", "--fail-at-step", str(fail_at),
+        ])
+
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        clean = run(-1, d1)
+        crashed = run(7, d2)
+    # identical last-step losses (deterministic data replay)
+    assert clean[-1][0] == crashed[-1][0]
+    assert clean[-1][1] == pytest.approx(crashed[-1][1], rel=1e-5)

@@ -1,0 +1,151 @@
+"""§Perf knobs: every optimized code path must match its baseline path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS
+from repro.distributed.api import use_mesh
+from repro.launch.mesh import make_local_mesh
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R
+from repro.models import tuning
+from repro.models.common import _sdpa_chunked
+
+
+@pytest.fixture(autouse=True)
+def _restore_profile():
+    yield
+    tuning.set_profile("optimized")
+
+
+def test_profiles_cover_all_knobs():
+    base = tuning._PROFILES["baseline"]
+    opt = tuning._PROFILES["optimized"]
+    assert set(base) == set(opt)
+    tuning.set_profile("baseline")
+    assert not tuning.attn_chunk_remat
+    tuning.set_profile("optimized")
+    assert tuning.attn_chunk_remat
+
+
+def test_causal_unroll_exact():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 512, 8, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 512, 4, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 512, 4, 32)).astype(np.float32))
+    tuning.set_knob("causal_chunk_unroll", False)
+    a = _sdpa_chunked(q, k, v, causal=True, window=None, q_offset=0,
+                      chunk=128)
+    tuning.set_knob("causal_chunk_unroll", True)
+    b = _sdpa_chunked(q, k, v, causal=True, window=None, q_offset=0,
+                      chunk=128)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rwkv_chunked_matches_sequential():
+    cfg = CONFIGS["rwkv6-3b"].reduced()
+    p = R.init_rwkv_time(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 512, cfg.d_model),
+                          jnp.float32)
+    tuning.set_knob("rwkv_chunked_scan", False)
+    y_seq, _ = R.apply_rwkv_time(p, cfg, x)
+    tuning.set_knob("rwkv_chunked_scan", True)
+    y_chk, _ = R.apply_rwkv_time(p, cfg, x)
+    err = float(jnp.abs(y_seq - y_chk).max())
+    assert err / float(jnp.abs(y_seq).max()) < 1e-4
+
+
+def test_rwkv_chunked_gradients_close():
+    cfg = CONFIGS["rwkv6-3b"].reduced()
+    p = R.init_rwkv_time(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 512, cfg.d_model),
+                          jnp.float32)
+
+    def loss(p, x):
+        y, _ = R.apply_rwkv_time(p, cfg, x)
+        return jnp.sum(y ** 2)
+
+    tuning.set_knob("rwkv_chunked_scan", False)
+    g_seq = jax.grad(loss)(p, x)
+    tuning.set_knob("rwkv_chunked_scan", True)
+    g_chk = jax.grad(loss)(p, x)
+    for a, b in zip(jax.tree.leaves(g_seq), jax.tree.leaves(g_chk)):
+        scale = float(jnp.abs(a.astype(jnp.float32)).max()) + 1e-6
+        err = float(jnp.abs(a.astype(jnp.float32)
+                            - b.astype(jnp.float32)).max())
+        assert err / scale < 5e-3
+
+
+def test_wkv_chunked_strong_decay_bounded_error():
+    """The log-decay floor only distorts already-dead contributions."""
+    from repro.models.rwkv6 import _wkv_chunked
+    rng = np.random.default_rng(2)
+    b, s, h, hd = 1, 512, 2, 16
+    r = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    lw = jnp.asarray(-rng.uniform(0.01, 6.0, size=(b, s, h, hd))
+                     .astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(h, hd)).astype(np.float32))
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, lwt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhi,bhij->bhj", rt, S + u[..., None] * kv)
+        return jnp.exp(lwt)[..., None] * S + kv, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, lw))
+    S_ref, outs = jax.lax.scan(step, s0, xs)
+    ref = jnp.moveaxis(outs, 0, 1)
+    S_got, got = _wkv_chunked(r, k, v, lw, u, s0, 256)
+    rel = (float(jnp.abs(got.reshape(ref.shape) - ref).max())
+           / float(jnp.abs(ref).max()))
+    assert rel < 0.05                      # pathological uniform-strong decay
+    np.testing.assert_allclose(np.asarray(S_got), np.asarray(S_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_moe_decode_weight_stationary_parity():
+    cfg = CONFIGS["jamba-v0.1-52b"].reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 1, cfg.d_model),
+                          dtype=jnp.bfloat16)
+    y_ref, _ = MOE.apply_moe(p, cfg, x)
+    with use_mesh(make_local_mesh()):
+        y_ws, _ = MOE.apply_moe_decode(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y_ws, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+def test_moe_a2a_parity_single_device():
+    cfg = CONFIGS["kimi-k2-1t-a32b"].reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          dtype=jnp.bfloat16)
+    y_ref, _ = MOE.apply_moe(p, cfg, x)
+    with use_mesh(make_local_mesh()):
+        y_a2a, _ = MOE.apply_moe_a2a(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y_a2a, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+def test_baseline_profile_still_trains():
+    """The paper-faithful lowering profile must remain runnable."""
+    tuning.set_profile("baseline")
+    from repro.models.registry import get_model, random_train_batch
+    cfg = CONFIGS["stablelm-1.6b"].reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = random_train_batch(cfg, 2, 16)
+    loss = api.loss_fn(params, batch, remat="none")
+    assert bool(jnp.isfinite(loss))
