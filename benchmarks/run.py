@@ -16,14 +16,16 @@ def main(argv=None) -> None:
     ap.add_argument("--fast", action="store_true",
                     help="cap empirical matrices at 2^16 rows")
     ap.add_argument("--only", default=None,
-                    help="comma list: paper,kernels,traffic,moe,serve")
+                    help="comma list: paper,kernels,traffic,moe,serve,"
+                         "telemetry")
     args = ap.parse_args(argv)
 
     from . import common
     if args.fast:
         common.EMPIRICAL_MAX_LOG2 = 16
 
-    want = set((args.only or "paper,kernels,traffic,moe,serve").split(","))
+    want = set((args.only
+                or "paper,kernels,traffic,moe,serve,telemetry").split(","))
     t0 = time.time()
 
     if "paper" in want:
@@ -41,6 +43,9 @@ def main(argv=None) -> None:
     if "serve" in want:
         from . import serve_bench
         serve_bench.main()
+    if "telemetry" in want:
+        from . import telemetry_bench
+        telemetry_bench.main()
 
     print(f"# benchmarks.run completed in {time.time()-t0:.1f}s",
           file=sys.stderr)

@@ -1,12 +1,13 @@
-"""Fault-tolerant sharded checkpointing (msgpack + zstd, async commit).
+"""Fault-tolerant sharded checkpointing (msgpack + zstd/zlib, async commit).
 
 Layout (one directory per step):
 
     ckpt_dir/
       step_000123/
-        manifest.msgpack        # tree structure, shapes, dtypes, shard map
+        manifest.msgpack        # tree structure, shapes, dtypes, shard map,
+                                # compression codec
         shard_00000.bin.zst     # concatenated leaf buffers for host 0
-        ...
+        ...                     # (.bin.zlib when zstandard is unavailable)
         COMMITTED               # written LAST -> crash-safe commit marker
 
 Design points for the 1000+-node story:
@@ -36,9 +37,50 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ModuleNotFoundError:          # optional dep (requirements-dev.txt)
+    zstd = None
+
+import zlib
 
 Params = Any
+
+# Codec registry: name -> (compress, decompress).  The codec used at save
+# time is recorded in the manifest so restore works regardless of which
+# codecs the restoring host has installed (zlib is always available).
+_CODECS: Dict[str, Tuple[Any, Any]] = {
+    "zlib": (lambda b: zlib.compress(b, 3), zlib.decompress),
+}
+if zstd is not None:
+    _CODECS["zstd"] = (
+        lambda b: zstd.ZstdCompressor(level=3).compress(b),
+        lambda b: zstd.ZstdDecompressor().decompress(b),
+    )
+
+# shard-file extensions are fixed per codec name, independent of whether the
+# codec is importable here (restore must locate files it cannot decompress
+# in order to raise a useful error)
+_EXTS = {"zstd": "zst", "zlib": "zlib"}
+
+DEFAULT_CODEC = "zstd" if zstd is not None else "zlib"
+
+
+def compress_payload(payload: bytes, codec: str = DEFAULT_CODEC) -> bytes:
+    return _CODECS[codec][0](payload)
+
+
+def decompress_payload(buf: bytes, codec: str) -> bytes:
+    if codec not in _CODECS:
+        raise ModuleNotFoundError(
+            f"checkpoint was written with codec {codec!r}, which is not "
+            f"available here (have: {sorted(_CODECS)})")
+    return _CODECS[codec][1](buf)
+
+
+def shard_filename(shard_id: int, codec: str) -> str:
+    return f"shard_{shard_id:05d}.bin.{_EXTS.get(codec, codec)}"
 
 _FLOAT_KINDS = {"bfloat16"}
 
@@ -63,11 +105,14 @@ def _flatten_with_paths(tree) -> Dict[str, Any]:
 
 class CheckpointManager:
     def __init__(self, ckpt_dir: str, host_id: int = 0, n_hosts: int = 1,
-                 keep: int = 3):
+                 keep: int = 3, codec: str = DEFAULT_CODEC):
+        if codec not in _CODECS:
+            raise ValueError(f"unknown codec {codec!r} (have {sorted(_CODECS)})")
         self.dir = ckpt_dir
         self.host_id = host_id
         self.n_hosts = n_hosts
         self.keep = keep
+        self.codec = codec
         self._thread: Optional[threading.Thread] = None
         os.makedirs(ckpt_dir, exist_ok=True)
 
@@ -95,14 +140,15 @@ class CheckpointManager:
                     "shard": self.host_id,
                 })
                 payload.extend(buf)
-            comp = zstd.ZstdCompressor(level=3).compress(bytes(payload))
+            comp = compress_payload(bytes(payload), self.codec)
             shard_path = os.path.join(
-                step_dir, f"shard_{self.host_id:05d}.bin.zst")
+                step_dir, shard_filename(self.host_id, self.codec))
             with open(shard_path + ".tmp", "wb") as f:
                 f.write(comp)
             os.replace(shard_path + ".tmp", shard_path)
             manifest = {
                 "step": step, "n_hosts": self.n_hosts,
+                "codec": self.codec,
                 "treedef": str(treedef), "entries": entries,
             }
             mpath = os.path.join(step_dir, "manifest.msgpack")
@@ -158,13 +204,15 @@ class CheckpointManager:
         step_dir = os.path.join(self.dir, f"step_{step:09d}")
         with open(os.path.join(step_dir, "manifest.msgpack"), "rb") as f:
             manifest = msgpack.unpackb(f.read())
+        # manifests written before the codec field default to zstd
+        codec = manifest.get("codec", "zstd")
         shards: Dict[int, bytes] = {}
 
         def shard_bytes(i: int) -> bytes:
             if i not in shards:
-                path = os.path.join(step_dir, f"shard_{i:05d}.bin.zst")
+                path = os.path.join(step_dir, shard_filename(i, codec))
                 with open(path, "rb") as f:
-                    shards[i] = zstd.ZstdDecompressor().decompress(f.read())
+                    shards[i] = decompress_payload(f.read(), codec)
             return shards[i]
 
         by_key = {e["key"]: e for e in manifest["entries"]}

@@ -7,7 +7,11 @@ VTune, so we reproduce the *methodology*: replay the exact x-access stream
 the SpMV kernel issues (paper Fig. 2) through
 
   1. an exact trace-driven simulator (fully-associative LRU L2/L3 + a
-     sequential-stream prefetcher) -- used at small/medium sizes, and
+     sequential-stream prefetcher) -- used at small/medium sizes; the
+     simulator lives in `repro.telemetry.hierarchy`, which also provides
+     set-associative geometries and the paper's §V candidate mechanisms
+     (victim cache, miss cache, stream buffers) behind the same trace
+     replay, and
   2. an analytic model (Che/working-set approximation over the *empirical*
      line-popularity distribution) -- used across the paper's full size
      sweep 2^11..2^26 rows where trace simulation is intractable.
@@ -23,7 +27,6 @@ paper's serial==parallel miss-rate finding (F2).
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
 
 import numpy as np
 
@@ -80,58 +83,10 @@ class CacheMetrics:
 
 # ---------------------------------------------------------------------------
 # Exact trace-driven simulator (small/medium sizes; tests cross-validate
-# the analytic model against this)
+# the analytic model against this).  The simulator itself lives in
+# repro.telemetry.hierarchy -- this is the legacy entry point, preserved
+# with its original counter dictionary.
 # ---------------------------------------------------------------------------
-
-class _LRU:
-    __slots__ = ("cap", "d")
-
-    def __init__(self, capacity_lines: int):
-        self.cap = max(int(capacity_lines), 1)
-        self.d: OrderedDict = OrderedDict()
-
-    def access(self, line: int) -> bool:
-        """Touch `line`; return True on hit."""
-        d = self.d
-        if line in d:
-            d.move_to_end(line)
-            return True
-        d[line] = True
-        if len(d) > self.cap:
-            d.popitem(last=False)
-        return False
-
-    def insert(self, line: int) -> None:
-        d = self.d
-        if line in d:
-            d.move_to_end(line)
-            return
-        d[line] = True
-        if len(d) > self.cap:
-            d.popitem(last=False)
-
-
-class _StreamPrefetcher:
-    """Next-line prefetcher: tracks up to `n_streams` ascending line streams;
-    on a stream hit it prefetches the next `depth` lines into L2."""
-
-    def __init__(self, n_streams: int = 16, depth: int = 2):
-        self.streams: OrderedDict = OrderedDict()  # last line -> None
-        self.n_streams = n_streams
-        self.depth = depth
-
-    def observe(self, line: int):
-        """Returns list of lines to prefetch."""
-        hits = None
-        if line - 1 in self.streams or line in self.streams:
-            self.streams.pop(line - 1, None)
-            self.streams.pop(line, None)
-            hits = [line + k for k in range(1, self.depth + 1)]
-        self.streams[line] = None
-        if len(self.streams) > self.n_streams:
-            self.streams.popitem(last=False)
-        return hits or []
-
 
 def simulate_exact(csr: CSR, machine: MachineModel = SANDY_BRIDGE,
                    sweeps: int = 2) -> dict:
@@ -140,60 +95,22 @@ def simulate_exact(csr: CSR, machine: MachineModel = SANDY_BRIDGE,
     Replays the full demand stream (matrix values+indices, row pointers, x
     gathers, y writes) through L2 -> L3 with a stream prefetcher filling L2.
     Returns per-sweep counters for the final (warm) sweep.
+
+    Delegates to `repro.telemetry.hierarchy.Hierarchy.default`, which
+    reproduces the historical fully-associative LRU + next-line-prefetcher
+    configuration; richer geometries and the paper's §V mechanisms are
+    available through that module directly.
     """
-    lb = machine.line_bytes
-    l2 = _LRU(machine.l2_bytes // lb)
-    l3 = _LRU(machine.l3_bytes // lb)
-    pf = _StreamPrefetcher(machine.prefetch_streams)
+    from repro.telemetry import events as tev
+    from repro.telemetry.hierarchy import Hierarchy
 
-    indptr = np.asarray(csr.indptr)
-    cols = np.asarray(csr.indices, dtype=np.int64)
-    n = csr.n_rows
-
-    # address-space layout (line ids, disjoint regions)
-    ebytes, ibytes = machine.elem_bytes, machine.idx_bytes
-    x_base = 0
-    x_lines = -(-n * ebytes // lb)
-    val_base = x_base + x_lines + 16
-    val_lines = -(-csr.nnz * ebytes // lb)
-    idx_base = val_base + val_lines + 16
-    idx_lines = -(-csr.nnz * ibytes // lb)
-    ptr_base = idx_base + idx_lines + 16
-    y_base = ptr_base + (-(-(n + 1) * ibytes // lb)) + 16
-
-    stats = None
-    for sweep in range(sweeps):
-        c = dict(l2_demand=0, l3_demand=0, pf_fills=0, accesses=0)
-
-        def access(line: int, c=c, prefetchable: bool = True):
-            c["accesses"] += 1
-            if prefetchable:
-                for pline in pf.observe(line):
-                    if pline not in l2.d:
-                        c["pf_fills"] += 1
-                        l3.insert(pline)
-                        l2.insert(pline)
-            if l2.access(line):
-                return
-            c["l2_demand"] += 1
-            if l3.access(line):
-                return
-            c["l3_demand"] += 1
-
-        for r in range(n):
-            lo, hi = int(indptr[r]), int(indptr[r + 1])
-            access(ptr_base + (r * ibytes) // lb)
-            access(y_base + (r * ebytes) // lb)
-            for p in range(lo, hi):
-                access(val_base + (p * ebytes) // lb)
-                access(idx_base + (p * ibytes) // lb)
-                # x accesses go through the prefetcher like any other load:
-                # the hardware cannot tell operands apart -- FD's windows
-                # form trackable streams, R-MAT's gathers only pollute the
-                # stream table (the paper's mechanism, simulated)
-                access(x_base + (int(cols[p]) * ebytes) // lb)
-        stats = c
-    return stats
+    c = Hierarchy.default(machine).run_spmv(csr, machine, sweeps=sweeps)
+    return {
+        "l2_demand": c[tev.L2_DEMAND_MISS],
+        "l3_demand": c[tev.L3_DEMAND_MISS],
+        "pf_fills": c[tev.L2_PREFETCH_FILL],
+        "accesses": c[tev.ACCESS],
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -104,7 +104,7 @@ def spmv(matrix, x: jax.Array, use_pallas: bool = False,
         if isinstance(matrix, CSR):
             return kops.spmv_csr(matrix, x, interpret=interpret)
         if isinstance(matrix, ELL):
-            return spmv_ell_jnp(matrix, x)   # no dedicated kernel: jnp path
+            return kops.spmv_ell(matrix, x, interpret=interpret)
     if isinstance(matrix, CSR):
         return spmv_csr_jnp(matrix, x)
     if isinstance(matrix, ELL):

@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
   spmv_dia         banded SpMV (FD fast path): pure streaming, no gathers
+  spmv_ell         fixed-width ELL: dense tiles, whole x pinned in VMEM
   spmv_csr         column-blocked CSR: x stripes pinned in VMEM (paper P2+P3)
   spmv_bell        blocked-ELL: data-dependent block-tile gathers (paper P3)
   flash_attention  causal + sliding-window (banded) attention

@@ -1,0 +1,12 @@
+"""Version shims for the Pallas TPU API.
+
+The `compiler_params` container class was renamed across jax releases
+(`TPUCompilerParams` -> `CompilerParams`); resolve whichever the installed
+jax provides so the kernels run on both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

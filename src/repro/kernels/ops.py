@@ -14,11 +14,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import BELL, CSR, DIA
+from repro.core.formats import BELL, CSR, DIA, ELL
 from . import flash_attention as _fa
 from . import spmv_bell as _bell
 from . import spmv_csr as _csr
 from . import spmv_dia as _dia
+from . import spmv_ell as _ell
 
 
 def _round_up(v: int, m: int) -> int:
@@ -50,6 +51,27 @@ def spmv_bell(bell: BELL, x: jax.Array, interpret: bool = True) -> jax.Array:
     y = _bell.spmv_bell_pallas(bell.data, bell.block_cols, xp,
                                interpret=interpret)
     return y[: bell.n_rows]
+
+
+# ---------------------------------------------------------------------------
+# ELL (row-blocked, fixed width)
+# ---------------------------------------------------------------------------
+
+def spmv_ell(ell: ELL, x: jax.Array, bm: int = 128,
+             interpret: bool = True) -> jax.Array:
+    """Row-block the (n_rows, max_nnz) ELL arrays to (B, bm, W) and run the
+    Pallas kernel; padding rows index col 0 with value 0."""
+    n, w = ell.data.shape
+    n_pad = _round_up(n, bm)
+    w_pad = _round_up(max(w, 1), 128)
+    data = jnp.pad(ell.data, ((0, n_pad - n), (0, w_pad - w)))
+    idx = jnp.pad(ell.indices, ((0, n_pad - n), (0, w_pad - w)))
+    b_dim = n_pad // bm
+    xp = jnp.pad(x, (0, _round_up(ell.n_cols, 128) - ell.n_cols))
+    y = _ell.spmv_ell_pallas(data.reshape(b_dim, bm, w_pad),
+                             idx.reshape(b_dim, bm, w_pad).astype(jnp.int32),
+                             xp, interpret=interpret)
+    return y.reshape(-1)[:n]
 
 
 # ---------------------------------------------------------------------------

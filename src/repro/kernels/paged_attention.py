@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -121,7 +123,7 @@ def paged_attention_pallas(q, k_pool, v_pool, tables, lengths,
         ),
         out_shape=jax.ShapeDtypeStruct((bsz, h, hd), q.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
     )(tables.astype(jnp.int32), lengths.astype(jnp.int32), q, kp, vp)

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _kernel(bc_ref, data_ref, x_ref, out_ref):
     k = pl.program_id(1)
@@ -71,7 +73,7 @@ def spmv_bell_pallas(data: jax.Array, block_cols: jax.Array, x: jax.Array,
         ),
         out_shape=jax.ShapeDtypeStruct((nbr, bm), data.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
     )(block_cols.astype(jnp.int32), data, x_tiles)

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _kernel(vals_ref, cols_ref, rowin_ref, x_ref, part_ref, *, bm):
     xg = jnp.take(x_ref[0, :], cols_ref[0, 0, :], axis=0)      # VMEM gather
@@ -70,7 +72,7 @@ def spmv_csr_pallas(vals: jax.Array, cols: jax.Array, rowin: jax.Array,
         out_specs=pl.BlockSpec((1, 1, bm), lambda s, b: (s, b, 0)),
         out_shape=jax.ShapeDtypeStruct((s_dim, b_dim, bm), vals.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
     )(vals, cols, rowin, x_stripes)

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _kernel(offs_ref, band_ref, xlo_ref, xhi_ref, out_ref, *, halo, bn):
     j = pl.program_id(1)
@@ -80,7 +82,7 @@ def spmv_dia_pallas(band: jax.Array, offsets: jax.Array, x: jax.Array,
         ),
         out_shape=jax.ShapeDtypeStruct((1, n), band.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
     )(offsets.astype(jnp.int32), band, xp, xp)

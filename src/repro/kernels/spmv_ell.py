@@ -1,0 +1,66 @@
+"""ELLPACK SpMV Pallas kernel -- fixed-width rows, VPU-friendly gathers.
+
+ELL pads every row to `max_nnz` entries, so the kernel is a dense (bm, W)
+elementwise multiply over a gathered x tile -- no row pointers, no
+segment sum.  That regular shape is what makes ELL the natural middle
+ground between DIA (pure streaming) and CSR (scalar-prefetch indirection):
+the value/index arrays stream block by block (paper P1) while x stays
+pinned in VMEM across the whole grid (paper P2), mirroring the
+column-stripe pinning of `spmv_csr`.
+
+Layout (host prep in ops.py):
+
+  data : (B, bm, W)  f32   rows padded to bm row-blocks, W = max_nnz
+  idx  : (B, bm, W)  int32 column per slot; padding points at col 0 with
+                           data 0.0, so gathered garbage multiplies to 0
+  x    : (1, n_pad)  f32   whole operand vector, block-constant -> pinned
+
+Grid = (B,).  Each step gathers x at (bm * W) indices, multiplies by the
+value tile, and row-sums into y's (1, bm) block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .compat import CompilerParams
+
+
+def _kernel(data_ref, idx_ref, x_ref, y_ref):
+    idx = idx_ref[0]                                       # (bm, W)
+    flat = jnp.take(x_ref[0, :], idx.reshape(-1), axis=0)  # VMEM gather
+    xg = flat.reshape(idx.shape)
+    y_ref[0, :] = (data_ref[0] * xg).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmv_ell_pallas(data: jax.Array, idx: jax.Array, x: jax.Array,
+                    interpret: bool = True) -> jax.Array:
+    """y = A @ x for A in row-blocked ELL layout.
+
+    data / idx : (B, bm, W)
+    x          : (n_pad,) -- padded so every idx is in range
+    returns    : (B, bm)
+    """
+    b_dim, bm, w = data.shape
+    xp = x.reshape(1, -1)
+    y = pl.pallas_call(
+        _kernel,
+        grid=(b_dim,),
+        in_specs=[
+            pl.BlockSpec((1, bm, w), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, bm, w), lambda b: (b, 0, 0)),
+            # whole x pinned: block index constant across the grid
+            pl.BlockSpec((1, xp.shape[1]), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_dim, bm), data.dtype),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+    )(data, idx, xp)
+    return y

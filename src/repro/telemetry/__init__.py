@@ -1,0 +1,27 @@
+"""repro.telemetry — pluggable memory-hierarchy simulation + topdown metrics.
+
+The measurement layer for the paper's §V architecture proposals: instead of
+one hard-coded fully-associative LRU hierarchy, compose set-associative
+levels with victim caches, miss caches, and stream buffers, count named
+hardware events, and roll them up into a topdown metric tree.
+
+  events     named hardware-event counters (L2_DEMAND_MISS, VICTIM_HIT, ...)
+  hierarchy  set-assoc. caches + prefetcher + §V mechanisms; trace replay
+  topdown    staged metric tree (memory-bound -> L3/DRAM-bound, MPKI family)
+  sweep      geometry x mechanism x matrix-kind sweep harness
+  report     CSV / JSON / markdown rendering + FD-vs-R-MAT gap report
+"""
+from . import events, hierarchy, report, sweep, topdown
+from .events import EventCounters, known_events, register_event
+from .hierarchy import (CacheLevel, Hierarchy, HierarchySpec, MissCache,
+                        SequentialPrefetcher, SetAssocCache, StreamBuffers,
+                        VictimCache, spmv_address_trace)
+from .topdown import MetricNode, topdown_tree, topdown_summary
+
+__all__ = [
+    "events", "hierarchy", "report", "sweep", "topdown",
+    "EventCounters", "known_events", "register_event",
+    "CacheLevel", "Hierarchy", "HierarchySpec", "MissCache",
+    "SequentialPrefetcher", "SetAssocCache", "StreamBuffers", "VictimCache",
+    "spmv_address_trace", "MetricNode", "topdown_tree", "topdown_summary",
+]

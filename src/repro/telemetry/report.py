@@ -1,0 +1,102 @@
+"""Rendering for telemetry sweeps: CSV, JSON, markdown, and the gap report.
+
+The gap report is the paper's §V bottom line: for each candidate mechanism,
+how much of the FD-vs-R-MAT performance gap (estimated GFLOPS ratio, L2
+MPKI ratio) does it close relative to the baseline hierarchy?
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, Iterable, List, Sequence
+
+from .sweep import SweepPoint
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def to_csv(points: Sequence[SweepPoint], title: str = "telemetry") -> str:
+    lines = [f"# {title}", ",".join(SweepPoint.header())]
+    for p in points:
+        lines.append(",".join(_fmt(v) for v in p.row()))
+    return "\n".join(lines)
+
+
+def to_json(points: Sequence[SweepPoint]) -> str:
+    out = []
+    for p in points:
+        out.append({
+            "kind": p.kind, "log2n": p.log2n, "nnz": p.nnz,
+            "threads": p.threads, "mechanism": p.mechanism,
+            "spec": p.spec.label(),
+            "summary": p.summary.as_dict(),
+            "counters": p.counters.as_dict(),
+        })
+    return json.dumps(out, indent=2)
+
+
+def to_markdown(points: Sequence[SweepPoint],
+                columns: Sequence[str] = ("l2_mpki", "l3_mpki",
+                                          "pf_coverage", "mech_served_frac",
+                                          "dram_bound", "gflops_est")) -> str:
+    head = ["kind", "log2n", "threads", "mechanism"] + list(columns)
+    lines = ["| " + " | ".join(head) + " |",
+             "|" + "|".join("---" for _ in head) + "|"]
+    for p in points:
+        row = [p.kind, str(p.log2n), str(p.threads), p.mechanism]
+        row += [_fmt(getattr(p.summary, c)) for c in columns]
+        lines.append("| " + " | ".join(row) + " |")
+    return "\n".join(lines)
+
+
+def _index(points: Iterable[SweepPoint]) -> Dict:
+    by = {}
+    for p in points:
+        by[(p.kind, p.log2n, p.threads, p.mechanism)] = p
+    return by
+
+
+def gap_report(points: Sequence[SweepPoint]) -> str:
+    """Per (size, threads, mechanism): the FD / R-MAT gap and how much of
+    the baseline gap the mechanism closes.
+
+    gap        = fd.gflops_est / rmat.gflops_est       (paper: ~5x at 2^24)
+    closed     = 1 - (gap_mech - 1) / (gap_base - 1)   (1.0 -> gap gone)
+    """
+    by = _index(points)
+    keys = sorted({(p.log2n, p.threads) for p in points})
+    mechs = []
+    for p in points:
+        if p.mechanism not in mechs:
+            mechs.append(p.mechanism)
+    lines = ["# FD vs R-MAT gap per mechanism",
+             "log2n,threads,mechanism,fd_gflops,rmat_gflops,gap,"
+             "rmat_l2_mpki,gap_closed_vs_baseline"]
+    for (log2n, threads) in keys:
+        base_gap = None
+        base = (by.get(("fd", log2n, threads, "baseline")),
+                by.get(("rmat", log2n, threads, "baseline")))
+        if all(base):
+            base_gap = (base[0].summary.gflops_est
+                        / max(base[1].summary.gflops_est, 1e-12))
+        for mech in mechs:
+            fd = by.get(("fd", log2n, threads, mech))
+            rm = by.get(("rmat", log2n, threads, mech))
+            if fd is None or rm is None:
+                continue
+            gap = fd.summary.gflops_est / max(rm.summary.gflops_est, 1e-12)
+            closed = ""
+            if base_gap is not None and base_gap > 1.0:
+                closed = f"{1.0 - (gap - 1.0) / (base_gap - 1.0):.3f}"
+            lines.append(",".join([
+                str(log2n), str(threads), mech,
+                f"{fd.summary.gflops_est:.4g}",
+                f"{rm.summary.gflops_est:.4g}",
+                f"{gap:.3f}",
+                f"{rm.summary.l2_mpki:.3f}",
+                closed,
+            ]))
+    return "\n".join(lines)

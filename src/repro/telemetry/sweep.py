@@ -1,0 +1,153 @@
+"""Geometry x mechanism x matrix-structure sweep harness.
+
+Answers the paper's §V question quantitatively: replay the same SpMV
+demand traces (FD and R-MAT, several sizes) through candidate hierarchies
+-- baseline, victim cache, miss cache, stream buffers, combined -- and
+collect topdown metrics for each, so "does a victim cache + stream
+buffers close the FD vs R-MAT gap?" becomes a table instead of an
+argument.
+
+Threads are modeled the way the analytic model does (paper finding F2:
+serial and parallel miss rates match): each core replays its contiguous
+row slice through a private L2, while the shared L3 capacity is divided
+by the cores on the socket.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cache_model import SANDY_BRIDGE, MachineModel
+from repro.core.formats import CSR
+from repro.core.generators import fd_matrix, rmat_matrix
+
+from .events import EventCounters
+from .hierarchy import Hierarchy, HierarchySpec, spmv_address_trace
+from .topdown import TopdownSummary, topdown_summary
+
+# The paper's §V candidate mechanisms, by report label.  Entry sizes follow
+# the related SimpleScalar study (small fully-associative structures).
+MECHANISMS: Dict[str, HierarchySpec] = {
+    "baseline": HierarchySpec(),
+    "victim-cache": HierarchySpec(victim_entries=64),
+    "miss-cache": HierarchySpec(miss_entries=64),
+    "stream-buffers": HierarchySpec(stream_buffers=8, stream_depth=4),
+    "combined": HierarchySpec(victim_entries=64, stream_buffers=8,
+                              stream_depth=4),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One (matrix, mechanism, geometry) cell of a sweep."""
+
+    kind: str                 # 'fd' | 'rmat'
+    log2n: int
+    nnz: int
+    threads: int
+    mechanism: str
+    spec: HierarchySpec
+    counters: EventCounters
+    summary: TopdownSummary
+
+    def row(self) -> List:
+        return ([self.kind, self.log2n, self.nnz, self.threads,
+                 self.mechanism]
+                + [getattr(self.summary, f) for f in TopdownSummary.FIELDS])
+
+    @staticmethod
+    def header() -> List[str]:
+        return (["kind", "log2n", "nnz", "threads", "mechanism"]
+                + list(TopdownSummary.FIELDS))
+
+
+def _matrix(kind: str, n: int, seed: int = 0) -> CSR:
+    return fd_matrix(n, seed=seed) if kind == "fd" \
+        else rmat_matrix(n, seed=seed)
+
+
+def _thread_slice(trace_csr: CSR, threads: int) -> Tuple[CSR, int]:
+    """Representative core's row slice (contiguous, like rowblock_equal)."""
+    if threads <= 1:
+        return trace_csr, trace_csr.nnz
+    n = trace_csr.n_rows
+    rows_per = -(-n // threads)
+    indptr = np.asarray(trace_csr.indptr)
+    lo_r, hi_r = 0, min(rows_per, n)   # core 0 (rows are permuted: typical)
+    lo_p, hi_p = int(indptr[lo_r]), int(indptr[hi_r])
+    sub = CSR(
+        data=trace_csr.data[lo_p:hi_p],
+        indices=trace_csr.indices[lo_p:hi_p],
+        indptr=trace_csr.indptr[lo_r:hi_r + 1] - lo_p,
+        n_rows=hi_r - lo_r, n_cols=trace_csr.n_cols,
+    )
+    return sub, sub.nnz
+
+
+def run_point(csr: CSR, spec: HierarchySpec,
+              machine: MachineModel = SANDY_BRIDGE,
+              threads: int = 1, sweeps: int = 2,
+              trace=None) -> EventCounters:
+    """Replay one matrix through one hierarchy; returns warm-sweep counters.
+
+    With threads > 1 the representative core's slice is replayed through a
+    hierarchy whose L3 share is capacity / threads-on-socket.  `trace`
+    (ndarray or list of line ids) overrides the matrix-derived trace so a
+    prebuilt one can be shared across mechanisms.
+    """
+    if threads > 1:
+        tps = min(threads, machine.cores_per_socket)
+        spec = dataclasses.replace(
+            spec, l3_bytes=(spec.l3_bytes or machine.l3_bytes) // tps)
+    if trace is None:
+        if threads > 1:
+            csr, _ = _thread_slice(csr, threads)
+        trace = spmv_address_trace(csr, machine)
+    return spec.instantiate(machine).run_trace(trace, sweeps=sweeps)
+
+
+def run_sweep(log2ns: Sequence[int] = (12, 14, 16),
+              kinds: Sequence[str] = ("fd", "rmat"),
+              mechanisms: Optional[Dict[str, HierarchySpec]] = None,
+              machine: MachineModel = SANDY_BRIDGE,
+              threads_list: Sequence[int] = (1,),
+              sweeps: int = 2, seed: int = 0) -> List[SweepPoint]:
+    """The full grid.  Traces are built once per (kind, size, threads) and
+    shared across mechanisms, so mechanism columns are exactly comparable.
+    """
+    mechanisms = mechanisms if mechanisms is not None else MECHANISMS
+    points: List[SweepPoint] = []
+    for kind in kinds:
+        for log2n in log2ns:
+            full = _matrix(kind, 2 ** log2n, seed=seed)
+            for threads in threads_list:
+                sub, sub_nnz = _thread_slice(full, threads)
+                trace = spmv_address_trace(sub, machine).tolist()
+                for label, spec in mechanisms.items():
+                    c = run_point(sub, spec, machine, threads=threads,
+                                  sweeps=sweeps, trace=trace)
+                    points.append(SweepPoint(
+                        kind=kind, log2n=log2n, nnz=full.nnz,
+                        threads=threads, mechanism=label, spec=spec,
+                        counters=c,
+                        summary=topdown_summary(c, machine, sub_nnz)))
+    return points
+
+
+def geometry_sweep(log2n: int = 14,
+                   kinds: Sequence[str] = ("fd", "rmat"),
+                   l2_kb: Sequence[int] = (128, 256, 512),
+                   ways: Sequence[Optional[int]] = (8, None),
+                   machine: MachineModel = SANDY_BRIDGE,
+                   sweeps: int = 2, seed: int = 0) -> List[SweepPoint]:
+    """Cache-size x associativity sweep at fixed size (mechanisms off)."""
+    specs = {}
+    for kb in l2_kb:
+        for w in ways:
+            wlab = "full" if w is None else f"{w}way"
+            specs[f"l2-{kb}k-{wlab}"] = HierarchySpec(
+                l2_bytes=kb * 1024, ways=w)
+    return run_sweep(log2ns=(log2n,), kinds=kinds, mechanisms=specs,
+                     machine=machine, sweeps=sweeps, seed=seed)

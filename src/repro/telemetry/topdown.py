@@ -1,0 +1,179 @@
+"""Topdown metric tree over hardware-event counters.
+
+Rolls the raw counters from `telemetry.hierarchy` into the staged metric
+tree the paper reads off VTune (and Arm's topdown_tool formalizes): first
+split cycles into retiring vs. memory-bound, then attribute memory-bound
+cycles to the level that served the miss, then annotate with the MPKI
+family and prefetch/mechanism effectiveness.
+
+Latency attribution uses the same machine constants as the analytic model
+(`MachineModel.l3_hit_cycles`, `.dram_cycles`, `.mlp`) so the trace-driven
+and analytic paths are comparable metric-for-metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from . import events as ev
+from .events import EventCounters
+
+# CSR SpMV inner-loop issue cost per nonzero, load-port bound (same constant
+# as cache_model.analytic_metrics_from_profile)
+COMPUTE_CPN = 2.9
+# victim/miss-cache/stream-buffer hits are near-side fills, not DRAM trips
+MECH_HIT_CYCLES = 3.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricNode:
+    """One node of the topdown tree."""
+
+    name: str
+    value: float
+    unit: str                       # 'frac' | 'mpki' | 'rate' | 'cycles' | ...
+    description: str = ""
+    children: Tuple["MetricNode", ...] = ()
+
+    def flatten(self, prefix: str = "") -> Dict[str, float]:
+        key = f"{prefix}{self.name}"
+        out = {key: self.value}
+        for ch in self.children:
+            out.update(ch.flatten(prefix=f"{key}."))
+        return out
+
+    def render(self, indent: int = 0) -> str:
+        if self.unit == "frac":
+            val = f"{100.0 * self.value:6.2f} %"
+        elif self.unit == "mpki":
+            val = f"{self.value:8.3f} /kinst"
+        else:
+            val = f"{self.value:10.4g} {self.unit}"
+        lines = ["  " * indent + f"{self.name:<24s} {val}"]
+        for ch in self.children:
+            lines.append(ch.render(indent + 1))
+        return "\n".join(lines)
+
+
+def _cycles(c: EventCounters, machine, nnz: int):
+    """(compute, l3_stall, dram_stall, mech_stall) cycle estimates."""
+    mech_hits = c[ev.VICTIM_HIT] + c[ev.MISS_CACHE_HIT] + c[ev.STREAM_HIT]
+    l3_stall = c[ev.L3_DEMAND_HIT] * machine.l3_hit_cycles / machine.mlp
+    dram_stall = c[ev.L3_DEMAND_MISS] * machine.dram_cycles / machine.mlp
+    mech_stall = mech_hits * MECH_HIT_CYCLES / machine.mlp
+    return nnz * COMPUTE_CPN, l3_stall, dram_stall, mech_stall
+
+
+def topdown_tree(c: EventCounters, machine, nnz: int) -> MetricNode:
+    """Build the topdown tree for one replayed trace.
+
+    `machine` is a `MachineModel`-shaped object; `nnz` sizes the instruction
+    stream (instructions = nnz * machine.instr_per_nnz).
+    """
+    kinst = nnz * machine.instr_per_nnz / 1e3
+    compute, l3_st, dram_st, mech_st = _cycles(c, machine, nnz)
+    total = compute + l3_st + dram_st + mech_st
+
+    memory_bound = MetricNode(
+        "memory_bound", (l3_st + dram_st + mech_st) / total, "frac",
+        "cycles stalled on the memory hierarchy",
+        children=(
+            MetricNode("l3_bound", l3_st / total, "frac",
+                       "L2 misses served by L3"),
+            MetricNode("dram_bound", dram_st / total, "frac",
+                       "demand lines fetched from DRAM"),
+            MetricNode("mechanism_bound", mech_st / total, "frac",
+                       "misses served by victim/miss-cache/stream buffers"),
+        ))
+
+    mpki = MetricNode(
+        "mpki", c.per_kinst(ev.L2_DEMAND_MISS, kinst), "mpki",
+        "L2 demand misses per kilo-instruction (paper Eq. 1)",
+        children=(
+            MetricNode("l3_mpki", c.per_kinst(ev.L3_DEMAND_MISS, kinst),
+                       "mpki", "L3 demand misses / kinst (paper Eq. 2)"),
+            MetricNode("prefetch_mpki",
+                       c.per_kinst(ev.L2_PREFETCH_FILL, kinst),
+                       "mpki", "prefetch L2 fills / kinst (paper Eq. 3)"),
+        ))
+
+    pf_hit = c[ev.L2_PREFETCH_HIT]
+    prefetch = MetricNode(
+        "prefetch", pf_hit / max(pf_hit + c[ev.L2_DEMAND_MISS], 1), "frac",
+        "coverage: demanded lines the prefetcher brought in early",
+        children=(
+            MetricNode("accuracy",
+                       c.rate(ev.L2_PREFETCH_HIT, ev.L2_PREFETCH_FILL),
+                       "frac", "prefetched lines that were ever demanded"),
+        ))
+
+    l2_miss = max(c[ev.L2_DEMAND_MISS], 1)
+    mech_children = []
+    for name, event in (("victim_hit_rate", ev.VICTIM_HIT),
+                        ("miss_cache_hit_rate", ev.MISS_CACHE_HIT),
+                        ("stream_hit_rate", ev.STREAM_HIT)):
+        if c[event]:
+            mech_children.append(MetricNode(
+                name, c[event] / l2_miss, "frac",
+                f"L2 misses served ({event})"))
+    mech_served = (c[ev.VICTIM_HIT] + c[ev.MISS_CACHE_HIT]
+                   + c[ev.STREAM_HIT])
+    mechanisms = MetricNode(
+        "mechanisms", mech_served / l2_miss, "frac",
+        "L2 misses served by the paper's §V structures",
+        children=tuple(mech_children))
+
+    return MetricNode(
+        "spmv", total / max(nnz, 1), "cycles/nnz",
+        "estimated cycles per nonzero (1 core)",
+        children=(memory_bound, mpki, prefetch, mechanisms))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopdownSummary:
+    """Flat headline numbers for reports (one row per sweep point)."""
+
+    l2_mpki: float
+    l3_mpki: float
+    prefetch_mpki: float
+    pf_coverage: float
+    pf_accuracy: float
+    memory_bound: float
+    dram_bound: float
+    mech_served_frac: float
+    victim_hit_rate: float
+    miss_cache_hit_rate: float
+    stream_hit_rate: float
+    cycles_per_nnz: float
+    gflops_est: float
+
+    FIELDS = ("l2_mpki", "l3_mpki", "prefetch_mpki", "pf_coverage",
+              "pf_accuracy", "memory_bound", "dram_bound",
+              "mech_served_frac", "victim_hit_rate", "miss_cache_hit_rate",
+              "stream_hit_rate", "cycles_per_nnz", "gflops_est")
+
+    def as_dict(self) -> Dict[str, float]:
+        return {f: getattr(self, f) for f in self.FIELDS}
+
+
+def topdown_summary(c: EventCounters, machine, nnz: int) -> TopdownSummary:
+    """Flatten `topdown_tree` into the report row -- the tree is the single
+    source of the formulas; this only renames nodes."""
+    flat = topdown_tree(c, machine, nnz).flatten()
+    cycles_per_nnz = flat["spmv"]
+    return TopdownSummary(
+        l2_mpki=flat["spmv.mpki"],
+        l3_mpki=flat["spmv.mpki.l3_mpki"],
+        prefetch_mpki=flat["spmv.mpki.prefetch_mpki"],
+        pf_coverage=flat["spmv.prefetch"],
+        pf_accuracy=flat["spmv.prefetch.accuracy"],
+        memory_bound=flat["spmv.memory_bound"],
+        dram_bound=flat["spmv.memory_bound.dram_bound"],
+        mech_served_frac=flat["spmv.mechanisms"],
+        victim_hit_rate=flat.get("spmv.mechanisms.victim_hit_rate", 0.0),
+        miss_cache_hit_rate=flat.get(
+            "spmv.mechanisms.miss_cache_hit_rate", 0.0),
+        stream_hit_rate=flat.get("spmv.mechanisms.stream_hit_rate", 0.0),
+        cycles_per_nnz=cycles_per_nnz,
+        gflops_est=2.0 * machine.freq_ghz / cycles_per_nnz,
+    )

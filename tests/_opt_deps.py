@@ -1,0 +1,44 @@
+"""Optional test dependencies (see requirements-dev.txt).
+
+`hypothesis` powers the property tests but is not required to run the
+suite: when it is absent, `given` turns each property test into a single
+skipped test and `st`/`settings` become inert stand-ins, so example-based
+tests in the same module still run.
+
+Usage (instead of importing hypothesis directly):
+
+    from _opt_deps import HAVE_HYPOTHESIS, given, settings, st
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any strategy constructor call; never draws."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed "
+                                     "(pip install -r requirements-dev.txt)")
+            def skipped():
+                pass  # property test body needs hypothesis to drive it
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco

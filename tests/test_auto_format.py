@@ -1,0 +1,93 @@
+"""auto_format dispatch: each structure kind routes to its format, every
+routed path agrees with the dense reference."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import structure
+from repro.core.formats import BELL, CSR, DIA
+from repro.core.generators import banded_matrix, fd_matrix, rmat_matrix
+from repro.core.spmv import auto_format, spmv
+
+
+def _blocked_matrix(n=1024, n_blocks=12, seed=0) -> CSR:
+    """A few dense 8x128 tiles: the BELL-native structure."""
+    rng = np.random.default_rng(seed)
+    rows, cols = [], []
+    rr, cc = np.meshgrid(np.arange(8), np.arange(128), indexing="ij")
+    for _ in range(n_blocks):
+        r0 = int(rng.integers(0, n // 8)) * 8
+        c0 = int(rng.integers(0, n // 128)) * 128
+        rows.append((r0 + rr).ravel())
+        cols.append((c0 + cc).ravel())
+    rows = np.concatenate(rows)
+    cols = np.concatenate(cols)
+    vals = rng.normal(size=rows.shape[0]).astype(np.float32)
+    return CSR.from_coo(rows, cols, vals, n, n)
+
+
+def _assert_matches_dense(fmt, csr):
+    x = jnp.asarray(np.random.default_rng(42)
+                    .normal(size=csr.n_cols).astype(np.float32))
+    want = np.asarray(csr.to_dense()) @ np.asarray(x)
+    got = np.asarray(spmv(fmt, x))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_banded_dispatches_to_dia():
+    csr = fd_matrix(1024)
+    rep = structure.analyze(csr)
+    assert rep.kind == "banded"
+    fmt = auto_format(csr, rep)
+    assert isinstance(fmt, DIA)
+    _assert_matches_dense(fmt, csr)
+
+
+def test_narrow_band_dispatches_to_dia():
+    csr = banded_matrix(512, 8, nnz_per_row=5, seed=2)
+    fmt = auto_format(csr)
+    assert isinstance(fmt, DIA)
+    _assert_matches_dense(fmt, csr)
+
+
+def test_blocked_dispatches_to_bell():
+    csr = _blocked_matrix()
+    rep = structure.analyze(csr)
+    assert rep.kind == "blocked"
+    fmt = auto_format(csr, rep)
+    assert isinstance(fmt, BELL)
+    _assert_matches_dense(fmt, csr)
+
+
+def test_unstructured_stays_csr():
+    csr = rmat_matrix(2048, seed=5)
+    rep = structure.analyze(csr)
+    assert rep.kind == "unstructured"
+    fmt = auto_format(csr, rep)
+    assert fmt is csr
+    _assert_matches_dense(fmt, csr)
+
+
+def test_banded_with_many_offsets_falls_back_to_csr():
+    """kind == 'banded' but > 64 distinct diagonals: DIA storage would
+    blow up (n_diags x n dense), so the dispatcher must keep CSR."""
+    csr = banded_matrix(512, 200, nnz_per_row=7, seed=3)
+    rep = structure.analyze(csr)
+    wide = dataclasses.replace(rep, kind="banded", n_distinct_offsets=100)
+    fmt = auto_format(csr, wide)
+    assert fmt is csr
+    _assert_matches_dense(fmt, csr)
+
+
+@pytest.mark.parametrize("gen,expected", [
+    (lambda: fd_matrix(1024), DIA),
+    (lambda: _blocked_matrix(), BELL),
+    (lambda: rmat_matrix(2048, seed=5), CSR),
+])
+def test_all_dispatch_paths_agree_with_dense(gen, expected):
+    csr = gen()
+    fmt = auto_format(csr)
+    assert isinstance(fmt, expected)
+    _assert_matches_dense(fmt, csr)

@@ -118,7 +118,9 @@ def test_elastic_restore_multishard_manifest():
     """Restore reassembles leaves from whichever shard holds them --
     simulate a 2-host save by writing two shard files by hand."""
     import msgpack
-    import zstandard as zstd
+
+    from repro.checkpoint.manager import (DEFAULT_CODEC, compress_payload,
+                                          shard_filename)
 
     with tempfile.TemporaryDirectory() as d:
         step_dir = os.path.join(d, "step_000000005")
@@ -129,15 +131,17 @@ def test_elastic_restore_multishard_manifest():
         for shard_id, (key, arr) in enumerate(
                 [("['a']", a), ("['b']", b)]):
             payload = arr.tobytes()
-            comp = zstd.ZstdCompressor().compress(payload)
+            comp = compress_payload(payload, DEFAULT_CODEC)
             with open(os.path.join(
-                    step_dir, f"shard_{shard_id:05d}.bin.zst"), "wb") as f:
+                    step_dir, shard_filename(shard_id, DEFAULT_CODEC)),
+                    "wb") as f:
                 f.write(comp)
             entries.append({"key": key, "shape": list(arr.shape),
                             "dtype": "float32", "offset": 0,
                             "nbytes": len(payload), "shard": shard_id})
         with open(os.path.join(step_dir, "manifest.msgpack"), "wb") as f:
             f.write(msgpack.packb({"step": 5, "n_hosts": 2,
+                                   "codec": DEFAULT_CODEC,
                                    "treedef": "", "entries": entries}))
         with open(os.path.join(step_dir, "COMMITTED"), "w") as f:
             f.write("5")

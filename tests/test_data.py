@@ -2,9 +2,8 @@
 import os
 import tempfile
 
-import hypothesis.strategies as st
 import numpy as np
-from hypothesis import given, settings
+from _opt_deps import given, settings, st
 
 from repro.data.pipeline import (DataConfig, PackedFileDataset, SyntheticLM,
                                  make_pipeline, write_token_file)

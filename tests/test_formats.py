@@ -1,10 +1,9 @@
 """Format containers: construction, round-trips, storage accounting."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _opt_deps import given, settings, st
 
 from repro.core.formats import BELL, CSR, DIA, ELL
 from repro.core.generators import fd_matrix, rmat_matrix

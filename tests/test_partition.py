@@ -1,8 +1,7 @@
 """Partitioners: load balance + stripe reassembly property."""
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from _opt_deps import given, settings, st
 
 from repro.core.formats import CSR
 from repro.core.generators import rmat_matrix

@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+from _opt_deps import given, settings, st
 
 from repro.configs import CONFIGS
 from repro.serve import (BlockAllocator, EngineConfig, PoolConfig, Request,

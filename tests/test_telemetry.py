@@ -1,0 +1,346 @@
+"""Telemetry subsystem: caches, mechanisms, topdown tree, sweeps, and
+bit-exact parity of the default hierarchy with the legacy simulator."""
+from collections import OrderedDict
+
+import numpy as np
+import pytest
+
+from repro.core.cache_model import SANDY_BRIDGE, simulate_exact
+from repro.core.generators import fd_matrix, rmat_matrix
+from repro.telemetry import events as ev
+from repro.telemetry import report, sweep, topdown
+from repro.telemetry.events import EventCounters
+from repro.telemetry.hierarchy import (CacheLevel, Hierarchy, HierarchySpec,
+                                       MissCache, SequentialPrefetcher,
+                                       SetAssocCache, StreamBuffers,
+                                       VictimCache, spmv_address_trace)
+
+
+# ---------------------------------------------------------------------------
+# SetAssocCache
+# ---------------------------------------------------------------------------
+
+def test_fully_assoc_lru_eviction_order():
+    c = SetAssocCache(2)                    # fully associative, 2 lines
+    assert c.insert(1) is None
+    assert c.insert(2) is None
+    assert c.insert(3) == 1                 # LRU (line 1) evicted
+    hit, _ = c.lookup(2)
+    assert hit
+    assert c.insert(4) == 3                 # 2 was refreshed; 3 is LRU now
+
+
+def test_set_assoc_conflict_misses():
+    # 4 lines, 1 way -> 4 direct-mapped sets; lines 0 and 4 conflict
+    c = SetAssocCache(4, ways=1)
+    assert c.n_sets == 4 and c.ways == 1
+    c.insert(0)
+    assert c.insert(4) == 0                 # same set, direct-mapped conflict
+    assert not c.lookup(0)[0]
+    # a fully-associative cache of the same capacity keeps both
+    f = SetAssocCache(4)
+    f.insert(0), f.insert(4)
+    assert f.lookup(0)[0] and f.lookup(4)[0]
+
+
+def test_prefetched_flag_cleared_on_first_hit():
+    c = SetAssocCache(8)
+    c.insert(5, prefetched=True)
+    hit, was_pf = c.lookup(5)
+    assert hit and was_pf
+    hit, was_pf = c.lookup(5)
+    assert hit and not was_pf               # only the first hit counts
+
+
+# ---------------------------------------------------------------------------
+# Mechanisms
+# ---------------------------------------------------------------------------
+
+def test_victim_cache_rescues_conflict_evictions():
+    vc = VictimCache(4)
+    c = EventCounters()
+    vc.on_evict(7)
+    assert vc.probe(7, c)                   # swap back
+    assert c[ev.VICTIM_HIT] == 1
+    assert not vc.probe(7, c)               # consumed by the swap
+    assert c[ev.VICTIM_PROBE] == 2
+
+
+def test_miss_cache_catches_repeat_misses():
+    mc = MissCache(2)
+    c = EventCounters()
+    assert not mc.probe(3, c)               # first miss inserts
+    assert mc.probe(3, c)                   # repeat miss is served
+    assert c[ev.MISS_CACHE_HIT] == 1
+
+
+def test_stream_buffers_serve_sequential_run():
+    sb = StreamBuffers(n_streams=2, depth=4)
+    c = EventCounters()
+    assert not sb.probe(100, c)             # allocates [101..104]
+    for line in (101, 102, 103, 104, 105):  # buffer keeps refilling ahead
+        assert sb.probe(line, c), line
+    assert c[ev.STREAM_HIT] == 5
+    assert not sb.probe(500, c)             # unrelated miss: new allocation
+    assert c[ev.STREAM_ALLOC] == 2
+
+
+def test_stream_buffer_lru_replacement():
+    sb = StreamBuffers(n_streams=1, depth=2)
+    c = EventCounters()
+    sb.probe(10, c)                         # tracks [11, 12]
+    sb.probe(50, c)                         # replaces the only buffer
+    assert not sb.probe(11, c)              # old stream is gone
+
+
+# ---------------------------------------------------------------------------
+# Hierarchy behavior
+# ---------------------------------------------------------------------------
+
+def _tiny_hierarchy(l2_lines=8, l3_lines=64, ways=None, mechs=(),
+                    prefetch=True):
+    levels = [CacheLevel("L2", l2_lines, ways, mechanisms=list(mechs)),
+              CacheLevel("L3", l3_lines, ways)]
+    pf = SequentialPrefetcher(4) if prefetch else None
+    return Hierarchy(levels, pf)
+
+
+def test_sequential_trace_is_prefetched():
+    h = _tiny_hierarchy()
+    c = h.replay(range(0, 64))
+    assert c[ev.L2_PREFETCH_FILL] > 0
+    assert c[ev.L2_PREFETCH_HIT] > 0
+    # coverage: most lines arrive before demand
+    assert c[ev.L2_PREFETCH_HIT] > c[ev.L2_DEMAND_MISS] / 2
+
+
+def test_random_trace_misses_without_prefetch_benefit():
+    rng = np.random.default_rng(0)
+    trace = rng.integers(0, 4096, size=4096).tolist()
+    h = _tiny_hierarchy()
+    c = h.replay(trace)
+    assert c[ev.L2_DEMAND_MISS] > 0.8 * c[ev.ACCESS] * (1 - 8 / 4096)
+    assert c.validate() == []               # every event name is registered
+
+
+def test_victim_cache_serves_direct_mapped_ping_pong():
+    # two lines in the same direct-mapped set ping-pong; the victim cache
+    # turns every other miss into a swap
+    mech = VictimCache(4)
+    h = _tiny_hierarchy(l2_lines=4, ways=1, mechs=(mech,), prefetch=False)
+    trace = [0, 4, 0, 4, 0, 4, 0, 4]
+    c = h.replay(trace)
+    assert c[ev.VICTIM_HIT] >= 4            # all re-accesses swap back
+    assert c[ev.L3_DEMAND_MISS] + c[ev.L3_DEMAND_HIT] \
+        == c[ev.L2_DEMAND_MISS] - c[ev.VICTIM_HIT]
+
+
+def test_counters_accounting_identity():
+    h = _tiny_hierarchy()
+    rng = np.random.default_rng(1)
+    c = h.replay(rng.integers(0, 512, size=2048).tolist())
+    assert c[ev.ACCESS] == c[ev.L2_DEMAND_HIT] + c[ev.L2_DEMAND_MISS]
+    assert c[ev.L2_DEMAND_MISS] == c[ev.L3_DEMAND_HIT] + c[ev.L3_DEMAND_MISS]
+
+
+# ---------------------------------------------------------------------------
+# SpMV trace + legacy parity
+# ---------------------------------------------------------------------------
+
+def test_spmv_trace_shape_and_layout():
+    csr = fd_matrix(256)
+    t = spmv_address_trace(csr, SANDY_BRIDGE)
+    assert t.shape[0] == 2 * csr.n_rows + 3 * csr.nnz
+    # x region starts at line 0; row 0's x gathers (every 3rd slot from
+    # position 4 within the row body) are exactly its column lines
+    per_line = SANDY_BRIDGE.line_bytes // SANDY_BRIDGE.elem_bytes
+    cols = np.asarray(csr.indices)[:int(np.asarray(csr.indptr)[1])]
+    assert set(t[4::3][: len(cols)].tolist()) == set(
+        (cols // per_line).tolist())
+
+
+def _legacy_simulate(csr, machine, sweeps):
+    """The pre-refactor cache_model simulator, kept verbatim as an oracle."""
+    class LRU:
+        def __init__(self, cap):
+            self.cap, self.d = max(int(cap), 1), OrderedDict()
+
+        def access(self, line):
+            if line in self.d:
+                self.d.move_to_end(line)
+                return True
+            self.d[line] = True
+            if len(self.d) > self.cap:
+                self.d.popitem(last=False)
+            return False
+
+        def insert(self, line):
+            if line in self.d:
+                self.d.move_to_end(line)
+                return
+            self.d[line] = True
+            if len(self.d) > self.cap:
+                self.d.popitem(last=False)
+
+    lb = machine.line_bytes
+    l2, l3 = LRU(machine.l2_bytes // lb), LRU(machine.l3_bytes // lb)
+    pf = SequentialPrefetcher(machine.prefetch_streams)
+    indptr = np.asarray(csr.indptr)
+    cols = np.asarray(csr.indices, dtype=np.int64)
+    n = csr.n_rows
+    eb, ib = machine.elem_bytes, machine.idx_bytes
+    x_base = 0
+    val_base = x_base + (-(-n * eb // lb)) + 16
+    idx_base = val_base + (-(-csr.nnz * eb // lb)) + 16
+    ptr_base = idx_base + (-(-csr.nnz * ib // lb)) + 16
+    y_base = ptr_base + (-(-(n + 1) * ib // lb)) + 16
+    stats = None
+    for _ in range(sweeps):
+        c = dict(l2_demand=0, l3_demand=0, pf_fills=0, accesses=0)
+
+        def access(line, c=c):
+            c["accesses"] += 1
+            for pline in pf.observe(line):
+                if pline not in l2.d:
+                    c["pf_fills"] += 1
+                    l3.insert(pline)
+                    l2.insert(pline)
+            if l2.access(line):
+                return
+            c["l2_demand"] += 1
+            if l3.access(line):
+                return
+            c["l3_demand"] += 1
+
+        for r in range(n):
+            access(ptr_base + (r * ib) // lb)
+            access(y_base + (r * eb) // lb)
+            for p in range(int(indptr[r]), int(indptr[r + 1])):
+                access(val_base + (p * eb) // lb)
+                access(idx_base + (p * ib) // lb)
+                access(x_base + (int(cols[p]) * eb) // lb)
+        stats = c
+    return stats
+
+
+@pytest.mark.parametrize("gen,seed", [(fd_matrix, 0), (rmat_matrix, 1)])
+def test_default_hierarchy_matches_legacy_exactly(gen, seed):
+    """simulate_exact (now routed through telemetry.hierarchy) must agree
+    counter-for-counter with the pre-refactor implementation."""
+    csr = gen(2 ** 10, seed=seed)
+    got = simulate_exact(csr, sweeps=2)
+    want = _legacy_simulate(csr, SANDY_BRIDGE, sweeps=2)
+    assert got == want
+
+
+def test_headline_ordering_scaled_geometry():
+    """The paper's headline (R-MAT L2 demand-miss rate >> FD) holds in the
+    telemetry hierarchy at a working-set-scaled geometry."""
+    spec = HierarchySpec(l2_bytes=16 * 1024, l3_bytes=256 * 1024)
+    machine = SANDY_BRIDGE
+    out = {}
+    for kind, gen in (("fd", fd_matrix), ("rmat", rmat_matrix)):
+        csr = gen(2 ** 12)
+        c = spec.instantiate(machine).run_spmv(csr, machine, sweeps=2)
+        out[kind] = c[ev.L2_DEMAND_MISS] / c[ev.ACCESS]
+    assert out["rmat"] > 3 * out["fd"]
+
+
+# ---------------------------------------------------------------------------
+# Topdown
+# ---------------------------------------------------------------------------
+
+def _counters_for(kind, n=2 ** 12, spec=None):
+    spec = spec or HierarchySpec(l2_bytes=16 * 1024, l3_bytes=128 * 1024)
+    gen = fd_matrix if kind == "fd" else rmat_matrix
+    csr = gen(n)
+    c = spec.instantiate(SANDY_BRIDGE).run_spmv(csr, SANDY_BRIDGE, sweeps=2)
+    return csr, c
+
+
+def test_topdown_tree_fractions_consistent():
+    csr, c = _counters_for("rmat")
+    tree = topdown.topdown_tree(c, SANDY_BRIDGE, csr.nnz)
+    flat = tree.flatten()
+    mb = flat["spmv.memory_bound"]
+    parts = (flat["spmv.memory_bound.l3_bound"]
+             + flat["spmv.memory_bound.dram_bound"]
+             + flat["spmv.memory_bound.mechanism_bound"])
+    assert 0.0 <= mb <= 1.0
+    assert parts == pytest.approx(mb, abs=1e-9)
+    rendered = tree.render()
+    assert "memory_bound" in rendered and "dram_bound" in rendered
+
+
+def test_topdown_rmat_more_memory_bound_than_fd():
+    csr_fd, c_fd = _counters_for("fd")
+    csr_rm, c_rm = _counters_for("rmat")
+    s_fd = topdown.topdown_summary(c_fd, SANDY_BRIDGE, csr_fd.nnz)
+    s_rm = topdown.topdown_summary(c_rm, SANDY_BRIDGE, csr_rm.nnz)
+    assert s_rm.l2_mpki > 3 * s_fd.l2_mpki
+    assert s_rm.memory_bound > s_fd.memory_bound
+    assert s_rm.gflops_est < s_fd.gflops_est
+
+
+def test_topdown_summary_fields_complete():
+    csr, c = _counters_for("fd")
+    s = topdown.topdown_summary(c, SANDY_BRIDGE, csr.nnz)
+    d = s.as_dict()
+    assert set(d) == set(topdown.TopdownSummary.FIELDS)
+    assert all(np.isfinite(v) for v in d.values())
+
+
+# ---------------------------------------------------------------------------
+# Sweep + report
+# ---------------------------------------------------------------------------
+
+SMALL = {
+    "baseline": HierarchySpec(l2_bytes=16 * 1024, l3_bytes=128 * 1024),
+    "victim-cache": HierarchySpec(l2_bytes=16 * 1024, l3_bytes=128 * 1024,
+                                  victim_entries=32),
+    "combined": HierarchySpec(l2_bytes=16 * 1024, l3_bytes=128 * 1024,
+                              victim_entries=32, stream_buffers=4),
+}
+
+
+def test_run_sweep_grid_complete():
+    pts = sweep.run_sweep(log2ns=(10, 11), mechanisms=SMALL, sweeps=1)
+    assert len(pts) == 2 * 2 * len(SMALL)       # kinds x sizes x mechanisms
+    labels = {p.mechanism for p in pts}
+    assert labels == set(SMALL)
+    for p in pts:
+        assert p.counters[ev.ACCESS] > 0
+        assert np.isfinite(p.summary.gflops_est)
+
+
+def test_sweep_threads_shrinks_shared_l3():
+    csr = rmat_matrix(2 ** 12)
+    spec = HierarchySpec(l2_bytes=16 * 1024, l3_bytes=256 * 1024)
+    c1 = sweep.run_point(csr, spec, threads=1, sweeps=1)
+    c8 = sweep.run_point(csr, spec, threads=8, sweeps=1)
+    # 8 threads: 1/8 of the rows replayed against 1/8 of the L3
+    assert c8[ev.ACCESS] < c1[ev.ACCESS]
+
+
+def test_reports_render():
+    pts = sweep.run_sweep(log2ns=(10,), mechanisms=SMALL, sweeps=1)
+    csv = report.to_csv(pts)
+    md = report.to_markdown(pts)
+    js = report.to_json(pts)
+    gap = report.gap_report(pts)
+    assert "l2_mpki" in csv and "baseline" in csv
+    assert md.startswith("|") and "victim-cache" in md
+    assert "counters" in js
+    assert "gap_closed_vs_baseline" in gap
+
+
+def test_geometry_sweep_labels():
+    pts = sweep.geometry_sweep(log2n=10, l2_kb=(16, 32), ways=(1, None),
+                               sweeps=1)
+    assert {p.mechanism for p in pts} == {
+        "l2-16k-1way", "l2-16k-full", "l2-32k-1way", "l2-32k-full"}
+    # lower associativity can only hurt (or equal): conflict misses
+    by = {(p.kind, p.mechanism): p for p in pts}
+    for kind in ("fd", "rmat"):
+        assert by[(kind, "l2-16k-1way")].summary.l2_mpki >= \
+            by[(kind, "l2-16k-full")].summary.l2_mpki - 1e-9
