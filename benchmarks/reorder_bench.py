@@ -1,0 +1,88 @@
+"""Reordering evaluation: how much of the FD-vs-R-MAT gap does software
+permutation close, alone and combined with the PR-1 hardware mechanisms?
+
+Three blocks, at >= 1 R-MAT size drawn from `generators.paper_sizes()`:
+
+  1. structure -- before/after structure metrics per strategy (bandwidth,
+     locality, stream servability): the *cause* the paper identifies.
+  2. sweep     -- trace-driven miss rates for every (kind, reorder,
+     mechanism) cell at the working-set-scaled geometry telemetry_bench
+     uses (L2=32K, L3=256K puts Python-tractable traces in the paper's
+     >L2 regime).
+  3. gap       -- `reorder_gap_report`: fraction of the first-level
+     (simulated L2) demand-miss gap each strategy closes on its own
+     (mechanism=baseline) and combined with stream buffers.
+
+Invoked by `benchmarks.run` (section name: reorder) or directly:
+
+    PYTHONPATH=src python -m benchmarks.reorder_bench [--fast]
+"""
+from __future__ import annotations
+
+from repro.core.generators import paper_sizes, rmat_matrix
+from repro.core.structure import analyze_reorder
+from repro.reorder import STRATEGIES
+from repro.telemetry.report import reorder_gap_report, to_csv
+from repro.telemetry.sweep import reorder_sweep
+
+from . import common
+from .telemetry_bench import SCALED_MECHANISMS
+
+# Same scaled geometry as telemetry_bench's mechanism table, so the two
+# reports stay directly comparable.
+MECHANISMS = {k: SCALED_MECHANISMS[k] for k in ("baseline",
+                                                "stream-buffers")}
+
+
+def _log2ns():
+    # smallest paper sizes keep the RCM BFS + trace replay CI-friendly
+    sizes = paper_sizes(min_log2_rows=11,
+                        max_log2_rows=11 if common.EMPIRICAL_MAX_LOG2 <= 14
+                        else 12)
+    return tuple(s.bit_length() - 1 for s in sizes)
+
+
+def structure_table(log2ns) -> str:
+    rows = []
+    for log2n in log2ns:
+        rm = rmat_matrix(2 ** log2n)
+        for name, strategy in STRATEGIES.items():
+            if name == "none":
+                continue
+            d = analyze_reorder(rm, strategy(rm))
+            rows.append([
+                log2n, name,
+                d.before.bandwidth_p95, d.after.bandwidth_p95,
+                d.before.spatial_locality, d.after.spatial_locality,
+                d.before.temporal_locality, d.after.temporal_locality,
+                d.before.stream_servable, d.after.stream_servable,
+            ])
+    return common.emit(
+        rows,
+        ["log2n", "strategy", "bw95_before", "bw95_after",
+         "spatial_before", "spatial_after", "temporal_before",
+         "temporal_after", "stream_before", "stream_after"],
+        "reorder structure: R-MAT before/after each strategy")
+
+
+def main() -> None:
+    log2ns = _log2ns()
+    structure_table(log2ns)
+    print()
+    pts = reorder_sweep(log2ns=log2ns, mechanisms=MECHANISMS, sweeps=2)
+    print(to_csv(pts, title="reorder sweep: trace-driven, scaled geometry "
+                            "(L2=32K L3=256K)"))
+    print()
+    print(reorder_gap_report(pts))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="single 2^11 size (CI)")
+    args = ap.parse_args()
+    if args.fast:
+        common.EMPIRICAL_MAX_LOG2 = 14
+    main()

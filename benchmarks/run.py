@@ -17,7 +17,7 @@ def main(argv=None) -> None:
                     help="cap empirical matrices at 2^16 rows")
     ap.add_argument("--only", default=None,
                     help="comma list: paper,kernels,traffic,moe,serve,"
-                         "telemetry")
+                         "telemetry,reorder")
     args = ap.parse_args(argv)
 
     from . import common
@@ -25,7 +25,8 @@ def main(argv=None) -> None:
         common.EMPIRICAL_MAX_LOG2 = 16
 
     want = set((args.only
-                or "paper,kernels,traffic,moe,serve,telemetry").split(","))
+                or "paper,kernels,traffic,moe,serve,telemetry,reorder")
+               .split(","))
     t0 = time.time()
 
     if "paper" in want:
@@ -46,6 +47,9 @@ def main(argv=None) -> None:
     if "telemetry" in want:
         from . import telemetry_bench
         telemetry_bench.main()
+    if "reorder" in want:
+        from . import reorder_bench
+        reorder_bench.main()
 
     print(f"# benchmarks.run completed in {time.time()-t0:.1f}s",
           file=sys.stderr)

@@ -1,20 +1,22 @@
-"""Cache-hierarchy model reproducing the paper's VTune methodology.
+"""Analytic cache model + machine constants (the paper's VTune metrics).
 
 The paper measures five compound metrics (L2/L3 miss rate per kilo-
 instruction, prefetch miss rate, L2 stall cycles, GFLOPS) on a dual
 Xeon E5-2690 (Sandy Bridge).  This container has no Sandy Bridge and no
-VTune, so we reproduce the *methodology*: replay the exact x-access stream
-the SpMV kernel issues (paper Fig. 2) through
+VTune, so the repo reproduces the *methodology* in two places:
 
-  1. an exact trace-driven simulator (fully-associative LRU L2/L3 + a
-     sequential-stream prefetcher) -- used at small/medium sizes; the
-     simulator lives in `repro.telemetry.hierarchy`, which also provides
-     set-associative geometries and the paper's §V candidate mechanisms
-     (victim cache, miss cache, stream buffers) behind the same trace
-     replay, and
-  2. an analytic model (Che/working-set approximation over the *empirical*
-     line-popularity distribution) -- used across the paper's full size
-     sweep 2^11..2^26 rows where trace simulation is intractable.
+  1. Trace-driven simulation lives in `repro.telemetry` -- the pluggable
+     hierarchy (`telemetry.hierarchy`: set-associative caches, prefetcher,
+     the §V victim/miss-cache/stream-buffer mechanisms), the sweep harness
+     and topdown reports.  `simulate_exact` below is only a thin
+     compatibility shim over `telemetry.hierarchy.Hierarchy.default`
+     preserving the original counter dictionary (bit-exact parity is
+     pinned by tests/test_telemetry.py).
+  2. THIS module owns the machine description (`MachineModel`,
+     `SANDY_BRIDGE`) and the *analytic* model (Che/working-set
+     approximation over the empirical line-popularity distribution) used
+     across the paper's full size sweep 2^11..2^26 rows where trace
+     simulation is intractable.
 
 The analytic model captures the effect the paper measures: FD's sequential
 banded accesses are served by the (modelled) stream prefetcher -> near-zero

@@ -110,6 +110,38 @@ class CSR:
         indptr = np.asarray(self.indptr)
         return np.diff(indptr)
 
+    def permute(self, row_perm=None, col_perm=None) -> "CSR":
+        """A' with A'[i, j] = A[row_perm[i], col_perm[j]].
+
+        `row_perm[i]` names the OLD row placed at NEW position i (the
+        convention of `repro.reorder.Reordering`); either perm may be None
+        for identity.  Raises ValueError on a non-permutation (duplicate or
+        out-of-range index), which would otherwise corrupt silently.
+        Rebuilds through `from_coo`, so the result is canonically
+        (row, col)-sorted.
+        """
+        def invert(perm, n, name):
+            perm = np.asarray(perm, dtype=np.int64)
+            if perm.shape != (n,) or \
+                    not np.array_equal(np.bincount(perm, minlength=n),
+                                       np.ones(n, dtype=np.int64)):
+                raise ValueError(f"{name} is not a permutation of range({n})")
+            inv = np.empty(n, dtype=np.int64)
+            inv[perm] = np.arange(n, dtype=np.int64)
+            return inv
+
+        indptr = np.asarray(self.indptr, dtype=np.int64)
+        cols = np.asarray(self.indices, dtype=np.int64)
+        vals = np.asarray(self.data)
+        rows = np.repeat(np.arange(self.n_rows, dtype=np.int64),
+                         np.diff(indptr))
+        if row_perm is not None:
+            rows = invert(row_perm, self.n_rows, "row_perm")[rows]
+        if col_perm is not None:
+            cols = invert(col_perm, self.n_cols, "col_perm")[cols]
+        return CSR.from_coo(rows, cols, vals, self.n_rows, self.n_cols,
+                            dtype=vals.dtype)
+
 
 @_register
 @dataclasses.dataclass(frozen=True)

@@ -1,9 +1,13 @@
-"""Partitioners: row-blocking (thread/chip parallelism) and column-blocking
-(the paper's software-managed-cache technique, P2+P3).
+"""Partitioners: row-blocking (thread/chip parallelism) and column-stripe
+splitting (the paper's software-managed-cache technique, P2+P3).
 
 The paper randomly permutes R-MAT rows/columns *to equalize thread load*;
 `rowblock_balanced` provides the same guarantee deterministically by
 splitting on the nnz CDF instead of on row count.
+
+Structure-changing permutations live in `repro.reorder` (RCM, degree
+sorting, cache blocking, chains); `sort_rows_by_nnz` below is kept as a
+thin compatibility wrapper over `repro.reorder.degree_sort`.
 """
 from __future__ import annotations
 
@@ -75,22 +79,12 @@ def col_stripes(csr: CSR, n_stripes: int) -> List[CSR]:
 def sort_rows_by_nnz(csr: CSR) -> tuple[CSR, np.ndarray]:
     """Row permutation descending by nnz (SELL-style): groups similar-length
     rows so ELL padding within blocks is minimal.  Returns (A', perm) with
-    A'[i] = A[perm[i]]; y' = A' x  =>  y = y'[inv_perm]."""
-    indptr = np.asarray(csr.indptr, dtype=np.int64)
-    lengths = np.diff(indptr)
-    perm = np.argsort(-lengths, kind="stable")
-    cols = np.asarray(csr.indices)
-    vals = np.asarray(csr.data)
-    new_rows = []
-    new_cols = []
-    new_vals = []
-    for new_r, old_r in enumerate(perm):
-        lo, hi = indptr[old_r], indptr[old_r + 1]
-        new_rows.append(np.full(hi - lo, new_r, dtype=np.int64))
-        new_cols.append(cols[lo:hi])
-        new_vals.append(vals[lo:hi])
-    nr = np.concatenate(new_rows) if new_rows else np.zeros(0, np.int64)
-    nc = np.concatenate(new_cols) if new_cols else np.zeros(0, np.int64)
-    nv = np.concatenate(new_vals) if new_vals else np.zeros(0, vals.dtype)
-    return (CSR.from_coo(nr, nc, nv, csr.n_rows, csr.n_cols,
-                         dtype=vals.dtype), perm)
+    A'[i] = A[perm[i]]; y' = A' x  =>  y = y'[inv_perm].
+
+    Compatibility wrapper: the strategy now lives in
+    `repro.reorder.degree_sort`, which returns the richer `Reordering`.
+    """
+    from repro.reorder import degree_sort
+
+    r = degree_sort(csr, descending=True)
+    return r.apply(csr), np.asarray(r.row_perm)

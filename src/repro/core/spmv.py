@@ -76,8 +76,19 @@ def spmv_dense_jnp(a: jax.Array, x: jax.Array) -> jax.Array:
 # Dispatcher
 # ---------------------------------------------------------------------------
 
-def auto_format(csr: CSR, report: structure.StructureReport | None = None):
-    """Pick the TPU-friendly format for this matrix's structure."""
+def auto_format(csr: CSR, report: structure.StructureReport | None = None,
+                reordering=None):
+    """Pick the TPU-friendly format for this matrix's structure.
+
+    With `reordering` (a `repro.reorder.Reordering`), the permutation is
+    applied first and the structure re-analyzed on the permuted matrix, so
+    the format decision reflects the post-reorder structure -- an RCM'd
+    scrambled-banded matrix becomes DIA-eligible again.  Pass the same
+    reordering to `spmv` to multiply in the original row order.
+    """
+    if reordering is not None:
+        csr = reordering.apply(csr)
+        report = None
     rep = report or structure.analyze(csr)
     if rep.kind == "banded" and rep.n_distinct_offsets <= 64:
         return DIA.from_csr(csr)
@@ -87,12 +98,21 @@ def auto_format(csr: CSR, report: structure.StructureReport | None = None):
 
 
 def spmv(matrix, x: jax.Array, use_pallas: bool = False,
-         interpret: bool | None = None) -> jax.Array:
+         interpret: bool | None = None, reordering=None) -> jax.Array:
     """Multiply any supported sparse container by x.
 
     use_pallas=True routes to the Pallas kernels (repro.kernels); on CPU they
     run in interpret mode, on TPU as compiled Mosaic kernels.
+
+    `reordering` declares that `matrix` is the REORDERED operand (built via
+    `reordering.apply` / `auto_format(..., reordering=...)`) while x and the
+    returned y stay in the ORIGINAL order: x is gathered through col_perm
+    before the multiply and y scattered back through inv_row_perm after.
     """
+    if reordering is not None:
+        y = spmv(matrix, reordering.permute_x(x), use_pallas=use_pallas,
+                 interpret=interpret)
+        return reordering.restore_y(y)
     if use_pallas:
         from repro.kernels import ops as kops
         if interpret is None:

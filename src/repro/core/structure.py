@@ -55,7 +55,13 @@ def x_access_stream(csr: CSR) -> np.ndarray:
     return np.asarray(csr.indices, dtype=np.int64)
 
 
-def analyze(csr: CSR, sample_rows: int | None = 65536) -> StructureReport:
+def analyze(csr: CSR, sample_rows: int | None = 65536,
+            reordering=None) -> StructureReport:
+    """Structure metrics of `csr` (optionally after applying `reordering`,
+    a `repro.reorder.Reordering` -- the "after" half of a before/after
+    comparison; see `analyze_reorder`)."""
+    if reordering is not None:
+        csr = reordering.apply(csr)
     indptr = np.asarray(csr.indptr)
     lengths = np.diff(indptr)
     n_rows = csr.n_rows
@@ -132,6 +138,53 @@ def analyze(csr: CSR, sample_rows: int | None = 65536) -> StructureReport:
         spatial_locality=spatial, temporal_locality=temporal,
         stream_servable=stream, block_density_8x128=block_density,
         kind=kind,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class StructureDelta:
+    """Before/after structure comparison for one reordering."""
+
+    strategy: str
+    before: StructureReport
+    after: StructureReport
+
+    # the metrics a reordering is supposed to move, with the sign of "better"
+    COMPARED = (("bandwidth", -1), ("bandwidth_p95", -1),
+                ("n_distinct_offsets", -1), ("spatial_locality", +1),
+                ("temporal_locality", +1), ("stream_servable", +1))
+
+    def changes(self) -> dict:
+        """metric -> (before, after) for every compared metric."""
+        return {name: (getattr(self.before, name), getattr(self.after, name))
+                for name, _ in self.COMPARED}
+
+    def improved(self) -> bool:
+        """Did any compared metric move in the better direction?"""
+        for name, sign in self.COMPARED:
+            b, a = getattr(self.before, name), getattr(self.after, name)
+            if sign * (a - b) > 0:
+                return True
+        return False
+
+    def summary(self) -> str:
+        parts = []
+        for name, _ in self.COMPARED:
+            b, a = getattr(self.before, name), getattr(self.after, name)
+            fmt = "{:.0f}" if isinstance(b, (int, np.integer)) else "{:.3f}"
+            parts.append(f"{name} {fmt.format(b)}->{fmt.format(a)}")
+        return (f"{self.strategy}: kind {self.before.kind}->{self.after.kind} "
+                + " ".join(parts))
+
+
+def analyze_reorder(csr: CSR, reordering,
+                    sample_rows: int | None = 65536) -> StructureDelta:
+    """Before/after structure report pair for one reordering -- quantifies
+    how much FD-likeness the permutation recovers before any simulation."""
+    return StructureDelta(
+        strategy=getattr(reordering, "strategy", "?"),
+        before=analyze(csr, sample_rows=sample_rows),
+        after=analyze(csr, sample_rows=sample_rows, reordering=reordering),
     )
 
 

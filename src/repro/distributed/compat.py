@@ -1,0 +1,22 @@
+"""Version shim for shard_map.
+
+Newer jax exposes `jax.shard_map` with a `check_vma` kwarg; older
+releases have `jax.experimental.shard_map.shard_map` with the same
+semantics under `check_rep`.  Import `shard_map` from here so model and
+test code runs on both sides of the rename.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+    _CHECK_KWARG = "check_vma"
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KWARG = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KWARG: check_vma})

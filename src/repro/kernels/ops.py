@@ -26,10 +26,25 @@ def _round_up(v: int, m: int) -> int:
     return -(-v // m) * m
 
 
+def _reordered(kernel_fn):
+    """Give a `fn(matrix, x, ..)` wrapper an optional `reordering` kwarg:
+    the matrix is the reordered operand, x/y stay in the original order
+    (gather x through col_perm in, scatter y through inv_row_perm out) --
+    same contract as `repro.core.spmv.spmv`."""
+    @functools.wraps(kernel_fn)
+    def run(matrix, x, *args, reordering=None, **kwargs):
+        if reordering is None:
+            return kernel_fn(matrix, x, *args, **kwargs)
+        y = kernel_fn(matrix, reordering.permute_x(x), *args, **kwargs)
+        return reordering.restore_y(y)
+    return run
+
+
 # ---------------------------------------------------------------------------
 # DIA
 # ---------------------------------------------------------------------------
 
+@_reordered
 def spmv_dia(dia: DIA, x: jax.Array, bn: int = 512,
              interpret: bool = True) -> jax.Array:
     n = dia.n_rows
@@ -45,6 +60,7 @@ def spmv_dia(dia: DIA, x: jax.Array, bn: int = 512,
 # BELL
 # ---------------------------------------------------------------------------
 
+@_reordered
 def spmv_bell(bell: BELL, x: jax.Array, interpret: bool = True) -> jax.Array:
     nbc = -(-bell.n_cols // bell.bn)
     xp = jnp.pad(x, (0, nbc * bell.bn - bell.n_cols))
@@ -57,6 +73,7 @@ def spmv_bell(bell: BELL, x: jax.Array, interpret: bool = True) -> jax.Array:
 # ELL (row-blocked, fixed width)
 # ---------------------------------------------------------------------------
 
+@_reordered
 def spmv_ell(ell: ELL, x: jax.Array, bm: int = 128,
              interpret: bool = True) -> jax.Array:
     """Row-block the (n_rows, max_nnz) ELL arrays to (B, bm, W) and run the
@@ -137,6 +154,7 @@ def spmv_csr_prepared(prep: PaddedCSR, x: jax.Array,
     return y[: prep.n_rows]
 
 
+@_reordered
 def spmv_csr(csr: CSR, x: jax.Array, n_stripes: int = 1,
              interpret: bool = True) -> jax.Array:
     """Convenience wrapper: preps layout per call (cache PaddedCSR via

@@ -12,21 +12,27 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_mesh(shape, axes):
+    """`jax.make_mesh` across jax versions: newer jax wants explicit
+    `axis_types`; on older jax (no `jax.sharding.AxisType`) meshes are
+    Auto-typed already and the kwarg does not exist."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model: int = 1):
     """Whatever this host has (CPU smoke tests: 1 device)."""
     n = len(jax.devices())
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((n // model, model), ("data", "model"))
 
 
 def mesh_dict(mesh) -> dict:

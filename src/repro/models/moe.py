@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.api import constrain
+from repro.distributed.compat import shard_map
 from .common import dense_init, dtype_of
 
 Params = Dict[str, Any]
@@ -213,7 +214,7 @@ def apply_moe_sharded(p: Params, cfg: ModelConfig, x: jax.Array
             y = jax.lax.psum(y, "model")
         return y.astype(xs.dtype).reshape(bl, s, d), aux
 
-    shard = jax.shard_map(
+    shard = shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(dp, None, None), P(None, None),
                   P("model", None, None), P("model", None, None),
@@ -317,7 +318,7 @@ def apply_moe_a2a(p: Params, cfg: ModelConfig, x: jax.Array
             gathered.astype(jnp.float32) * sw_[:, None])
         return y.astype(xs.dtype).reshape(bl, sl, d), aux
 
-    shard = jax.shard_map(
+    shard = shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(dp, "model", None), P(None, None),
                   P("model", None, None), P("model", None, None),
@@ -416,7 +417,7 @@ def apply_moe_decode(p: Params, cfg: ModelConfig, x: jax.Array
         y = jax.lax.psum(y.astype(jnp.bfloat16), "model")
         return y.astype(xs.dtype).reshape(bl, s, d), aux
 
-    shard = jax.shard_map(
+    shard = shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(None, None, None), P(None, None),
                   P("model", "data", None), P("model", "data", None),

@@ -1,0 +1,120 @@
+"""The common result type every reordering strategy produces.
+
+A `Reordering` is a pair of permutations plus provenance.  Conventions
+(matching `partition.sort_rows_by_nnz`, which this subsystem absorbs):
+
+    A'[i, j] = A[row_perm[i], col_perm[j]]
+
+so `row_perm[i]` answers "which OLD row sits at NEW position i".  Under
+that convention SpMV transports as
+
+    x' = x[col_perm]          (permute_x)
+    y' = A' @ x'
+    y  = y'[inv_row_perm]     (restore_y)
+
+and `spmv(A', x, reordering=r)` does the gather/scatter for you, returning
+y in the ORIGINAL row order.  Reorderings compose with `then` (apply self
+first, `other` second), which is what the `chain` combinator uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+def invert_permutation(perm: np.ndarray) -> np.ndarray:
+    """inv[perm[i]] = i, O(n) (argsort-free)."""
+    perm = np.asarray(perm, dtype=np.int64)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.size, dtype=np.int64)
+    return inv
+
+
+def is_permutation(perm: np.ndarray, n: int) -> bool:
+    perm = np.asarray(perm)
+    return perm.shape == (n,) and np.array_equal(np.sort(perm), np.arange(n))
+
+
+@dataclasses.dataclass(frozen=True)
+class Reordering:
+    """Row/column permutation pair with provenance metadata.
+
+    `strategy` names the producing strategy ("rcm", "degree-sort", ...,
+    or "chain(a,b)"), `params` records its knobs, and `stats` records
+    what the strategy measured while running (e.g. bandwidth before and
+    after RCM) -- enough to reconstruct *why* this permutation exists.
+    """
+
+    row_perm: np.ndarray            # new row i holds old row row_perm[i]
+    col_perm: np.ndarray            # new col j holds old col col_perm[j]
+    strategy: str = "identity"
+    params: Dict = dataclasses.field(default_factory=dict)
+    stats: Dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.row_perm.size, self.col_perm.size)
+
+    @property
+    def inv_row_perm(self) -> np.ndarray:
+        return invert_permutation(self.row_perm)
+
+    @property
+    def inv_col_perm(self) -> np.ndarray:
+        return invert_permutation(self.col_perm)
+
+    def validate(self) -> None:
+        n_r, n_c = self.shape
+        if not is_permutation(self.row_perm, n_r):
+            raise ValueError(f"{self.strategy}: row_perm is not a permutation")
+        if not is_permutation(self.col_perm, n_c):
+            raise ValueError(f"{self.strategy}: col_perm is not a permutation")
+
+    # -- application --------------------------------------------------------
+
+    def apply(self, csr):
+        """A' with A'[i, j] = A[row_perm[i], col_perm[j]]."""
+        return csr.permute(self.row_perm, self.col_perm)
+
+    def permute_x(self, x):
+        """x' for the reordered multiply (x'[j] = x[col_perm[j]])."""
+        import jax.numpy as jnp
+
+        return jnp.take(jnp.asarray(x), jnp.asarray(self.col_perm), axis=0)
+
+    def restore_y(self, y_perm):
+        """Scatter y' back to the original row order (y = y'[inv_row_perm])."""
+        import jax.numpy as jnp
+
+        return jnp.take(jnp.asarray(y_perm), jnp.asarray(self.inv_row_perm),
+                        axis=0)
+
+    # -- composition --------------------------------------------------------
+
+    def then(self, other: "Reordering") -> "Reordering":
+        """The reordering equivalent to applying self, then `other`.
+
+        (B = self.apply(A), C = other.apply(B))  =>  C = combined.apply(A):
+        C[i] = B[other.row_perm[i]] = A[self.row_perm[other.row_perm[i]]].
+        """
+        return Reordering(
+            row_perm=np.asarray(self.row_perm)[np.asarray(other.row_perm)],
+            col_perm=np.asarray(self.col_perm)[np.asarray(other.col_perm)],
+            strategy=f"{self.strategy}+{other.strategy}",
+            params={**self.params, **other.params},
+            stats={**self.stats, **other.stats},
+        )
+
+    def summary(self) -> str:
+        extra = " ".join(f"{k}={v}" for k, v in sorted(self.stats.items()))
+        return f"{self.strategy}: rows={self.shape[0]} cols={self.shape[1]}" \
+               + (f" [{extra}]" if extra else "")
+
+
+def identity_reordering(n_rows: int, n_cols: int | None = None) -> Reordering:
+    n_cols = n_rows if n_cols is None else n_cols
+    return Reordering(row_perm=np.arange(n_rows, dtype=np.int64),
+                      col_perm=np.arange(n_cols, dtype=np.int64),
+                      strategy="identity")

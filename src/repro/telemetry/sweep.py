@@ -41,7 +41,7 @@ MECHANISMS: Dict[str, HierarchySpec] = {
 
 @dataclasses.dataclass(frozen=True)
 class SweepPoint:
-    """One (matrix, mechanism, geometry) cell of a sweep."""
+    """One (matrix, reorder, mechanism, geometry) cell of a sweep."""
 
     kind: str                 # 'fd' | 'rmat'
     log2n: int
@@ -51,15 +51,16 @@ class SweepPoint:
     spec: HierarchySpec
     counters: EventCounters
     summary: TopdownSummary
+    reorder: str = "none"     # reordering strategy applied before tracing
 
     def row(self) -> List:
         return ([self.kind, self.log2n, self.nnz, self.threads,
-                 self.mechanism]
+                 self.reorder, self.mechanism]
                 + [getattr(self.summary, f) for f in TopdownSummary.FIELDS])
 
     @staticmethod
     def header() -> List[str]:
-        return (["kind", "log2n", "nnz", "threads", "mechanism"]
+        return (["kind", "log2n", "nnz", "threads", "reorder", "mechanism"]
                 + list(TopdownSummary.FIELDS))
 
 
@@ -113,27 +114,62 @@ def run_sweep(log2ns: Sequence[int] = (12, 14, 16),
               mechanisms: Optional[Dict[str, HierarchySpec]] = None,
               machine: MachineModel = SANDY_BRIDGE,
               threads_list: Sequence[int] = (1,),
-              sweeps: int = 2, seed: int = 0) -> List[SweepPoint]:
-    """The full grid.  Traces are built once per (kind, size, threads) and
-    shared across mechanisms, so mechanism columns are exactly comparable.
+              sweeps: int = 2, seed: int = 0,
+              reorderings: Optional[Dict] = None) -> List[SweepPoint]:
+    """The full grid.  Traces are built once per (kind, size, reorder,
+    threads) and shared across mechanisms, so mechanism columns are exactly
+    comparable.
+
+    `reorderings` maps a label to a `repro.reorder` strategy (callable
+    CSR -> Reordering) or None for the unpermuted matrix; each strategy is
+    applied to the generated matrix *before* slicing and tracing, making
+    the sweep a before/after comparison between software reordering and
+    the §V hardware mechanisms.
     """
     mechanisms = mechanisms if mechanisms is not None else MECHANISMS
+    reorderings = reorderings if reorderings is not None else {"none": None}
     points: List[SweepPoint] = []
     for kind in kinds:
         for log2n in log2ns:
-            full = _matrix(kind, 2 ** log2n, seed=seed)
-            for threads in threads_list:
-                sub, sub_nnz = _thread_slice(full, threads)
-                trace = spmv_address_trace(sub, machine).tolist()
-                for label, spec in mechanisms.items():
-                    c = run_point(sub, spec, machine, threads=threads,
-                                  sweeps=sweeps, trace=trace)
-                    points.append(SweepPoint(
-                        kind=kind, log2n=log2n, nnz=full.nnz,
-                        threads=threads, mechanism=label, spec=spec,
-                        counters=c,
-                        summary=topdown_summary(c, machine, sub_nnz)))
+            base = _matrix(kind, 2 ** log2n, seed=seed)
+            for rlabel, strategy in reorderings.items():
+                full = base if strategy is None else strategy(base).apply(base)
+                for threads in threads_list:
+                    sub, sub_nnz = _thread_slice(full, threads)
+                    trace = spmv_address_trace(sub, machine).tolist()
+                    for label, spec in mechanisms.items():
+                        c = run_point(sub, spec, machine, threads=threads,
+                                      sweeps=sweeps, trace=trace)
+                        points.append(SweepPoint(
+                            kind=kind, log2n=log2n, nnz=full.nnz,
+                            threads=threads, mechanism=label, spec=spec,
+                            counters=c, reorder=rlabel,
+                            summary=topdown_summary(c, machine, sub_nnz)))
     return points
+
+
+def reorder_sweep(log2ns: Sequence[int] = (12,),
+                  kinds: Sequence[str] = ("fd", "rmat"),
+                  mechanisms: Optional[Dict[str, HierarchySpec]] = None,
+                  reorderings: Optional[Dict] = None,
+                  machine: MachineModel = SANDY_BRIDGE,
+                  threads_list: Sequence[int] = (1,),
+                  sweeps: int = 2, seed: int = 0) -> List[SweepPoint]:
+    """Before/after sweep: every reordering strategy crossed with the §V
+    mechanisms, so `report.reorder_gap_report` can state how much of the
+    FD-vs-R-MAT miss-rate gap each permutation closes on its own and
+    combined with the hardware fixes."""
+    from repro.reorder import STRATEGIES
+
+    if mechanisms is None:
+        mechanisms = {"baseline": MECHANISMS["baseline"],
+                      "stream-buffers": MECHANISMS["stream-buffers"]}
+    if reorderings is None:
+        reorderings = dict(STRATEGIES)
+        reorderings["none"] = None       # skip the identity permutation work
+    return run_sweep(log2ns=log2ns, kinds=kinds, mechanisms=mechanisms,
+                     machine=machine, threads_list=threads_list,
+                     sweeps=sweeps, seed=seed, reorderings=reorderings)
 
 
 def geometry_sweep(log2n: int = 14,
