@@ -12,6 +12,7 @@ import numpy as np
 EMPIRICAL_MAX_LOG2 = 20        # keep CI fast; paper sweep goes to 26
 PAPER_MIN_LOG2, PAPER_MAX_LOG2 = 11, 26
 THREADS = (1, 2, 4, 8, 16)
+SMOKE = False                  # run.py --smoke: tiny geometry, threads {1,2}
 
 
 def emit(rows: Iterable[Iterable], header: List[str], title: str) -> str:

@@ -2,7 +2,9 @@
 
 Runs one bench per paper table/figure plus the TPU-side benches, printing
 CSV blocks.  `--fast` trims the empirical sweep (CI); default reproduces
-the full paper sweep via synthetic profiles to 2^26.
+the full paper sweep via synthetic profiles to 2^26.  `--smoke` is the
+benchmark smoke job: reorder + scaling only, tiny geometry, thread axis
+{1, 2} — just enough execution that those benches cannot silently rot.
 """
 from __future__ import annotations
 
@@ -10,23 +12,27 @@ import argparse
 import sys
 import time
 
+ALL = "paper,kernels,traffic,moe,serve,telemetry,reorder,scaling"
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="cap empirical matrices at 2^16 rows")
-    ap.add_argument("--only", default=None,
-                    help="comma list: paper,kernels,traffic,moe,serve,"
-                         "telemetry,reorder")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reorder+scaling only, tiny geometry, threads {1,2}")
+    ap.add_argument("--only", default=None, help=f"comma list: {ALL}")
     args = ap.parse_args(argv)
 
     from . import common
     if args.fast:
         common.EMPIRICAL_MAX_LOG2 = 16
+    if args.smoke:
+        common.SMOKE = True
+        common.EMPIRICAL_MAX_LOG2 = 12
 
-    want = set((args.only
-                or "paper,kernels,traffic,moe,serve,telemetry,reorder")
-               .split(","))
+    default = "reorder,scaling" if args.smoke else ALL
+    want = set((args.only or default).split(","))
     t0 = time.time()
 
     if "paper" in want:
@@ -50,6 +56,9 @@ def main(argv=None) -> None:
     if "reorder" in want:
         from . import reorder_bench
         reorder_bench.main()
+    if "scaling" in want:
+        from . import scaling_bench
+        scaling_bench.main()
 
     print(f"# benchmarks.run completed in {time.time()-t0:.1f}s",
           file=sys.stderr)

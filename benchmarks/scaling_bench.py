@@ -1,0 +1,71 @@
+"""Multithreaded scaling evaluation: the paper's title axis.
+
+Replays FD and R-MAT through the `repro.parallel` engine — every thread
+a private L2, one shared contended LLC per socket, a DRAM bandwidth
+model — across the thread axis, crossed with the reorder axis so the
+report answers both headline questions:
+
+  1. speedup separation — FD's speedup strictly dominates R-MAT's at
+     every thread count (shared-LLC contention and bandwidth saturation
+     hit the random-gather workload first);
+  2. gap closed by RCM — how much of the FD-vs-R-MAT throughput gap the
+     software permutation recovers at each thread count
+     (`gap_closed_gflops_rcm` in the gap report).
+
+Geometry is the working-set-scaled reference cell (L2 16 KiB, shared
+LLC 64 KiB: x is about half the LLC at 2^12, the paper's >LLC regime at
+Python-tractable trace sizes).  Partitioning is `rowblock_balanced`, so
+RCM's row clustering is not mistaken for a scaling defect.
+
+Invoked by `benchmarks.run` (section name: scaling) or directly:
+
+    PYTHONPATH=src python -m benchmarks.scaling_bench [--fast] [--smoke]
+"""
+from __future__ import annotations
+
+from repro import reorder
+from repro.parallel import ParallelSpec
+from repro.telemetry.report import scaling_gap_report, scaling_report
+from repro.telemetry.sweep import scaling_sweep
+
+from . import common
+
+# Reference scaled geometry for the thread axis (see module docstring).
+SCALED_PARALLEL = ParallelSpec(l2_bytes=16 * 1024, llc_bytes=64 * 1024)
+
+THREADS = (1, 2, 4, 8, 16, 32)
+
+
+def _config():
+    if common.SMOKE:
+        return (10,), (1, 2)
+    if common.EMPIRICAL_MAX_LOG2 <= 16:          # --fast (here or via run.py)
+        return (11,), (1, 2, 4, 8)
+    return (12,), THREADS
+
+
+def main() -> None:
+    log2ns, threads = _config()
+    pts = scaling_sweep(
+        log2ns=log2ns, threads_list=threads, spec=SCALED_PARALLEL,
+        partition="balanced", sweeps=2,
+        reorderings={"none": None, "rcm": reorder.rcm})
+    print(scaling_report(pts))
+    print()
+    print(scaling_gap_report(pts))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="2^11 rows, threads 1-8 (CI)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="2^10 rows, threads {1,2} (benchmark smoke job)")
+    args = ap.parse_args()
+    if args.fast:
+        common.EMPIRICAL_MAX_LOG2 = 14
+    if args.smoke:
+        common.SMOKE = True
+    main()

@@ -36,8 +36,15 @@ class RowPartition:
 
 
 def rowblock_equal(csr: CSR, parts: int) -> RowPartition:
-    """Equal row counts (what the paper's permuted matrices make safe)."""
-    starts = np.linspace(0, csr.n_rows, parts + 1).astype(np.int64)
+    """Equal row counts (what the paper's permuted matrices make safe).
+
+    Every part is non-empty: row counts differ by at most one (exact
+    integer split, not float linspace, whose truncation used to produce
+    empty parts), and `parts > n_rows` is capped at one row per part
+    (`n_parts` reports the effective count).
+    """
+    parts = max(1, min(int(parts), csr.n_rows))
+    starts = (np.arange(parts + 1, dtype=np.int64) * csr.n_rows) // parts
     indptr = np.asarray(csr.indptr, dtype=np.int64)
     nnz = indptr[starts[1:]] - indptr[starts[:-1]]
     return RowPartition(starts=starts, nnz_per_part=nnz)

@@ -1,2 +1,7 @@
-"""Distribution layer: mesh context, sharding rules, collectives, fault tolerance."""
+"""Distribution layer: mesh context, sharding rules, collectives, fault
+tolerance, and the row-parallel SpMV execution path (`distributed.spmv`,
+the hardware counterpart of the `repro.parallel` scaling simulation)."""
 from . import api
+from .spmv import row_mesh, spmv_row_sharded
+
+__all__ = ["api", "row_mesh", "spmv_row_sharded"]

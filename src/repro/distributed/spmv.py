@@ -1,0 +1,96 @@
+"""Row-parallel SpMV over a device mesh — the hardware side of the
+`repro.parallel` simulation.
+
+The simulated engine partitions rows across threads sharing an LLC; this
+module executes the same `RowPartition` across real devices with
+`shard_map`: every device runs the Pallas ELL kernel on its row slab
+(x replicated, like the threads sharing one x working set), and y comes
+back row-sharded.  On CPU the kernel runs in interpret mode, on TPU as
+compiled Mosaic — the same dispatch contract as `repro.kernels.ops`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec
+
+from repro.core.formats import CSR
+from repro.core.partition import RowPartition, rowblock_equal
+from repro.kernels import spmv_ell as _ell
+from repro.kernels.ops import ShardedELL, prepare_ell_shards, _round_up
+
+from .compat import shard_map
+
+_AXIS = "shards"
+
+
+def row_mesh(devices=None) -> Mesh:
+    """A 1-D mesh over all (or the given) devices, axis name 'shards'."""
+    devices = list(devices) if devices is not None else jax.devices()
+    return Mesh(np.array(devices), (_AXIS,))
+
+
+def spmv_row_sharded(csr: CSR, x: jax.Array, mesh: Optional[Mesh] = None,
+                     partition: Optional[RowPartition] = None,
+                     bm: int = 128, interpret: Optional[bool] = None
+                     ) -> jax.Array:
+    """y = A @ x with rows sharded across the mesh's 'shards' axis.
+
+    `partition` defaults to `rowblock_equal(csr, n_devices)`; a
+    `rowblock_balanced` partition is accepted too (shards are padded to
+    the largest part, so balance trades padding for equal work).  Cache
+    `prepare_ell_shards` + `spmv_row_sharded_prepared` for repeated
+    multiplies.
+    """
+    mesh = mesh if mesh is not None else row_mesh()
+    n_shards = mesh.shape[_AXIS]
+    if partition is None:
+        if n_shards <= csr.n_rows:
+            partition = rowblock_equal(csr, n_shards)
+        else:
+            # more devices than rows: rowblock_equal caps its part count,
+            # but shard_map needs exactly n_shards slabs -- pad with
+            # trailing empty parts (their slabs are all-zero rows)
+            starts = np.minimum(np.arange(n_shards + 1, dtype=np.int64),
+                                csr.n_rows)
+            indptr = np.asarray(csr.indptr, dtype=np.int64)
+            partition = RowPartition(
+                starts=starts, nnz_per_part=indptr[starts[1:]]
+                - indptr[starts[:-1]])
+    if partition.n_parts != n_shards:
+        raise ValueError(f"partition has {partition.n_parts} parts for "
+                         f"{n_shards} devices on axis '{_AXIS}'")
+    prep = prepare_ell_shards(csr, partition, bm=bm)
+    return spmv_row_sharded_prepared(prep, x, mesh, interpret=interpret)
+
+
+def spmv_row_sharded_prepared(prep: ShardedELL, x: jax.Array, mesh: Mesh,
+                              interpret: Optional[bool] = None) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bm = prep.bm
+    _, rows_pad, w = prep.data.shape
+    xp = jnp.pad(x, (0, _round_up(prep.n_cols, 128) - prep.n_cols))
+
+    def one_shard(data, idx, xv):
+        # data/idx arrive as this device's (1, rows_pad, w) slab
+        b_dim = rows_pad // bm
+        y = _ell.spmv_ell_pallas(data.reshape(b_dim, bm, w),
+                                 idx.reshape(b_dim, bm, w),
+                                 xv, interpret=interpret)
+        return y.reshape(1, rows_pad)
+
+    sharded = shard_map(
+        one_shard, mesh=mesh,
+        in_specs=(PartitionSpec(_AXIS, None, None),
+                  PartitionSpec(_AXIS, None, None),
+                  PartitionSpec()),
+        out_specs=PartitionSpec(_AXIS, None),
+        check_vma=False)
+    y_slabs = jax.jit(sharded)(prep.data, prep.idx, xp)   # (parts, rows_pad)
+    parts = [y_slabs[p, : int(prep.starts[p + 1] - prep.starts[p])]
+             for p in range(y_slabs.shape[0])]
+    return jnp.concatenate(parts)[: prep.n_rows]

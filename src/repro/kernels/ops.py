@@ -92,6 +92,53 @@ def spmv_ell(ell: ELL, x: jax.Array, bm: int = 128,
 
 
 # ---------------------------------------------------------------------------
+# ELL row shards (host prep for the shard_map row-parallel path)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedELL:
+    """Row-partitioned ELL layout: one (rows, width) slab per shard,
+    stacked so `shard_map` can split the leading axis across devices.
+    Column indices stay global (x is replicated); padding slots index
+    col 0 with value 0."""
+    data: jax.Array      # (parts, rows_pad, W)
+    idx: jax.Array       # (parts, rows_pad, W) int32, global columns
+    n_rows: int
+    n_cols: int
+    starts: np.ndarray   # (parts+1,) row range per shard
+    bm: int              # row-block size the kernel tiles rows_pad into
+
+
+def prepare_ell_shards(csr: CSR, partition, bm: int = 128,
+                       pad_mult: int = 128) -> ShardedELL:
+    """Pack each `RowPartition` part into one padded ELL slab.
+
+    All shards share the global max row width (padded to `pad_mult`) and
+    the max part row count (padded to `bm`), so the stacked arrays are
+    rectangular -- the price of `shard_map`-compatible layout is padding,
+    exactly like `prepare_csr`'s per-cell padding.
+    """
+    starts = np.asarray(partition.starts, dtype=np.int64)
+    n_parts = len(starts) - 1
+    indptr = np.asarray(csr.indptr, dtype=np.int64)
+    row_len = np.diff(indptr)
+    w = _round_up(max(int(row_len.max()) if len(row_len) else 1, 1), pad_mult)
+    rows_pad = _round_up(max(int(np.diff(starts).max()), 1), bm)
+
+    D = np.zeros((n_parts, rows_pad, w), dtype=np.asarray(csr.data).dtype)
+    C = np.zeros((n_parts, rows_pad, w), dtype=np.int32)
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), row_len)
+    part_of = np.searchsorted(starts, rows, side="right") - 1
+    inner = np.arange(csr.nnz, dtype=np.int64) - indptr[rows]
+    D[part_of, rows - starts[part_of], inner] = np.asarray(csr.data)
+    C[part_of, rows - starts[part_of], inner] = \
+        np.asarray(csr.indices).astype(np.int32)
+    return ShardedELL(data=jnp.asarray(D), idx=jnp.asarray(C),
+                      n_rows=csr.n_rows, n_cols=csr.n_cols,
+                      starts=starts, bm=bm)
+
+
+# ---------------------------------------------------------------------------
 # CSR (column-blocked, padded)
 # ---------------------------------------------------------------------------
 

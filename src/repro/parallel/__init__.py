@@ -1,0 +1,27 @@
+"""repro.parallel — multithreaded SpMV scaling engine.
+
+The title axis of the paper ("Multithreaded Performance") made
+executable: N threads, each replaying its `RowPartition` slice of the
+SpMV demand stream through **private** L1/L2 caches while all threads on
+a socket contend for one **shared** last-level cache and one DRAM link.
+Replay is round-robin interleaved and fully deterministic, so
+per-thread event counters are bit-identical across runs.
+
+  engine    ParallelSpec, partitioned traces, the interleaved replay
+  scaling   cycle/bandwidth/queueing time model, prefetcher-shutoff
+            fixed point, speedup curves
+
+The sweep harness with the thread axis lives in `repro.telemetry.sweep`
+(`scaling_sweep`) and its reports in `repro.telemetry.report`
+(`scaling_report`, `scaling_gap_report`); the hardware-side sharded
+execution path is `repro.distributed.spmv`.
+"""
+from .engine import ParallelRun, ParallelSpec, partitioned_traces, replay_parallel
+from .scaling import (ParallelMetrics, parallel_metrics, simulate_parallel,
+                      thread_cycles)
+
+__all__ = [
+    "ParallelRun", "ParallelSpec", "partitioned_traces", "replay_parallel",
+    "ParallelMetrics", "parallel_metrics", "simulate_parallel",
+    "thread_cycles",
+]

@@ -1,0 +1,178 @@
+"""Time model over a `ParallelRun`: latency, bandwidth, queueing, shutoff.
+
+Turns per-thread event counters into one wall-time estimate per thread
+count so speedup curves can be drawn.  The model reuses the single-core
+constants (`telemetry.topdown.COMPUTE_CPN`, `MECH_HIT_CYCLES`,
+`MachineModel.l3_hit_cycles/dram_cycles/mlp`) and adds the two
+multithreaded effects the paper measures:
+
+  * a per-socket DRAM **bandwidth floor** — all threads on a socket share
+    one memory link, so execution time is at least the socket's DRAM
+    line traffic divided by `dram_bw_gbs`; near saturation a queueing
+    term inflates miss latency (same form as
+    `cache_model.analytic_metrics_from_profile`);
+  * the §IV-C **prefetcher shutoff** — when a socket's *demand* DRAM
+    utilization exceeds `machine.pf_shutoff_util`, its threads' stream
+    prefetchers turn off and the replay is repeated once with them
+    disabled (a deterministic one-step fixed point: R-MAT's gather
+    misses congest the link and kill the prefetcher; FD's don't).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.telemetry import events as ev
+# The single-core topdown model owns the calibration constants; sharing
+# them (rather than re-stating the literals) keeps single-stream and
+# multithreaded report rows comparable when either is re-tuned.
+from repro.telemetry.topdown import COMPUTE_CPN, MECH_HIT_CYCLES
+
+from .engine import ParallelRun, ParallelSpec, partitioned_traces, replay_parallel
+
+# DRAM utilization above which queueing delay inflates miss latency, and
+# the inflation cap (mirrors cache_model's saturated-DRAM stall term).
+QUEUE_UTIL_KNEE = 0.8
+QUEUE_UTIL_CAP = 1.0
+
+
+def thread_cycles(c, machine, nnz: int) -> Tuple[float, float]:
+    """(compute_cycles, stall_cycles) for one thread's counters."""
+    mech_hits = c[ev.VICTIM_HIT] + c[ev.MISS_CACHE_HIT] + c[ev.STREAM_HIT]
+    stall = (c[ev.L3_DEMAND_HIT] * machine.l3_hit_cycles
+             + c[ev.L3_DEMAND_MISS] * machine.dram_cycles
+             + mech_hits * MECH_HIT_CYCLES) / machine.mlp
+    return nnz * COMPUTE_CPN, stall
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelMetrics:
+    """Headline numbers for one (matrix, partition, spec) replay."""
+
+    threads: int
+    time_s: float                 # max(latency, bandwidth) after queueing
+    lat_time_s: float             # slowest thread's cycle estimate
+    bw_time_s: float              # slowest socket's DRAM-traffic floor
+    dram_util: float              # bw_time / time (pre-queueing)
+    demand_util: float            # demand-only DRAM utilization (max socket)
+    dram_bytes: int               # total DRAM line traffic, all sockets
+    pf_on_frac: float             # threads whose prefetcher stayed on
+    nnz_per_thread: Tuple[int, ...]
+    cycles_per_thread: Tuple[float, ...]
+    l2_mpki: Tuple[float, ...]    # per-thread private-L2 demand MPKI
+    llc_mpki: Tuple[float, ...]   # per-thread shared-LLC demand MPKI
+
+    @property
+    def l2_mpki_mean(self) -> float:
+        return float(np.mean(self.l2_mpki)) if self.l2_mpki else 0.0
+
+    @property
+    def l2_mpki_max(self) -> float:
+        return float(np.max(self.l2_mpki)) if self.l2_mpki else 0.0
+
+    def gflops_est(self) -> float:
+        nnz = sum(self.nnz_per_thread)
+        return 2.0 * nnz / max(self.time_s, 1e-30) / 1e9
+
+
+def parallel_metrics(run: ParallelRun, machine,
+                     nnz_per_thread) -> ParallelMetrics:
+    """Roll a replay into the time model (deterministic, pure function)."""
+    lb = machine.line_bytes
+    nnz_per_thread = tuple(int(v) for v in nnz_per_thread)
+    freq = machine.freq_ghz * 1e9
+    bw = machine.dram_bw_gbs * 1e9
+
+    # SMT oversubscription: more threads than cores on a socket share issue
+    # ports, multiplying compute cycles (stalls still overlap across SMT).
+    socket_threads = {s: int(np.sum(run.sockets == s))
+                      for s in set(run.sockets.tolist())}
+    compute = np.empty(run.n_threads)
+    stall = np.empty(run.n_threads)
+    for t, c in enumerate(run.counters):
+        compute[t], stall[t] = thread_cycles(c, machine, nnz_per_thread[t])
+        compute[t] *= max(1.0, socket_threads[int(run.sockets[t])]
+                          / machine.cores_per_socket)
+
+    # DRAM line traffic per socket: demand fills + prefetcher fills (the
+    # prefetcher pulls from memory; lines already LLC-resident are a small
+    # minority for these streams, so all fills are charged to the link).
+    sockets = sorted(set(run.sockets.tolist()))
+    demand_b = {s: 0 for s in sockets}
+    total_b = {s: 0 for s in sockets}
+    for t, c in enumerate(run.counters):
+        s = int(run.sockets[t])
+        demand_b[s] += c[ev.L3_DEMAND_MISS] * lb
+        total_b[s] += (c[ev.L3_DEMAND_MISS] + c[ev.L2_PREFETCH_FILL]) * lb
+
+    lat_time = float(np.max(compute + stall)) / freq
+    bw_time = max(total_b[s] / bw for s in sockets)
+    time0 = max(lat_time, bw_time)
+    dram_util = bw_time / max(time0, 1e-30)
+
+    # queueing delay: near saturation, misses wait on the memory controller.
+    # Normalized so the factor is 1.0 at the knee and grows continuously
+    # (same 1/sqrt(headroom) shape as cache_model's saturated-DRAM term).
+    if dram_util > QUEUE_UTIL_KNEE:
+        u = min(dram_util, QUEUE_UTIL_CAP)
+        stall = stall * math.sqrt((1.05 - QUEUE_UTIL_KNEE) / (1.05 - u))
+        lat_time = float(np.max(compute + stall)) / freq
+    time_s = max(lat_time, bw_time)
+    demand_util = max(demand_b[s] / bw for s in sockets) / max(time_s, 1e-30)
+
+    kinst = np.maximum(np.array(nnz_per_thread, dtype=np.float64)
+                       * machine.instr_per_nnz / 1e3, 1e-12)
+    l2_mpki = tuple(c[ev.L2_DEMAND_MISS] / k
+                    for c, k in zip(run.counters, kinst))
+    llc_mpki = tuple(c[ev.L3_DEMAND_MISS] / k
+                     for c, k in zip(run.counters, kinst))
+    return ParallelMetrics(
+        threads=run.n_threads,
+        time_s=time_s, lat_time_s=lat_time, bw_time_s=bw_time,
+        dram_util=dram_util, demand_util=min(demand_util, 1.0),
+        dram_bytes=int(sum(total_b.values())),
+        pf_on_frac=float(np.mean(run.pf_enabled)) if run.n_threads else 0.0,
+        nnz_per_thread=nnz_per_thread,
+        cycles_per_thread=tuple(float(v) for v in compute + stall),
+        l2_mpki=l2_mpki, llc_mpki=llc_mpki,
+    )
+
+
+def simulate_parallel(csr, partition, machine, spec: ParallelSpec,
+                      sweeps: int = 2,
+                      traces: Optional[list] = None
+                      ) -> Tuple[ParallelRun, ParallelMetrics]:
+    """Replay a partitioned matrix and apply the prefetcher-shutoff
+    fixed point.  Returns the final (run, metrics) pair.
+
+    `traces` overrides the partition-derived traces (prebuilt ones can be
+    shared across specs, like `sweep.run_point` does for mechanisms).
+    """
+    if traces is None:
+        traces = partitioned_traces(csr, partition, machine)
+    nnz = np.asarray(partition.nnz_per_part, dtype=np.int64)
+    run = replay_parallel(traces, machine, spec, sweeps=sweeps)
+    metrics = parallel_metrics(run, machine, nnz)
+
+    if spec.prefetcher and spec.pf_shutoff:
+        # per-socket demand utilization decides which sockets lose their
+        # prefetchers; one extra deterministic pass applies the decision
+        lb, bw = machine.line_bytes, machine.dram_bw_gbs * 1e9
+        shut = set()
+        for s in sorted(set(run.sockets.tolist())):
+            demand = sum(run.counters[t][ev.L3_DEMAND_MISS] * lb
+                         for t in range(run.n_threads)
+                         if int(run.sockets[t]) == s)
+            if demand / bw / max(metrics.time_s, 1e-30) \
+                    > machine.pf_shutoff_util:
+                shut.add(s)
+        if shut:
+            mask = [int(run.sockets[t]) not in shut
+                    for t in range(run.n_threads)]
+            run = replay_parallel(traces, machine, spec, sweeps=sweeps,
+                                  pf_enabled=mask)
+            metrics = parallel_metrics(run, machine, nnz)
+    return run, metrics

@@ -1,21 +1,28 @@
 """repro.telemetry — pluggable memory-hierarchy simulation + topdown metrics.
 
-The measurement layer for the paper's §V architecture proposals: instead of
-one hard-coded fully-associative LRU hierarchy, compose set-associative
-levels with victim caches, miss caches, and stream buffers, count named
-hardware events, and roll them up into a topdown metric tree.
+The measurement layer for the paper's §V architecture proposals and the
+multithreaded sweeps built on them: compose set-associative levels with
+victim caches, miss caches, and stream buffers, count named hardware
+events, and roll them up into a topdown metric tree.  Sweeps cross four
+axes — geometry × mechanism × reordering (`repro.reorder` strategies
+applied before tracing) × threads (`scaling_sweep`, which drives the
+`repro.parallel` shared-LLC engine).
 
   events     named hardware-event counters (L2_DEMAND_MISS, VICTIM_HIT, ...)
   hierarchy  set-assoc. caches + prefetcher + §V mechanisms; trace replay
   topdown    staged metric tree (memory-bound -> L3/DRAM-bound, MPKI family)
-  sweep      geometry x mechanism x matrix-kind sweep harness
-  report     CSV / JSON / markdown rendering + FD-vs-R-MAT gap report
+  sweep      geometry x mechanism x reorder x thread sweep harness
+  report     CSV / JSON / markdown rendering + the bottom-line tables:
+             gap_report (hardware), reorder_gap_report (software),
+             scaling_report / scaling_gap_report (thread scaling)
 """
 from . import events, hierarchy, report, sweep, topdown
 from .events import EventCounters, known_events, register_event
 from .hierarchy import (CacheLevel, Hierarchy, HierarchySpec, MissCache,
                         SequentialPrefetcher, SetAssocCache, StreamBuffers,
                         VictimCache, spmv_address_trace)
+from .report import scaling_gap_report, scaling_report
+from .sweep import ScalingPoint, scaling_sweep
 from .topdown import MetricNode, topdown_tree, topdown_summary
 
 __all__ = [
@@ -24,4 +31,5 @@ __all__ = [
     "CacheLevel", "Hierarchy", "HierarchySpec", "MissCache",
     "SequentialPrefetcher", "SetAssocCache", "StreamBuffers", "VictimCache",
     "spmv_address_trace", "MetricNode", "topdown_tree", "topdown_summary",
+    "ScalingPoint", "scaling_sweep", "scaling_report", "scaling_gap_report",
 ]

@@ -240,9 +240,14 @@ class Hierarchy:
     """
 
     def __init__(self, levels: Sequence[CacheLevel],
-                 prefetcher: Optional[SequentialPrefetcher] = None):
+                 prefetcher: Optional[SequentialPrefetcher] = None,
+                 pf_level: int = 0):
+        """`pf_level` is the index of the level the prefetcher fills into
+        and filters against (the L2 in Sandy Bridge terms) -- 0 for the
+        legacy two-level stack, 1 when a private L1 sits in front."""
         self.levels = list(levels)
         self.prefetcher = prefetcher
+        self.pf_level = pf_level
 
     # -- construction -------------------------------------------------------
 
@@ -283,15 +288,16 @@ class Hierarchy:
         levels = self.levels
         pf = self.prefetcher
         if pf is not None and prefetchable:
-            l2cache = levels[0].cache
+            l2cache = levels[self.pf_level].cache
             for pline in pf.observe(line):
                 if not l2cache.contains(pline):
                     counts[L2_PREFETCH_FILL] = \
                         counts.get(L2_PREFETCH_FILL, 0) + 1
                     # fill bottom-up (L3 then L2), like the legacy simulator
-                    for li in range(len(levels) - 1, -1, -1):
+                    for li in range(len(levels) - 1, self.pf_level - 1, -1):
                         lv = levels[li]
-                        ev = lv.cache.insert(pline, prefetched=(li == 0))
+                        ev = lv.cache.insert(
+                            pline, prefetched=(li == self.pf_level))
                         if ev is not None:
                             for m in lv.mechanisms:
                                 m.on_evict(ev)
@@ -299,7 +305,7 @@ class Hierarchy:
             hit, was_pf = lv.cache.lookup(line)
             if hit:
                 counts[lv.hit_event] = counts.get(lv.hit_event, 0) + 1
-                if was_pf and li == 0:
+                if was_pf and li == self.pf_level:
                     counts[L2_PREFETCH_HIT] = \
                         counts.get(L2_PREFETCH_HIT, 0) + 1
                 return lv.name

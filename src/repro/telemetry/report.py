@@ -9,7 +9,7 @@ from __future__ import annotations
 import json
 from typing import Dict, Iterable, List, Sequence
 
-from .sweep import SweepPoint
+from .sweep import ScalingPoint, SweepPoint
 
 
 def _fmt(v) -> str:
@@ -104,6 +104,76 @@ def gap_report(points: Sequence[SweepPoint]) -> str:
                 f"{rm.summary.l2_mpki:.3f}",
                 closed,
             ]))
+    return "\n".join(lines)
+
+
+def scaling_report(points: Sequence[ScalingPoint]) -> str:
+    """Speedup curves from a `sweep.scaling_sweep`: one CSV row per
+    (kind, size, reorder, thread-count) with speedup, parallel
+    efficiency, load imbalance, per-thread miss rates (mean and worst
+    thread), DRAM utilization, and whether the prefetchers survived the
+    §IV-C shutoff."""
+    lines = ["# multithreaded scaling (private L1/L2, shared LLC + "
+             "bandwidth model)",
+             ",".join(ScalingPoint.header())]
+    for p in points:
+        lines.append(",".join(_fmt(v) for v in p.row()))
+    return "\n".join(lines)
+
+
+def scaling_gap_report(points: Sequence[ScalingPoint]) -> str:
+    """The paper's speedup separation, and how much of it each
+    reordering strategy closes.
+
+    Per (size, thread count), two normalizations:
+
+        gap            = fd(none).speedup - rmat(none).speedup
+        closed_r       = (rmat(r).speedup - rmat(none).speedup) / gap
+        closed_gf_r    = same formula on estimated GFLOPS
+
+    The GFLOPS column is the honest one for reorderings: RCM speeds up
+    the 1-thread baseline too, so its *relative* speedup can stay flat
+    (or dip) while absolute throughput at every thread count rises.
+    closed = 1.0 means the reordered R-MAT runs like FD; the paper's
+    headline is gap > 0 at every thread count (FD speedup strictly
+    dominates R-MAT).  Closed columns are left blank when the
+    denominator gap is negative or within noise (< 0.05 speedup /
+    < 2 % of FD throughput) -- dividing by a near-zero gap produces
+    ratios with no meaning.
+    """
+    by = {(p.kind, p.log2n, p.reorder, p.threads): p for p in points}
+    keys = sorted({(p.log2n, p.threads) for p in points if p.threads > 1})
+    reorders = []
+    for p in points:
+        if p.reorder not in reorders:
+            reorders.append(p.reorder)
+    extra = [r for r in reorders if r != "none"]
+    head = (["log2n", "threads", "fd_speedup", "rmat_speedup", "gap"]
+            + [f"gap_closed_{r}" for r in extra]
+            + [f"gap_closed_gflops_{r}" for r in extra])
+    lines = ["# FD vs R-MAT speedup gap per reordering strategy",
+             ",".join(head)]
+    for (log2n, threads) in keys:
+        fd = by.get(("fd", log2n, "none", threads))
+        rm = by.get(("rmat", log2n, "none", threads))
+        if fd is None or rm is None:
+            continue
+        gap = fd.speedup - rm.speedup
+        gf_gap = fd.metrics.gflops_est() - rm.metrics.gflops_est()
+        gap_ok = gap > 0.05
+        gf_ok = gf_gap > 0.02 * fd.metrics.gflops_est()
+        row = [str(log2n), str(threads), f"{fd.speedup:.3f}",
+               f"{rm.speedup:.3f}", f"{gap:.3f}"]
+        closed, closed_gf = [], []
+        for r in extra:
+            rr = by.get(("rmat", log2n, r, threads))
+            closed.append(
+                "" if rr is None or not gap_ok
+                else f"{(rr.speedup - rm.speedup) / gap:.3f}")
+            closed_gf.append(
+                "" if rr is None or not gf_ok
+                else f"{(rr.metrics.gflops_est() - rm.metrics.gflops_est()) / gf_gap:.3f}")
+        lines.append(",".join(row + closed + closed_gf))
     return "\n".join(lines)
 
 

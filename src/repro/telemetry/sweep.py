@@ -1,16 +1,24 @@
-"""Geometry x mechanism x matrix-structure sweep harness.
+"""Geometry x mechanism x reordering x thread sweep harness.
 
 Answers the paper's §V question quantitatively: replay the same SpMV
 demand traces (FD and R-MAT, several sizes) through candidate hierarchies
 -- baseline, victim cache, miss cache, stream buffers, combined -- and
 collect topdown metrics for each, so "does a victim cache + stream
 buffers close the FD vs R-MAT gap?" becomes a table instead of an
-argument.
+argument.  The reorder axis (`reorderings=` / `reorder_sweep`) crosses
+the same grid with the software permutations from `repro.reorder`.
 
-Threads are modeled the way the analytic model does (paper finding F2:
-serial and parallel miss rates match): each core replays its contiguous
-row slice through a private L2, while the shared L3 capacity is divided
-by the cores on the socket.
+Threads appear in two forms:
+
+  * `run_sweep(threads_list=...)` keeps the analytic shortcut (paper
+    finding F2: serial and parallel miss rates match): one
+    representative core replays its row slice against an L3 share
+    divided by the socket's cores.
+  * `scaling_sweep` (the thread axis proper, 1-32) drives
+    `repro.parallel`: every thread replays its `RowPartition` slice,
+    private L1/L2 per thread, one genuinely shared, contended LLC per
+    socket plus a DRAM bandwidth model -- this is what speedup curves
+    and `report.scaling_report` are built from.
 """
 from __future__ import annotations
 
@@ -170,6 +178,87 @@ def reorder_sweep(log2ns: Sequence[int] = (12,),
     return run_sweep(log2ns=log2ns, kinds=kinds, mechanisms=mechanisms,
                      machine=machine, threads_list=threads_list,
                      sweeps=sweeps, seed=seed, reorderings=reorderings)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalingPoint:
+    """One (matrix, reorder, thread-count) cell of a scaling sweep."""
+
+    kind: str                 # 'fd' | 'rmat'
+    log2n: int
+    nnz: int
+    threads: int
+    reorder: str
+    partition: str            # 'equal' | 'balanced'
+    imbalance: float          # max/mean nnz over threads (1.0 = perfect)
+    speedup: float            # time(1 thread) / time(threads), same cell
+    efficiency: float         # speedup / threads
+    metrics: object           # repro.parallel.ParallelMetrics
+
+    def row(self) -> List:
+        m = self.metrics
+        return [self.kind, self.log2n, self.nnz, self.reorder,
+                self.partition, self.threads, self.speedup, self.efficiency,
+                m.time_s * 1e6, self.imbalance, m.l2_mpki_mean,
+                m.l2_mpki_max, float(np.mean(m.llc_mpki)), m.dram_util,
+                m.pf_on_frac]
+
+    @staticmethod
+    def header() -> List[str]:
+        return ["kind", "log2n", "nnz", "reorder", "partition", "threads",
+                "speedup", "efficiency", "time_us", "imbalance",
+                "l2_mpki_mean", "l2_mpki_max", "llc_mpki_mean", "dram_util",
+                "pf_on"]
+
+
+def scaling_sweep(log2ns: Sequence[int] = (12,),
+                  kinds: Sequence[str] = ("fd", "rmat"),
+                  threads_list: Sequence[int] = (1, 2, 4, 8, 16, 32),
+                  spec=None, machine: MachineModel = SANDY_BRIDGE,
+                  partition: str = "equal",
+                  reorderings: Optional[Dict] = None,
+                  sweeps: int = 2, seed: int = 0) -> List[ScalingPoint]:
+    """The thread axis: multithreaded replay through `repro.parallel`.
+
+    For every (kind, size, reorder) the matrix is partitioned per thread
+    count and replayed through private caches + the shared, contended
+    LLC; speedup is measured against the same cell's 1-thread replay
+    (computed even when 1 is not in `threads_list`).  `reorderings` has
+    `run_sweep` semantics, so "how much of the scaling gap does RCM
+    close?" is one sweep: `reorderings={"none": None, "rcm": reorder.rcm}`.
+    """
+    from repro.core.partition import rowblock_balanced, rowblock_equal
+    from repro.parallel import ParallelSpec, simulate_parallel
+
+    spec = spec if spec is not None else ParallelSpec()
+    part_fn = rowblock_balanced if partition == "balanced" else rowblock_equal
+    reorderings = reorderings if reorderings is not None else {"none": None}
+    points: List[ScalingPoint] = []
+    for kind in kinds:
+        for log2n in log2ns:
+            base = _matrix(kind, 2 ** log2n, seed=seed)
+            for rlabel, strategy in reorderings.items():
+                csr = base if strategy is None else strategy(base).apply(base)
+                tl = sorted(set(threads_list) | {1})
+                t1_time = None
+                for threads in tl:
+                    part = part_fn(csr, threads)
+                    _, m = simulate_parallel(csr, part, machine, spec,
+                                             sweeps=sweeps)
+                    if threads == 1:
+                        t1_time = m.time_s
+                    if threads not in threads_list:
+                        continue
+                    speedup = t1_time / max(m.time_s, 1e-30)
+                    # partitioners cap parts at n_rows; record what ran
+                    threads_eff = part.n_parts
+                    points.append(ScalingPoint(
+                        kind=kind, log2n=log2n, nnz=csr.nnz,
+                        threads=threads_eff, reorder=rlabel,
+                        partition=partition,
+                        imbalance=part.imbalance(), speedup=speedup,
+                        efficiency=speedup / threads_eff, metrics=m))
+    return points
 
 
 def geometry_sweep(log2n: int = 14,

@@ -38,6 +38,7 @@ def test_docs_exist():
     assert "README.md" in names
     assert "architecture.md" in names
     assert "experiment_design.md" in names
+    assert "paper_mapping.md" in names
 
 
 def test_readme_has_executable_quickstart():

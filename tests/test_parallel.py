@@ -1,0 +1,237 @@
+"""Multithreaded scaling engine: determinism, 1-thread parity with the
+single-stream simulator, shared-LLC contention, the paper's speedup
+separation, and the sharded execution path."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cache_model import SANDY_BRIDGE, simulate_exact
+from repro.core.generators import fd_matrix, rmat_matrix
+from repro.core.partition import rowblock_balanced, rowblock_equal
+from repro.parallel import (ParallelSpec, parallel_metrics,
+                            partitioned_traces, replay_parallel,
+                            simulate_parallel)
+from repro.telemetry import events as ev
+from repro.telemetry.hierarchy import spmv_address_trace
+from repro.telemetry.report import scaling_gap_report, scaling_report
+from repro.telemetry.sweep import scaling_sweep
+
+# Working-set-scaled geometry (x ~ half the LLC at 2^11-2^12): the same
+# methodology as telemetry_bench's mechanism table.
+SCALED = ParallelSpec(l2_bytes=16 * 1024, llc_bytes=64 * 1024)
+
+
+# ---------------------------------------------------------------------------
+# Traces and partitions
+# ---------------------------------------------------------------------------
+
+def test_partitioned_traces_concatenate_to_single_stream():
+    csr = rmat_matrix(2 ** 10, seed=3)
+    part = rowblock_equal(csr, 5)
+    traces = partitioned_traces(csr, part, SANDY_BRIDGE)
+    assert len(traces) == 5
+    np.testing.assert_array_equal(
+        np.concatenate(traces), spmv_address_trace(csr, SANDY_BRIDGE))
+
+
+def test_rowblock_equal_no_empty_parts_when_parts_exceed_rows():
+    csr = rmat_matrix(16, seed=0)
+    part = rowblock_equal(csr, 64)          # more parts than rows
+    assert part.n_parts == 16               # capped at one row per part
+    assert (np.diff(part.starts) == 1).all()
+    # the old linspace split produced empty parts via float truncation
+    for parts in (3, 7, 11, 16):
+        p = rowblock_equal(csr, parts)
+        assert (np.diff(p.starts) > 0).all(), parts
+        assert p.starts[0] == 0 and p.starts[-1] == csr.n_rows
+
+
+# ---------------------------------------------------------------------------
+# Replay semantics
+# ---------------------------------------------------------------------------
+
+def test_replay_deterministic_bit_identical():
+    csr = rmat_matrix(2 ** 10, seed=7)
+    part = rowblock_equal(csr, 4)
+    traces = partitioned_traces(csr, part, SANDY_BRIDGE)
+    a = replay_parallel(traces, SANDY_BRIDGE, SCALED, sweeps=2)
+    b = replay_parallel(traces, SANDY_BRIDGE, SCALED, sweeps=2)
+    for ca, cb in zip(a.counters, b.counters):
+        assert ca.as_dict() == cb.as_dict()
+
+
+def test_one_thread_matches_simulate_exact():
+    """Machine geometry, one thread: the parallel engine must reproduce
+    the single-stream `cache_model.simulate_exact` counters exactly."""
+    for gen, seed in ((fd_matrix, 0), (rmat_matrix, 1)):
+        csr = gen(2 ** 11, seed=seed)
+        part = rowblock_equal(csr, 1)
+        run, _ = simulate_parallel(csr, part, SANDY_BRIDGE, ParallelSpec(),
+                                   sweeps=2)
+        c = run.counters[0]
+        got = {"l2_demand": c[ev.L2_DEMAND_MISS],
+               "l3_demand": c[ev.L3_DEMAND_MISS],
+               "pf_fills": c[ev.L2_PREFETCH_FILL],
+               "accesses": c[ev.ACCESS]}
+        assert got == simulate_exact(csr, sweeps=2)
+
+
+def test_access_conservation_across_threads():
+    csr = rmat_matrix(2 ** 10, seed=2)
+    part = rowblock_equal(csr, 8)
+    run, _ = simulate_parallel(csr, part, SANDY_BRIDGE, SCALED, sweeps=1)
+    total = sum(c[ev.ACCESS] for c in run.counters)
+    assert total == 2 * csr.n_rows + 3 * csr.nnz
+    for c in run.counters:
+        assert c[ev.ACCESS] == c[ev.L2_DEMAND_HIT] + c[ev.L2_DEMAND_MISS]
+
+
+def test_private_l1_level_counts_events():
+    csr = fd_matrix(2 ** 10)
+    part = rowblock_equal(csr, 2)
+    spec = ParallelSpec(l1_bytes=4 * 1024, l2_bytes=16 * 1024,
+                        llc_bytes=64 * 1024)
+    run, _ = simulate_parallel(csr, part, SANDY_BRIDGE, spec, sweeps=1)
+    for c in run.counters:
+        assert c["L1_DEMAND_HIT"] + c["L1_DEMAND_MISS"] == c[ev.ACCESS]
+
+
+def test_l1_size_does_not_perturb_l2_prefetch_fills():
+    """The prefetcher serves the L2: its fill filter must look at L2
+    contents, so L2_PREFETCH_FILL is independent of the L1 in front."""
+    csr = fd_matrix(2 ** 10)
+    part = rowblock_equal(csr, 2)
+
+    def pf_fills(l1_bytes):
+        spec = ParallelSpec(l1_bytes=l1_bytes, l2_bytes=16 * 1024,
+                            llc_bytes=64 * 1024)
+        run, _ = simulate_parallel(csr, part, SANDY_BRIDGE, spec, sweeps=1)
+        return [c[ev.L2_PREFETCH_FILL] for c in run.counters]
+
+    assert pf_fills(1 * 1024) == pf_fills(8 * 1024) == pf_fills(None)
+
+
+def test_shared_llc_contention_grows_with_threads():
+    """More threads on the socket -> more streams competing for the same
+    LLC -> each thread's shared-level misses per access rise."""
+    csr = rmat_matrix(2 ** 11, seed=0)
+    # tighter LLC than SCALED so x + streams genuinely overflow it
+    spec = ParallelSpec(l2_bytes=16 * 1024, llc_bytes=32 * 1024)
+
+    def llc_miss_rate(threads):
+        part = rowblock_equal(csr, threads)
+        run, _ = simulate_parallel(csr, part, SANDY_BRIDGE, spec, sweeps=2)
+        miss = sum(c[ev.L3_DEMAND_MISS] for c in run.counters)
+        acc = sum(c[ev.ACCESS] for c in run.counters)
+        return miss / acc
+
+    assert llc_miss_rate(8) > llc_miss_rate(2) > llc_miss_rate(1)
+
+
+# ---------------------------------------------------------------------------
+# Time model + the paper's headline
+# ---------------------------------------------------------------------------
+
+def test_fd_speedup_dominates_rmat():
+    """The paper's title result: FD scales strictly better than R-MAT at
+    every thread count (shared-LLC contention + bandwidth saturation hit
+    the random-gather workload first)."""
+    speedups = {}
+    for kind, gen in (("fd", fd_matrix), ("rmat", rmat_matrix)):
+        csr = gen(2 ** 11)
+        t1 = None
+        for threads in (1, 2, 8, 32):
+            part = rowblock_balanced(csr, threads)
+            _, m = simulate_parallel(csr, part, SANDY_BRIDGE, SCALED,
+                                     sweeps=2)
+            if threads == 1:
+                t1 = m.time_s
+            speedups[(kind, threads)] = t1 / m.time_s
+    for threads in (2, 8, 32):
+        assert speedups[("fd", threads)] > speedups[("rmat", threads)], \
+            (threads, speedups)
+
+
+def test_metrics_sane():
+    csr = rmat_matrix(2 ** 10, seed=4)
+    part = rowblock_equal(csr, 4)
+    run, m = simulate_parallel(csr, part, SANDY_BRIDGE, SCALED, sweeps=1)
+    assert m.threads == 4
+    assert m.time_s >= m.bw_time_s - 1e-18
+    assert m.time_s >= m.lat_time_s / 3.0   # queueing never shrinks time
+    assert 0.0 <= m.dram_util <= 1.0 + 1e-9
+    assert len(m.l2_mpki) == 4 and all(v >= 0 for v in m.l2_mpki)
+    assert m.dram_bytes > 0
+    assert np.isfinite(m.gflops_est())
+
+
+def test_metrics_reuse_prebuilt_traces():
+    csr = fd_matrix(2 ** 10)
+    part = rowblock_equal(csr, 2)
+    traces = partitioned_traces(csr, part, SANDY_BRIDGE)
+    run1, m1 = simulate_parallel(csr, part, SANDY_BRIDGE, SCALED, sweeps=1)
+    run2, m2 = simulate_parallel(csr, part, SANDY_BRIDGE, SCALED, sweeps=1,
+                                 traces=traces)
+    assert m1 == m2
+
+
+# ---------------------------------------------------------------------------
+# Sweep + reports
+# ---------------------------------------------------------------------------
+
+def test_scaling_sweep_grid_and_reports():
+    pts = scaling_sweep(log2ns=(10,), threads_list=(2, 4), spec=SCALED,
+                        sweeps=1,
+                        reorderings={"none": None})
+    assert len(pts) == 2 * 2          # kinds x thread counts
+    assert {p.threads for p in pts} == {2, 4}
+    for p in pts:
+        assert p.speedup > 0 and p.efficiency <= p.speedup
+        assert p.imbalance >= 1.0
+    csv = scaling_report(pts)
+    assert "speedup" in csv and "fd" in csv and "rmat" in csv
+    gap = scaling_gap_report(pts)
+    assert "fd_speedup" in gap and "rmat_speedup" in gap
+
+
+def test_scaling_sweep_reorder_axis():
+    from repro import reorder
+
+    pts = scaling_sweep(log2ns=(10,), threads_list=(2,), spec=SCALED,
+                        sweeps=1, partition="balanced",
+                        reorderings={"none": None, "rcm": reorder.rcm})
+    assert {p.reorder for p in pts} == {"none", "rcm"}
+    gap = scaling_gap_report(pts)
+    assert "gap_closed_rcm" in gap and "gap_closed_gflops_rcm" in gap
+
+
+# ---------------------------------------------------------------------------
+# Sharded execution path (single device here; 8-device parity lives in
+# test_multidevice.py)
+# ---------------------------------------------------------------------------
+
+def test_spmv_row_sharded_matches_dense():
+    from repro.distributed import row_mesh, spmv_row_sharded
+
+    csr = rmat_matrix(256, seed=3)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=256)
+                    .astype(np.float32))
+    want = np.asarray(csr.to_dense()) @ np.asarray(x)
+    y = spmv_row_sharded(csr, x)
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-4, atol=1e-4)
+    # explicit balanced partition on an explicit mesh
+    mesh = row_mesh()
+    part = rowblock_balanced(csr, mesh.shape["shards"])
+    y2 = spmv_row_sharded(csr, x, mesh=mesh, partition=part)
+    np.testing.assert_allclose(np.asarray(y2), want, rtol=1e-4, atol=1e-4)
+
+
+def test_spmv_row_sharded_rejects_mismatched_partition():
+    from repro.distributed import row_mesh, spmv_row_sharded
+
+    csr = fd_matrix(128)
+    mesh = row_mesh()
+    bad = rowblock_equal(csr, mesh.shape["shards"] + 1)
+    with pytest.raises(ValueError):
+        spmv_row_sharded(csr, jnp.ones(128, jnp.float32), mesh=mesh,
+                         partition=bad)

@@ -44,6 +44,35 @@ def test_property_stripe_reassembly(n, stripes, seed):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
+def test_rowblock_equal_exact_integer_split():
+    """Regression: the float-linspace split could produce empty parts;
+    the integer split guarantees row counts differ by at most one and
+    caps parts at n_rows."""
+    csr = rmat_matrix(64, seed=1)
+    for parts in (1, 3, 7, 63, 64, 100):
+        p = rowblock_equal(csr, parts)
+        sizes = np.diff(p.starts)
+        assert (sizes > 0).all(), parts
+        assert sizes.max() - sizes.min() <= 1
+        assert p.starts[0] == 0 and p.starts[-1] == 64
+        assert p.n_parts == min(parts, 64)
+        assert p.nnz_per_part.sum() == csr.nnz
+
+
+def test_rowblock_balanced_imbalance_invariant_under_rcm():
+    """RCM clusters heavy rows (bad for equal-row splits) but the nnz-CDF
+    split must keep the load balanced on the permuted matrix too."""
+    from repro import reorder
+
+    csr = rmat_matrix(2048, permute=False, seed=2)
+    rcm = reorder.rcm(csr).apply(csr)
+    for parts in (4, 8, 16):
+        bal = rowblock_balanced(rcm, parts)
+        assert bal.imbalance() < 1.6, parts
+        assert bal.imbalance() <= rowblock_equal(rcm, parts).imbalance() + 1e-9
+        assert bal.nnz_per_part.sum() == rcm.nnz
+
+
 def test_sort_rows_by_nnz_permutation_correct():
     csr = rmat_matrix(256, permute=False, seed=4)
     sorted_csr, perm = sort_rows_by_nnz(csr)
