@@ -1,0 +1,99 @@
+"""Amortization benchmark: cold plan compile vs cached execute vs SpMM.
+
+The compile-once claim, measured: for FD and R-MAT at the paper-regime
+2^12 rows (2^10 under --smoke / --fast), time
+
+  cold     `plan.compile` + first execute (analysis, predictor scoring,
+           format conversion, layout padding, kernel warm-up);
+  warm     median cached `SpmvPlan.execute` over `REPEATS` multiplies
+           (zero matrix-side work per call);
+  spmm     `execute_many` on a REPEATS-vector batch, per vector (the
+           batched jnp SpMM path).
+
+`warm_frac` = warm / cold must stay < 0.20 for the amortized path to be
+doing its job (asserted here so `run.py --smoke` fails on regression).
+
+Invoked by `benchmarks.run` (section name: plan) or directly:
+
+    PYTHONPATH=src python -m benchmarks.plan_bench [--fast] [--smoke]
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import plan
+from repro.core.generators import fd_matrix, rmat_matrix
+
+from . import common
+
+REPEATS = 8          # acceptance: warm < 20% of cold over >= 8 multiplies
+WARM_FRAC_MAX = 0.20
+
+
+def _log2n() -> int:
+    if common.SMOKE or common.EMPIRICAL_MAX_LOG2 <= 16:
+        return 10
+    return 12
+
+
+def _time(fn) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return time.perf_counter() - t0
+
+
+def main() -> None:
+    log2n = _log2n()
+    n = 2 ** log2n
+    rows = []
+    for kind, gen in (("fd", fd_matrix), ("rmat", rmat_matrix)):
+        csr = gen(n, seed=0)
+        x = jnp.asarray(np.random.default_rng(0).normal(size=n)
+                        .astype(np.float32))
+        cache = plan.PlanCache()
+        opts = dict(reorder="auto", predictor="analytic", threads=8)
+
+        cold = _time(lambda: cache.get_or_compile(csr, **opts)
+                     .execute(x, interpret=True))
+        p = cache.get_or_compile(csr, **opts)        # cache hit
+
+        warm = float(np.median([
+            _time(lambda: p.execute(x, interpret=True))
+            for _ in range(REPEATS)]))
+
+        X = jnp.stack([x] * REPEATS)
+        p.execute_many(X)                            # build + jit once
+        spmm = _time(lambda: p.execute_many(X)) / REPEATS
+
+        frac = warm / max(cold, 1e-12)
+        rows.append([kind, log2n, csr.nnz, p.format_name, p.chosen,
+                     cold * 1e3, warm * 1e3, frac, spmm * 1e3,
+                     cold / max(warm, 1e-12)])
+        assert frac < WARM_FRAC_MAX, (
+            f"{kind} 2^{log2n}: warm per-call cost is {frac:.1%} of cold "
+            f"(must be < {WARM_FRAC_MAX:.0%}) — the amortized path regressed")
+
+    common.emit(rows,
+                ["kind", "log2n", "nnz", "format", "reorder", "cold_ms",
+                 "warm_ms", "warm_frac", "spmm_per_vec_ms", "amortization_x"],
+                f"plan amortization: cold compile vs cached execute "
+                f"(2^{log2n}, {REPEATS} repeats)")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="2^10 rows")
+    ap.add_argument("--smoke", action="store_true",
+                    help="2^10 rows (benchmark smoke job)")
+    args = ap.parse_args()
+    if args.fast:
+        common.EMPIRICAL_MAX_LOG2 = 14
+    if args.smoke:
+        common.SMOKE = True
+    main()

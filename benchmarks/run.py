@@ -3,8 +3,9 @@
 Runs one bench per paper table/figure plus the TPU-side benches, printing
 CSV blocks.  `--fast` trims the empirical sweep (CI); default reproduces
 the full paper sweep via synthetic profiles to 2^26.  `--smoke` is the
-benchmark smoke job: reorder + scaling only, tiny geometry, thread axis
-{1, 2} — just enough execution that those benches cannot silently rot.
+benchmark smoke job: reorder + scaling + plan amortization only, tiny
+geometry, thread axis {1, 2} — just enough execution that those benches
+(and the plan warm/cold ratio assertion) cannot silently rot.
 """
 from __future__ import annotations
 
@@ -12,7 +13,7 @@ import argparse
 import sys
 import time
 
-ALL = "paper,kernels,traffic,moe,serve,telemetry,reorder,scaling"
+ALL = "paper,kernels,traffic,moe,serve,telemetry,reorder,scaling,plan"
 
 
 def main(argv=None) -> None:
@@ -20,7 +21,8 @@ def main(argv=None) -> None:
     ap.add_argument("--fast", action="store_true",
                     help="cap empirical matrices at 2^16 rows")
     ap.add_argument("--smoke", action="store_true",
-                    help="reorder+scaling only, tiny geometry, threads {1,2}")
+                    help="reorder+scaling+plan only, tiny geometry, "
+                         "threads {1,2}")
     ap.add_argument("--only", default=None, help=f"comma list: {ALL}")
     args = ap.parse_args(argv)
 
@@ -31,7 +33,7 @@ def main(argv=None) -> None:
         common.SMOKE = True
         common.EMPIRICAL_MAX_LOG2 = 12
 
-    default = "reorder,scaling" if args.smoke else ALL
+    default = "reorder,scaling,plan" if args.smoke else ALL
     want = set((args.only or default).split(","))
     t0 = time.time()
 
@@ -59,6 +61,9 @@ def main(argv=None) -> None:
     if "scaling" in want:
         from . import scaling_bench
         scaling_bench.main()
+    if "plan" in want:
+        from . import plan_bench
+        plan_bench.main()
 
     print(f"# benchmarks.run completed in {time.time()-t0:.1f}s",
           file=sys.stderr)

@@ -1,0 +1,49 @@
+"""repro — jax/Pallas reproduction of "Quantifying the Effect of Matrix
+Structure on Multithreaded Performance of the SpMV Kernel".
+
+Subpackages (see README.md's package map):
+
+  core        generators, structure metrics, formats, cache model, SpMV
+  plan        compile-once execution plans (the repeated-traffic surface)
+  kernels     Pallas TPU kernels + prepared layouts
+  reorder     structure-recovering permutations
+  parallel    multithreaded shared-LLC scaling engine
+  telemetry   trace-driven hierarchy simulation + topdown reports
+  distributed meshes, collectives, row-sharded SpMV
+  serve / models / train / optim / data / checkpoint / launch / roofline
+              the production scaffolding
+
+The plan API is re-exported at top level (`repro.compile`,
+`repro.SpmvPlan`, ...) because it is the front door for repeated SpMV
+traffic.  Imports are lazy: `import repro` stays cheap, and each
+subpackage loads on first attribute access.
+"""
+from __future__ import annotations
+
+import importlib
+
+_SUBPACKAGES = (
+    "checkpoint", "configs", "core", "data", "distributed", "kernels",
+    "launch", "models", "optim", "parallel", "plan", "reorder", "roofline",
+    "serve", "telemetry", "train",
+)
+
+# plan API re-exported at top level (lazily, via __getattr__)
+_PLAN_EXPORTS = (
+    "SpmvPlan", "compile", "compile_plan", "PlanCache", "DEFAULT_CACHE",
+    "get_plan", "matrix_fingerprint", "save_plan", "load_plan",
+)
+
+__all__ = list(_SUBPACKAGES) + list(_PLAN_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _PLAN_EXPORTS:
+        return getattr(importlib.import_module(".plan", __name__), name)
+    if name in _SUBPACKAGES:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -29,6 +29,7 @@ Design points for the 1000+-node story:
 from __future__ import annotations
 
 import os
+import re
 import struct
 import threading
 from typing import Any, Dict, Optional, Tuple
@@ -193,6 +194,49 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = self.committed_steps()
         return steps[-1] if steps else None
+
+    def load_manifest(self, step: Optional[int] = None) -> Dict:
+        """Read the manifest of a committed step (newest when None)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        step_dir = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(step_dir, "manifest.msgpack"), "rb") as f:
+            return msgpack.unpackb(f.read())
+
+    # keystr of a string-keyed nested dict path: "['a']['b']..."
+    _DICT_KEY = re.compile(r"\['([^']*)'\]")
+
+    def restore_any(self, step: Optional[int] = None) -> Tuple[Params, int]:
+        """Schema-free restore: rebuild the tree from the manifest alone,
+        with no caller-supplied target.
+
+        Only string-keyed nested-dict trees are supported (every manifest
+        key must be a chain of `['k']` segments) — enough for state that
+        must be loadable before its structure is known, e.g. a serialized
+        `repro.plan.SpmvPlan` restored at process start.  Trees with list
+        or attribute nodes still need `restore(step, target)`.
+        """
+        if step is None:
+            step = self.latest_step()
+        manifest = self.load_manifest(step)
+        target: Dict = {}
+        for e in manifest["entries"]:
+            key = e["key"]
+            parts = self._DICT_KEY.findall(key)
+            if "".join(f"['{p}']" for p in parts) != key:
+                raise ValueError(
+                    f"restore_any supports string-keyed dict trees only; "
+                    f"cannot rebuild node {key!r} — use restore() with a "
+                    f"target tree")
+            node = target
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = np.zeros((0,))   # placeholder; restore()
+                                               # reads shape/dtype from the
+                                               # manifest, not the target
+        return self.restore(step, target)
 
     def restore(self, step: Optional[int], target: Params) -> Tuple[Params, int]:
         """Restore into the structure of `target` (elastic: shard count may

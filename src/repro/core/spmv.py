@@ -1,17 +1,23 @@
-"""Structure-aware SpMV: detect structure -> pick format -> pick kernel.
+"""Structure-aware SpMV: a thin client over `repro.plan`.
 
 This is the paper's conclusion turned into a library: *structure determines
-performance*, so the dispatcher measures structure (core.structure) and
-routes to the format whose TPU access pattern matches it:
+performance*, so the stack measures structure (core.structure) and routes
+to the format whose TPU access pattern matches it:
 
     banded        -> DIA   (streaming x windows; FD fast path)
     blocked       -> BELL  (dense 8x128 tiles; useful-byte gathers)
     unstructured  -> CSR   (column-blocked scalar-prefetch kernel)
 
-Every format has a pure-jnp implementation here (these are also the oracles
-the Pallas kernels in `repro.kernels` are validated against).  `spmv()` runs
-the jnp path by default and the Pallas path when `use_pallas=True` (interpret
-mode on CPU, compiled Mosaic on real TPUs).
+The decision machinery itself lives in `repro.plan` (compile-once:
+analyze -> reorder -> convert -> pre-padded kernel layout, frozen into a
+cached `SpmvPlan`).  This module keeps the pure-jnp implementations (the
+oracles the Pallas kernels in `repro.kernels` are validated against) and
+two thin entry points: `auto_format` delegates the format decision to
+`plan.choose_format`/`plan.convert`, and `spmv(..., use_pallas=True)`
+fetches the matrix's plan from the process-wide `plan.DEFAULT_CACHE`
+(compiling a minimal container plan on first touch), so repeated
+multiplies of the same matrix skip all per-call layout prep.  The jnp
+path stays direct — it is already jit-cached by XLA.
 """
 from __future__ import annotations
 
@@ -80,29 +86,36 @@ def auto_format(csr: CSR, report: structure.StructureReport | None = None,
                 reordering=None):
     """Pick the TPU-friendly format for this matrix's structure.
 
+    Thin client of `repro.plan`: the decision rule is
+    `plan.choose_format` and the conversion `plan.convert` (one-shot --
+    compile a `plan.SpmvPlan` instead to also freeze the kernel layout).
+
     With `reordering` (a `repro.reorder.Reordering`), the permutation is
     applied first and the structure re-analyzed on the permuted matrix, so
     the format decision reflects the post-reorder structure -- an RCM'd
     scrambled-banded matrix becomes DIA-eligible again.  Pass the same
     reordering to `spmv` to multiply in the original row order.
     """
+    from repro import plan as _plan
+
     if reordering is not None:
         csr = reordering.apply(csr)
         report = None
     rep = report or structure.analyze(csr)
-    if rep.kind == "banded" and rep.n_distinct_offsets <= 64:
-        return DIA.from_csr(csr)
-    if rep.kind == "blocked":
-        return BELL.from_csr(csr)
-    return csr
+    return _plan.convert(csr, _plan.choose_format(rep))
 
 
 def spmv(matrix, x: jax.Array, use_pallas: bool = False,
          interpret: bool | None = None, reordering=None) -> jax.Array:
     """Multiply any supported sparse container by x.
 
-    use_pallas=True routes to the Pallas kernels (repro.kernels); on CPU they
-    run in interpret mode, on TPU as compiled Mosaic kernels.
+    use_pallas=True routes through the matrix's cached execution plan
+    (`repro.plan.DEFAULT_CACHE`): the first call on a given container
+    compiles a minimal plan (one-time kernel layout prep), subsequent
+    calls replay it with zero matrix-side work.  On CPU the kernels run
+    in interpret mode, on TPU as compiled Mosaic kernels.  Inside a jit
+    trace (tracer containers cannot be fingerprinted) the call falls
+    back to the per-call `repro.kernels.ops` wrappers.
 
     `reordering` declares that `matrix` is the REORDERED operand (built via
     `reordering.apply` / `auto_format(..., reordering=...)`) while x and the
@@ -114,17 +127,21 @@ def spmv(matrix, x: jax.Array, use_pallas: bool = False,
                  interpret=interpret)
         return reordering.restore_y(y)
     if use_pallas:
+        from repro import plan as _plan
         from repro.kernels import ops as kops
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
-        if isinstance(matrix, DIA):
-            return kops.spmv_dia(matrix, x, interpret=interpret)
-        if isinstance(matrix, BELL):
-            return kops.spmv_bell(matrix, x, interpret=interpret)
-        if isinstance(matrix, CSR):
-            return kops.spmv_csr(matrix, x, interpret=interpret)
-        if isinstance(matrix, ELL):
-            return kops.spmv_ell(matrix, x, interpret=interpret)
+        if isinstance(matrix, (CSR, ELL, BELL, DIA)):
+            if _plan.is_concrete(matrix):
+                p = _plan.DEFAULT_CACHE.get_or_build(
+                    _plan.matrix_fingerprint(matrix) + "|container",
+                    lambda: _plan.plan_for_container(matrix))
+                return p.execute(x, interpret=interpret)
+            # tracer fallback: per-call wrappers (prep under jit where the
+            # format permits it)
+            direct = {DIA: kops.spmv_dia, BELL: kops.spmv_bell,
+                      CSR: kops.spmv_csr, ELL: kops.spmv_ell}
+            return direct[type(matrix)](matrix, x, interpret=interpret)
     if isinstance(matrix, CSR):
         return spmv_csr_jnp(matrix, x)
     if isinstance(matrix, ELL):

@@ -7,6 +7,12 @@ module executes the same `RowPartition` across real devices with
 (x replicated, like the threads sharing one x working set), and y comes
 back row-sharded.  On CPU the kernel runs in interpret mode, on TPU as
 compiled Mosaic — the same dispatch contract as `repro.kernels.ops`.
+
+Shard preparation is part of the matrix's execution plan:
+`spmv_row_sharded` fetches a row-sharded `SpmvPlan` from
+`repro.plan.DEFAULT_CACHE` (packing the ELL slabs only on first touch),
+or build one yourself with `repro.plan.compile(csr, mesh=mesh)` to also
+control reordering and serialize the planned shards.
 """
 from __future__ import annotations
 
@@ -20,7 +26,9 @@ from jax.sharding import Mesh, PartitionSpec
 from repro.core.formats import CSR
 from repro.core.partition import RowPartition, rowblock_equal
 from repro.kernels import spmv_ell as _ell
-from repro.kernels.ops import ShardedELL, prepare_ell_shards, _round_up
+from repro.kernels._layout import (ShardedELL, round_up,           # noqa: F401
+                                   prepare_ell_shards)  # re-exported for
+                                                        # pre-plan callers
 
 from .compat import shard_map
 
@@ -33,38 +41,46 @@ def row_mesh(devices=None) -> Mesh:
     return Mesh(np.array(devices), (_AXIS,))
 
 
+def default_row_partition(csr: CSR, mesh: Mesh) -> RowPartition:
+    """`rowblock_equal` over the mesh's shard axis, padded with trailing
+    empty parts when there are more devices than rows (`rowblock_equal`
+    caps its part count, but `shard_map` needs exactly one slab per
+    device)."""
+    n_shards = mesh.shape[_AXIS]
+    if n_shards <= csr.n_rows:
+        return rowblock_equal(csr, n_shards)
+    starts = np.minimum(np.arange(n_shards + 1, dtype=np.int64), csr.n_rows)
+    indptr = np.asarray(csr.indptr, dtype=np.int64)
+    return RowPartition(starts=starts,
+                        nnz_per_part=indptr[starts[1:]] - indptr[starts[:-1]])
+
+
 def spmv_row_sharded(csr: CSR, x: jax.Array, mesh: Optional[Mesh] = None,
                      partition: Optional[RowPartition] = None,
                      bm: int = 128, interpret: Optional[bool] = None
                      ) -> jax.Array:
     """y = A @ x with rows sharded across the mesh's 'shards' axis.
 
-    `partition` defaults to `rowblock_equal(csr, n_devices)`; a
+    `partition` defaults to `default_row_partition`; a
     `rowblock_balanced` partition is accepted too (shards are padded to
-    the largest part, so balance trades padding for equal work).  Cache
-    `prepare_ell_shards` + `spmv_row_sharded_prepared` for repeated
-    multiplies.
+    the largest part, so balance trades padding for equal work).  The
+    packed shard slabs are cached in `repro.plan.DEFAULT_CACHE` keyed by
+    matrix contents + partition, so repeated multiplies pay the ELL
+    packing once.
     """
+    from repro import plan as _plan
+
     mesh = mesh if mesh is not None else row_mesh()
     n_shards = mesh.shape[_AXIS]
     if partition is None:
-        if n_shards <= csr.n_rows:
-            partition = rowblock_equal(csr, n_shards)
-        else:
-            # more devices than rows: rowblock_equal caps its part count,
-            # but shard_map needs exactly n_shards slabs -- pad with
-            # trailing empty parts (their slabs are all-zero rows)
-            starts = np.minimum(np.arange(n_shards + 1, dtype=np.int64),
-                                csr.n_rows)
-            indptr = np.asarray(csr.indptr, dtype=np.int64)
-            partition = RowPartition(
-                starts=starts, nnz_per_part=indptr[starts[1:]]
-                - indptr[starts[:-1]])
+        partition = default_row_partition(csr, mesh)
     if partition.n_parts != n_shards:
         raise ValueError(f"partition has {partition.n_parts} parts for "
                          f"{n_shards} devices on axis '{_AXIS}'")
-    prep = prepare_ell_shards(csr, partition, bm=bm)
-    return spmv_row_sharded_prepared(prep, x, mesh, interpret=interpret)
+    p = _plan.DEFAULT_CACHE.get_or_compile(
+        csr, mesh=mesh, partition=partition, bm=bm, reorder="none",
+        predictor="none", keep_csr=False)
+    return p.execute(x, interpret=interpret)
 
 
 def spmv_row_sharded_prepared(prep: ShardedELL, x: jax.Array, mesh: Mesh,
@@ -73,7 +89,7 @@ def spmv_row_sharded_prepared(prep: ShardedELL, x: jax.Array, mesh: Mesh,
         interpret = jax.default_backend() != "tpu"
     bm = prep.bm
     _, rows_pad, w = prep.data.shape
-    xp = jnp.pad(x, (0, _round_up(prep.n_cols, 128) - prep.n_cols))
+    xp = jnp.pad(x, (0, round_up(prep.n_cols, 128) - prep.n_cols))
 
     def one_shard(data, idx, xv):
         # data/idx arrive as this device's (1, rows_pad, w) slab

@@ -4,6 +4,11 @@
   spmv_ell         fixed-width ELL: dense tiles, whole x pinned in VMEM
   spmv_csr         column-blocked CSR: x stripes pinned in VMEM (paper P2+P3)
   spmv_bell        blocked-ELL: data-dependent block-tile gathers (paper P3)
+  _layout          shared host-side layout prep: `prepare_*` (run once,
+                   at plan-compile time) + `spmv_*_prepared` (zero
+                   matrix-side work per call)
+  ops              per-call wrappers composing prepare + run, plus the
+                   attention entry points
   flash_attention  causal + sliding-window (banded) attention
   paged_attention  decode over block-table KV (BELL pattern on the cache)
 

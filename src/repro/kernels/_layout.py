@@ -1,0 +1,247 @@
+"""Shared host-side layout preparation for the Pallas SpMV kernels.
+
+One home for the padding / stripe-splitting / row-blocking arithmetic that
+used to be copied between `kernels.ops` and the per-format kernel modules.
+Every format gets a `prepare_*` function that does ALL matrix-side work
+(padding, reshaping, stripe bucketing) once, returning a `Prepared*`
+container, and a `spmv_*_prepared` runner that performs zero matrix-side
+work per call -- only the per-call x pad/reshape plus the Pallas kernel.
+
+This split is what `repro.plan` builds on: `prepare_*` runs at plan-compile
+time, `spmv_*_prepared` is the amortized hot path.  The per-call wrappers in
+`kernels.ops` are now just `prepare_*` + `spmv_*_prepared` composed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BELL, CSR, DIA, ELL
+
+from . import spmv_bell as _bell
+from . import spmv_csr as _csr
+from . import spmv_dia as _dia
+from . import spmv_ell as _ell
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(v: int, m: int) -> int:
+    return ceil_div(v, m) * m
+
+
+# ---------------------------------------------------------------------------
+# DIA
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PreparedDIA:
+    """Pre-padded banded layout: band rows padded to a bn multiple."""
+    band: jax.Array      # (n_diags, n_pad)
+    offsets: jax.Array   # (n_diags,) int32
+    n_rows: int
+    n_cols: int
+    bn: int
+
+
+def prepare_dia(dia: DIA, bn: int = 512) -> PreparedDIA:
+    n_pad = round_up(dia.n_rows, bn)
+    band = jnp.pad(dia.data, ((0, 0), (0, n_pad - dia.n_rows)))
+    return PreparedDIA(band=band, offsets=dia.offsets, n_rows=dia.n_rows,
+                       n_cols=dia.n_cols, bn=bn)
+
+
+def spmv_dia_prepared(prep: PreparedDIA, x: jax.Array,
+                      interpret: bool = True) -> jax.Array:
+    xp = jnp.pad(x, (0, prep.band.shape[1] - x.shape[0]))
+    y = _dia.spmv_dia_pallas(prep.band, prep.offsets, xp, bn=prep.bn,
+                             interpret=interpret)
+    return y[: prep.n_rows]
+
+
+# ---------------------------------------------------------------------------
+# BELL (already kernel-shaped; prep only records the x pad width)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PreparedBELL:
+    data: jax.Array        # (nbr, bpr, bm, bn)
+    block_cols: jax.Array  # (nbr, bpr) int32
+    n_rows: int
+    n_cols: int
+    x_pad: int             # padded x length (nbc * bn)
+
+
+def prepare_bell(bell: BELL) -> PreparedBELL:
+    nbc = ceil_div(bell.n_cols, bell.bn)
+    return PreparedBELL(data=bell.data, block_cols=bell.block_cols,
+                        n_rows=bell.n_rows, n_cols=bell.n_cols,
+                        x_pad=nbc * bell.bn)
+
+
+def spmv_bell_prepared(prep: PreparedBELL, x: jax.Array,
+                       interpret: bool = True) -> jax.Array:
+    xp = jnp.pad(x, (0, prep.x_pad - prep.n_cols))
+    y = _bell.spmv_bell_pallas(prep.data, prep.block_cols, xp,
+                               interpret=interpret)
+    return y[: prep.n_rows]
+
+
+# ---------------------------------------------------------------------------
+# ELL (row-blocked, fixed width)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PreparedELL:
+    """Row-blocked (B, bm, W) ELL arrays; padding rows index col 0 val 0."""
+    data: jax.Array      # (B, bm, W)
+    idx: jax.Array       # (B, bm, W) int32
+    n_rows: int
+    n_cols: int
+    x_pad: int           # padded x length
+
+
+def prepare_ell(ell: ELL, bm: int = 128, pad_mult: int = 128) -> PreparedELL:
+    n, w = ell.data.shape
+    n_pad = round_up(n, bm)
+    w_pad = round_up(max(w, 1), pad_mult)
+    data = jnp.pad(ell.data, ((0, n_pad - n), (0, w_pad - w)))
+    idx = jnp.pad(ell.indices, ((0, n_pad - n), (0, w_pad - w)))
+    b_dim = n_pad // bm
+    return PreparedELL(
+        data=data.reshape(b_dim, bm, w_pad),
+        idx=idx.reshape(b_dim, bm, w_pad).astype(jnp.int32),
+        n_rows=n, n_cols=ell.n_cols,
+        x_pad=round_up(ell.n_cols, pad_mult))
+
+
+def spmv_ell_prepared(prep: PreparedELL, x: jax.Array,
+                      interpret: bool = True) -> jax.Array:
+    xp = jnp.pad(x, (0, prep.x_pad - prep.n_cols))
+    y = _ell.spmv_ell_pallas(prep.data, prep.idx, xp, interpret=interpret)
+    return y.reshape(-1)[: prep.n_rows]
+
+
+# ---------------------------------------------------------------------------
+# ELL row shards (host prep for the shard_map row-parallel path)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedELL:
+    """Row-partitioned ELL layout: one (rows, width) slab per shard,
+    stacked so `shard_map` can split the leading axis across devices.
+    Column indices stay global (x is replicated); padding slots index
+    col 0 with value 0."""
+    data: jax.Array      # (parts, rows_pad, W)
+    idx: jax.Array       # (parts, rows_pad, W) int32, global columns
+    n_rows: int
+    n_cols: int
+    starts: np.ndarray   # (parts+1,) row range per shard
+    bm: int              # row-block size the kernel tiles rows_pad into
+
+
+def prepare_ell_shards(csr: CSR, partition, bm: int = 128,
+                       pad_mult: int = 128) -> ShardedELL:
+    """Pack each `RowPartition` part into one padded ELL slab.
+
+    All shards share the global max row width (padded to `pad_mult`) and
+    the max part row count (padded to `bm`), so the stacked arrays are
+    rectangular -- the price of `shard_map`-compatible layout is padding,
+    exactly like `prepare_csr`'s per-cell padding.
+    """
+    starts = np.asarray(partition.starts, dtype=np.int64)
+    n_parts = len(starts) - 1
+    indptr = np.asarray(csr.indptr, dtype=np.int64)
+    row_len = np.diff(indptr)
+    w = round_up(max(int(row_len.max()) if len(row_len) else 1, 1), pad_mult)
+    rows_pad = round_up(max(int(np.diff(starts).max()), 1), bm)
+
+    D = np.zeros((n_parts, rows_pad, w), dtype=np.asarray(csr.data).dtype)
+    C = np.zeros((n_parts, rows_pad, w), dtype=np.int32)
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), row_len)
+    part_of = np.searchsorted(starts, rows, side="right") - 1
+    inner = np.arange(csr.nnz, dtype=np.int64) - indptr[rows]
+    D[part_of, rows - starts[part_of], inner] = np.asarray(csr.data)
+    C[part_of, rows - starts[part_of], inner] = \
+        np.asarray(csr.indices).astype(np.int32)
+    return ShardedELL(data=jnp.asarray(D), idx=jnp.asarray(C),
+                      n_rows=csr.n_rows, n_cols=csr.n_cols,
+                      starts=starts, bm=bm)
+
+
+# ---------------------------------------------------------------------------
+# CSR (column-blocked, padded)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PaddedCSR:
+    """Host-prepped column-blocked layout for the spmv_csr kernel."""
+    vals: jax.Array    # (S, B, W)
+    cols: jax.Array    # (S, B, W) stripe-rebased
+    rowin: jax.Array   # (S, B, W) row within block
+    n_rows: int
+    n_cols: int
+    stripe_w: int
+    bm: int
+
+
+def prepare_csr(csr: CSR, n_stripes: int = 1, bm: int = 128,
+                pad_mult: int = 128) -> PaddedCSR:
+    """Pad each (stripe x row-block) cell to the max nonzero count."""
+    stripe_w = round_up(ceil_div(csr.n_cols, n_stripes), 128)
+    n_blocks = ceil_div(csr.n_rows, bm)
+    indptr = np.asarray(csr.indptr, dtype=np.int64)
+    cols = np.asarray(csr.indices, dtype=np.int64)
+    vals = np.asarray(csr.data)
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), np.diff(indptr))
+    s_of = cols // stripe_w
+    b_of = rows // bm
+    cell = s_of * n_blocks + b_of
+    order = np.argsort(cell, kind="stable")
+    cell_s, rows_s, cols_s, vals_s = (cell[order], rows[order], cols[order],
+                                      vals[order])
+    counts = np.bincount(cell_s, minlength=n_stripes * n_blocks)
+    w = max(int(counts.max()), 1)
+    w = round_up(w, pad_mult)
+    V = np.zeros((n_stripes, n_blocks, w), dtype=vals.dtype)
+    C = np.zeros((n_stripes, n_blocks, w), dtype=np.int32)
+    R = np.zeros((n_stripes, n_blocks, w), dtype=np.int32)
+    # position within cell
+    cell_start = np.zeros(n_stripes * n_blocks + 1, dtype=np.int64)
+    np.cumsum(counts, out=cell_start[1:])
+    inner = np.arange(len(cell_s)) - cell_start[cell_s]
+    s_idx = cell_s // n_blocks
+    b_idx = cell_s % n_blocks
+    V[s_idx, b_idx, inner] = vals_s
+    C[s_idx, b_idx, inner] = (cols_s % stripe_w).astype(np.int32)
+    R[s_idx, b_idx, inner] = (rows_s % bm).astype(np.int32)
+    return PaddedCSR(
+        vals=jnp.asarray(V), cols=jnp.asarray(C), rowin=jnp.asarray(R),
+        n_rows=csr.n_rows, n_cols=csr.n_cols, stripe_w=stripe_w, bm=bm,
+    )
+
+
+def spmv_csr_prepared(prep: PaddedCSR, x: jax.Array,
+                      interpret: bool = True) -> jax.Array:
+    s_dim = prep.vals.shape[0]
+    xp = jnp.pad(x, (0, s_dim * prep.stripe_w - prep.n_cols))
+    x_stripes = xp.reshape(s_dim, prep.stripe_w)
+    partials = _csr.spmv_csr_pallas(prep.vals, prep.cols, prep.rowin,
+                                    x_stripes, interpret=interpret)
+    y = partials.sum(axis=0).reshape(-1)      # reduce over stripes
+    return y[: prep.n_rows]
+
+
+__all__ = [
+    "ceil_div", "round_up",
+    "PreparedDIA", "prepare_dia", "spmv_dia_prepared",
+    "PreparedBELL", "prepare_bell", "spmv_bell_prepared",
+    "PreparedELL", "prepare_ell", "spmv_ell_prepared",
+    "ShardedELL", "prepare_ell_shards",
+    "PaddedCSR", "prepare_csr", "spmv_csr_prepared",
+]

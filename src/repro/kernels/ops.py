@@ -1,29 +1,38 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-These are what the rest of the framework calls.  Each wrapper:
-  * does host-side layout prep (padding, stripe splitting),
-  * runs the Pallas kernel (interpret=True on CPU, Mosaic on TPU),
-  * restores the caller's shapes.
+Two layers, split so repeated traffic never repeats host work:
+
+  * `repro.kernels._layout` owns ALL matrix-side preparation (padding,
+    stripe splitting, row blocking) as `prepare_*` functions returning
+    `Prepared*` containers, plus `spmv_*_prepared` runners that do zero
+    matrix-side work per call.  `repro.plan` calls `prepare_*` once at
+    plan-compile time and replays `spmv_*_prepared` forever after.
+  * THIS module keeps the per-call convenience wrappers (`spmv_dia`,
+    `spmv_bell`, `spmv_ell`, `spmv_csr`): each is just
+    `prepare_*` + `spmv_*_prepared` composed, for one-shot callers and
+    oracle tests.  Repeated multiplies should go through a compiled
+    `repro.plan.SpmvPlan` (or `core.spmv.spmv`, which caches plans).
+
+The prepared-layout containers (`PaddedCSR`, `ShardedELL`, ...) are
+re-exported here for backwards compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.formats import BELL, CSR, DIA, ELL
 from . import flash_attention as _fa
-from . import spmv_bell as _bell
-from . import spmv_csr as _csr
-from . import spmv_dia as _dia
-from . import spmv_ell as _ell
+from ._layout import (PaddedCSR, PreparedBELL, PreparedDIA, PreparedELL,
+                      ShardedELL, prepare_bell, prepare_csr, prepare_dia,
+                      prepare_ell, prepare_ell_shards, round_up,
+                      spmv_bell_prepared, spmv_csr_prepared,
+                      spmv_dia_prepared, spmv_ell_prepared)
 
-
-def _round_up(v: int, m: int) -> int:
-    return -(-v // m) * m
+# Backwards-compatible alias; new code should use `_layout.round_up`.
+_round_up = round_up
 
 
 def _reordered(kernel_fn):
@@ -41,171 +50,35 @@ def _reordered(kernel_fn):
 
 
 # ---------------------------------------------------------------------------
-# DIA
+# Per-call SpMV wrappers: prepare + run (cache the prep via repro.plan for
+# repeated multiplies)
 # ---------------------------------------------------------------------------
 
 @_reordered
 def spmv_dia(dia: DIA, x: jax.Array, bn: int = 512,
              interpret: bool = True) -> jax.Array:
-    n = dia.n_rows
-    n_pad = _round_up(n, bn)
-    band = jnp.pad(dia.data, ((0, 0), (0, n_pad - n)))
-    xp = jnp.pad(x, (0, n_pad - n))
-    y = _dia.spmv_dia_pallas(band, dia.offsets, xp, bn=bn,
-                             interpret=interpret)
-    return y[:n]
+    return spmv_dia_prepared(prepare_dia(dia, bn=bn), x, interpret=interpret)
 
-
-# ---------------------------------------------------------------------------
-# BELL
-# ---------------------------------------------------------------------------
 
 @_reordered
 def spmv_bell(bell: BELL, x: jax.Array, interpret: bool = True) -> jax.Array:
-    nbc = -(-bell.n_cols // bell.bn)
-    xp = jnp.pad(x, (0, nbc * bell.bn - bell.n_cols))
-    y = _bell.spmv_bell_pallas(bell.data, bell.block_cols, xp,
-                               interpret=interpret)
-    return y[: bell.n_rows]
+    return spmv_bell_prepared(prepare_bell(bell), x, interpret=interpret)
 
-
-# ---------------------------------------------------------------------------
-# ELL (row-blocked, fixed width)
-# ---------------------------------------------------------------------------
 
 @_reordered
 def spmv_ell(ell: ELL, x: jax.Array, bm: int = 128,
              interpret: bool = True) -> jax.Array:
     """Row-block the (n_rows, max_nnz) ELL arrays to (B, bm, W) and run the
     Pallas kernel; padding rows index col 0 with value 0."""
-    n, w = ell.data.shape
-    n_pad = _round_up(n, bm)
-    w_pad = _round_up(max(w, 1), 128)
-    data = jnp.pad(ell.data, ((0, n_pad - n), (0, w_pad - w)))
-    idx = jnp.pad(ell.indices, ((0, n_pad - n), (0, w_pad - w)))
-    b_dim = n_pad // bm
-    xp = jnp.pad(x, (0, _round_up(ell.n_cols, 128) - ell.n_cols))
-    y = _ell.spmv_ell_pallas(data.reshape(b_dim, bm, w_pad),
-                             idx.reshape(b_dim, bm, w_pad).astype(jnp.int32),
-                             xp, interpret=interpret)
-    return y.reshape(-1)[:n]
-
-
-# ---------------------------------------------------------------------------
-# ELL row shards (host prep for the shard_map row-parallel path)
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class ShardedELL:
-    """Row-partitioned ELL layout: one (rows, width) slab per shard,
-    stacked so `shard_map` can split the leading axis across devices.
-    Column indices stay global (x is replicated); padding slots index
-    col 0 with value 0."""
-    data: jax.Array      # (parts, rows_pad, W)
-    idx: jax.Array       # (parts, rows_pad, W) int32, global columns
-    n_rows: int
-    n_cols: int
-    starts: np.ndarray   # (parts+1,) row range per shard
-    bm: int              # row-block size the kernel tiles rows_pad into
-
-
-def prepare_ell_shards(csr: CSR, partition, bm: int = 128,
-                       pad_mult: int = 128) -> ShardedELL:
-    """Pack each `RowPartition` part into one padded ELL slab.
-
-    All shards share the global max row width (padded to `pad_mult`) and
-    the max part row count (padded to `bm`), so the stacked arrays are
-    rectangular -- the price of `shard_map`-compatible layout is padding,
-    exactly like `prepare_csr`'s per-cell padding.
-    """
-    starts = np.asarray(partition.starts, dtype=np.int64)
-    n_parts = len(starts) - 1
-    indptr = np.asarray(csr.indptr, dtype=np.int64)
-    row_len = np.diff(indptr)
-    w = _round_up(max(int(row_len.max()) if len(row_len) else 1, 1), pad_mult)
-    rows_pad = _round_up(max(int(np.diff(starts).max()), 1), bm)
-
-    D = np.zeros((n_parts, rows_pad, w), dtype=np.asarray(csr.data).dtype)
-    C = np.zeros((n_parts, rows_pad, w), dtype=np.int32)
-    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), row_len)
-    part_of = np.searchsorted(starts, rows, side="right") - 1
-    inner = np.arange(csr.nnz, dtype=np.int64) - indptr[rows]
-    D[part_of, rows - starts[part_of], inner] = np.asarray(csr.data)
-    C[part_of, rows - starts[part_of], inner] = \
-        np.asarray(csr.indices).astype(np.int32)
-    return ShardedELL(data=jnp.asarray(D), idx=jnp.asarray(C),
-                      n_rows=csr.n_rows, n_cols=csr.n_cols,
-                      starts=starts, bm=bm)
-
-
-# ---------------------------------------------------------------------------
-# CSR (column-blocked, padded)
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class PaddedCSR:
-    """Host-prepped column-blocked layout for the spmv_csr kernel."""
-    vals: jax.Array    # (S, B, W)
-    cols: jax.Array    # (S, B, W) stripe-rebased
-    rowin: jax.Array   # (S, B, W) row within block
-    n_rows: int
-    n_cols: int
-    stripe_w: int
-    bm: int
-
-
-def prepare_csr(csr: CSR, n_stripes: int = 1, bm: int = 128,
-                pad_mult: int = 128) -> PaddedCSR:
-    """Pad each (stripe x row-block) cell to the max nonzero count."""
-    stripe_w = _round_up(-(-csr.n_cols // n_stripes), 128)
-    n_blocks = -(-csr.n_rows // bm)
-    indptr = np.asarray(csr.indptr, dtype=np.int64)
-    cols = np.asarray(csr.indices, dtype=np.int64)
-    vals = np.asarray(csr.data)
-    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), np.diff(indptr))
-    s_of = cols // stripe_w
-    b_of = rows // bm
-    cell = s_of * n_blocks + b_of
-    order = np.argsort(cell, kind="stable")
-    cell_s, rows_s, cols_s, vals_s = (cell[order], rows[order], cols[order],
-                                      vals[order])
-    counts = np.bincount(cell_s, minlength=n_stripes * n_blocks)
-    w = max(int(counts.max()), 1)
-    w = _round_up(w, pad_mult)
-    V = np.zeros((n_stripes, n_blocks, w), dtype=vals.dtype)
-    C = np.zeros((n_stripes, n_blocks, w), dtype=np.int32)
-    R = np.zeros((n_stripes, n_blocks, w), dtype=np.int32)
-    # position within cell
-    cell_start = np.zeros(n_stripes * n_blocks + 1, dtype=np.int64)
-    np.cumsum(counts, out=cell_start[1:])
-    inner = np.arange(len(cell_s)) - cell_start[cell_s]
-    s_idx = cell_s // n_blocks
-    b_idx = cell_s % n_blocks
-    V[s_idx, b_idx, inner] = vals_s
-    C[s_idx, b_idx, inner] = (cols_s % stripe_w).astype(np.int32)
-    R[s_idx, b_idx, inner] = (rows_s % bm).astype(np.int32)
-    return PaddedCSR(
-        vals=jnp.asarray(V), cols=jnp.asarray(C), rowin=jnp.asarray(R),
-        n_rows=csr.n_rows, n_cols=csr.n_cols, stripe_w=stripe_w, bm=bm,
-    )
-
-
-def spmv_csr_prepared(prep: PaddedCSR, x: jax.Array,
-                      interpret: bool = True) -> jax.Array:
-    s_dim = prep.vals.shape[0]
-    xp = jnp.pad(x, (0, s_dim * prep.stripe_w - prep.n_cols))
-    x_stripes = xp.reshape(s_dim, prep.stripe_w)
-    partials = _csr.spmv_csr_pallas(prep.vals, prep.cols, prep.rowin,
-                                    x_stripes, interpret=interpret)
-    y = partials.sum(axis=0).reshape(-1)      # reduce over stripes
-    return y[: prep.n_rows]
+    return spmv_ell_prepared(prepare_ell(ell, bm=bm), x, interpret=interpret)
 
 
 @_reordered
 def spmv_csr(csr: CSR, x: jax.Array, n_stripes: int = 1,
              interpret: bool = True) -> jax.Array:
-    """Convenience wrapper: preps layout per call (cache PaddedCSR via
-    prepare_csr for repeated multiplies)."""
+    """Convenience wrapper: preps layout per call (compile a
+    `repro.plan.SpmvPlan` to cache the `PaddedCSR` for repeated
+    multiplies)."""
     return spmv_csr_prepared(prepare_csr(csr, n_stripes=n_stripes), x,
                              interpret=interpret)
 
@@ -247,3 +120,15 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     of = _fa.flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
                                     interpret=interpret)
     return of.reshape(b, h, sq, d)
+
+
+__all__ = [
+    "spmv_dia", "spmv_bell", "spmv_ell", "spmv_csr",
+    "paged_attention", "flash_attention",
+    # prepared-layout API (lives in _layout; re-exported for compatibility)
+    "PaddedCSR", "prepare_csr", "spmv_csr_prepared",
+    "PreparedDIA", "prepare_dia", "spmv_dia_prepared",
+    "PreparedBELL", "prepare_bell", "spmv_bell_prepared",
+    "PreparedELL", "prepare_ell", "spmv_ell_prepared",
+    "ShardedELL", "prepare_ell_shards",
+]

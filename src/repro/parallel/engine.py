@@ -96,7 +96,8 @@ class ParallelRun:
         return len(self.counters)
 
 
-def partitioned_traces(csr, partition, machine) -> List[np.ndarray]:
+def partitioned_traces(csr, partition, machine,
+                       trace: Optional[np.ndarray] = None) -> List[np.ndarray]:
     """Per-thread slices of the *global* SpMV address trace.
 
     All threads address one shared layout (same x/val/idx/ptr/y bases as
@@ -104,8 +105,13 @@ def partitioned_traces(csr, partition, machine) -> List[np.ndarray]:
     are disjoint while every thread gathers from the same x region —
     the sharing pattern that makes the LLC contended.  Concatenating the
     slices in part order reproduces the single-stream trace exactly.
+
+    `trace` overrides the freshly-computed global trace so one trace can
+    be sliced under many partitions (e.g. a cached
+    `SpmvPlan.address_trace` replayed across a whole thread axis).
     """
-    trace = spmv_address_trace(csr, machine)
+    if trace is None:
+        trace = spmv_address_trace(csr, machine)
     indptr = np.asarray(csr.indptr, dtype=np.int64)
     starts = np.asarray(partition.starts, dtype=np.int64)
     # row r starts at trace position 2*r + 3*indptr[r]

@@ -143,16 +143,19 @@ def parallel_metrics(run: ParallelRun, machine,
 
 def simulate_parallel(csr, partition, machine, spec: ParallelSpec,
                       sweeps: int = 2,
-                      traces: Optional[list] = None
-                      ) -> Tuple[ParallelRun, ParallelMetrics]:
+                      traces: Optional[list] = None,
+                      trace=None) -> Tuple[ParallelRun, ParallelMetrics]:
     """Replay a partitioned matrix and apply the prefetcher-shutoff
     fixed point.  Returns the final (run, metrics) pair.
 
     `traces` overrides the partition-derived traces (prebuilt ones can be
-    shared across specs, like `sweep.run_point` does for mechanisms).
+    shared across specs, like `sweep.run_point` does for mechanisms);
+    `trace` is the lighter variant: one prebuilt *global* trace, sliced
+    here per partition (what `scaling_sweep` passes from the matrix's
+    cached plan so the thread axis replays one trace).
     """
     if traces is None:
-        traces = partitioned_traces(csr, partition, machine)
+        traces = partitioned_traces(csr, partition, machine, trace=trace)
     nnz = np.asarray(partition.nnz_per_part, dtype=np.int64)
     run = replay_parallel(traces, machine, spec, sweeps=sweeps)
     metrics = parallel_metrics(run, machine, nnz)

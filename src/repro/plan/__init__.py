@@ -1,0 +1,44 @@
+"""repro.plan — compile-once SpMV: cached, serializable execution plans.
+
+The paper's workloads call SpMV thousands of times on the *same* matrix
+(graph analytics: eigensolvers, PageRank), so everything the per-call
+stack decides — structure analysis, reordering, format conversion,
+partitioning, Pallas layout padding — is pure overhead on the hot path.
+This package freezes that decision chain once per matrix:
+
+  fingerprint  content digests (a plan is valid while the bytes match)
+  compiler     `compile(matrix, ...)` -> SpmvPlan: candidate reorderings
+               scored by predicted contended-LLC throughput, winning
+               format converted, kernel layout pre-padded
+  plan         SpmvPlan: execute / execute_many (SpMM) /
+               power_iteration / address_trace
+  cache        PlanCache + the process-wide DEFAULT_CACHE behind the
+               thin-client call paths (core.spmv, distributed.spmv)
+  serial       save_plan / load_plan through repro.checkpoint
+
+Quick use:
+
+    from repro import plan
+    p = plan.compile(csr, threads=8)       # slow: analyze+predict+convert
+    y = p.execute(x)                       # fast: zero per-call prep
+    Y = p.execute_many(X)                  # batched SpMM
+    lam, v = p.power_iteration(x0)         # amortized iterative driver
+    plan.save_plan(p, "ckpt/")             # survives restart
+"""
+from .cache import DEFAULT_CACHE, PlanCache, get_plan
+from .compiler import (REPLAY_NNZ_MAX, choose_format, compile, convert,
+                       plan_for_container)
+from .fingerprint import fingerprint_arrays, is_concrete, matrix_fingerprint
+from .plan import SpmvPlan
+from .serial import load_plan, plan_from_state, plan_state, save_plan
+
+# alias for callers who prefer not to shadow the builtin
+compile_plan = compile
+
+__all__ = [
+    "SpmvPlan", "compile", "compile_plan", "plan_for_container",
+    "choose_format", "convert", "REPLAY_NNZ_MAX",
+    "PlanCache", "DEFAULT_CACHE", "get_plan",
+    "matrix_fingerprint", "fingerprint_arrays", "is_concrete",
+    "save_plan", "load_plan", "plan_state", "plan_from_state",
+]

@@ -1,0 +1,136 @@
+"""`PlanCache` — content-addressed storage of compiled plans.
+
+Keys are matrix fingerprints salted with the compile options that change
+the produced plan, so the cache is self-invalidating: mutate one stored
+value and the digest (hence the key) changes, and the stale plan simply
+stops being found and ages out of the LRU.  A module-level
+`DEFAULT_CACHE` backs the thin-client call paths (`core.spmv.spmv`,
+`distributed.spmv.spmv_row_sharded`), so repeated per-call traffic on
+the same matrix amortizes to one compile.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import threading
+from collections import OrderedDict
+from typing import Callable, Dict
+
+import numpy as np
+
+from .fingerprint import fingerprint_arrays, matrix_fingerprint
+
+
+def _fn_token(v) -> str:
+    """Distinguish callables beyond module+name: two lambdas (or closures
+    over different constants) must not collide, or a sweep passing
+    `lambda c: cache_block(c, 4)` and `lambda c: cache_block(c, 8)` would
+    silently share one cached plan."""
+    code = getattr(v, "__code__", None)
+    if code is not None:
+        h = hashlib.blake2b(digest_size=8)
+        h.update(code.co_code)
+        h.update(repr(code.co_consts).encode())
+        for cell in (getattr(v, "__closure__", None) or ()):
+            h.update(_opt_token(cell.cell_contents).encode())
+        h.update(repr(getattr(v, "__defaults__", None)).encode())
+        return (f"fn:{getattr(v, '__module__', '?')}."
+                f"{getattr(v, '__qualname__', '?')}:{h.hexdigest()}")
+    if isinstance(v, functools.partial):
+        kw = sorted((v.keywords or {}).items())
+        return f"partial:{_fn_token(v.func)}:{v.args!r}:{kw!r}"
+    return f"callable:{type(v).__module__}.{type(v).__qualname__}:{v!r}"
+
+
+def _opt_token(v) -> str:
+    """Stable string for one compile option (participates in cache keys)."""
+    from repro.reorder import Reordering
+
+    if isinstance(v, Reordering):
+        return f"Reordering:{v.strategy}:" + fingerprint_arrays(
+            np.asarray(v.row_perm), np.asarray(v.col_perm))
+    if callable(v):
+        return _fn_token(v)
+    if isinstance(v, np.ndarray):
+        return "nd:" + fingerprint_arrays(v)
+    if hasattr(v, "devices") and hasattr(v, "shape"):      # a jax Mesh
+        return f"mesh:{v.shape}:{[getattr(d, 'id', d) for d in np.ravel(v.devices)]}"
+    if hasattr(v, "starts"):                               # a RowPartition
+        return "part:" + fingerprint_arrays(np.asarray(v.starts))
+    return repr(v)
+
+
+class PlanCache:
+    """LRU cache of compiled `SpmvPlan`s keyed by matrix content + options."""
+
+    def __init__(self, max_plans: int = 32):
+        self.max_plans = max_plans
+        self._plans: "OrderedDict[str, object]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    @staticmethod
+    def key_for(matrix, **opts) -> str:
+        salt = ";".join(f"{k}={_opt_token(v)}" for k, v in sorted(opts.items()))
+        return f"{matrix_fingerprint(matrix)}|{salt}"
+
+    def get_or_build(self, key: str, builder: Callable[[], object]):
+        """Low-level entry: return the cached value for `key` or build,
+        insert (evicting LRU past `max_plans`), and return it."""
+        with self._lock:
+            if key in self._plans:
+                self._plans.move_to_end(key)
+                self.hits += 1
+                return self._plans[key]
+        value = builder()          # build outside the lock (can be slow)
+        with self._lock:
+            if key not in self._plans:
+                self.misses += 1
+                self._plans[key] = value
+                while len(self._plans) > self.max_plans:
+                    self._plans.popitem(last=False)
+            else:
+                self.hits += 1
+            self._plans.move_to_end(key)
+            return self._plans[key]
+
+    def get_or_compile(self, matrix, **opts):
+        """The main entry: `compile`d plan for (matrix contents, opts),
+        cached.  Same signature as `repro.plan.compile`."""
+        from .compiler import compile as _compile
+
+        key = self.key_for(matrix, **opts)
+        return self.get_or_build(key, lambda: _compile(matrix, **opts))
+
+    def invalidate(self, fingerprint: str) -> int:
+        """Drop every plan for the given matrix fingerprint (any options).
+        Returns the number of entries removed.  Rarely needed — content
+        addressing invalidates implicitly — but explicit for eviction."""
+        with self._lock:
+            stale = [k for k in self._plans
+                     if k.split("|", 1)[0] == fingerprint]
+            for k in stale:
+                del self._plans[k]
+            return len(stale)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._plans.clear()
+            self.hits = 0
+            self.misses = 0
+
+    def stats(self) -> Dict[str, int]:
+        return {"plans": len(self._plans), "hits": self.hits,
+                "misses": self.misses}
+
+
+DEFAULT_CACHE = PlanCache()
+
+
+def get_plan(matrix, **opts):
+    """`compile` through the process-wide `DEFAULT_CACHE`."""
+    return DEFAULT_CACHE.get_or_compile(matrix, **opts)

@@ -1,0 +1,267 @@
+"""`compile` — turn a matrix into a frozen `SpmvPlan`.
+
+The slow half of the compile-once split.  One call runs the whole
+decision chain the per-call stack used to repeat on every multiply:
+
+  fingerprint -> candidate reorderings -> predicted contended-LLC
+  throughput (per candidate) -> winning reordering ->
+  structure.analyze -> format -> conversion -> pre-padded kernel
+  layout -> SpmvPlan.
+
+Candidate selection is predictor-driven, not structure-heuristic-driven:
+each candidate's *permuted access stream* is scored by the same models
+the telemetry/parallel subsystems report with, and the ordering with the
+best predicted throughput wins.  The format is then read off the
+winner's permuted structure (DIA for recovered bands, BELL for block
+density, CSR otherwise) — so what the predictor scored is exactly the
+stream that format will exploit.  Forcing `format=` skips the O(nnz)
+structure analysis altogether.
+
+Predictors (`predictor=`):
+
+  * 'replay'    `repro.parallel.simulate_parallel` — per-thread trace
+                replay through private caches + the shared contended LLC,
+                scored by `ParallelMetrics.gflops_est()`.  Exact but
+                Python-speed; right for small/medium matrices.
+  * 'analytic'  `core.cache_model.analytic_metrics(..., threads=)` — the
+                Che-approximation model (with its shared-LLC thread
+                scaling), scored by `CacheMetrics.gflops`.  O(distinct
+                line counts); right for the 2^26 regime.
+  * 'auto'      'replay' when nnz <= REPLAY_NNZ_MAX, else 'analytic'.
+  * 'none'      no scoring: keeps the single given candidate (used by
+                sweep harnesses that pin the reordering themselves);
+                with reorder='auto' it degenerates to the identity
+                ordering — no candidate work is done at all.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+from repro.core import structure
+from repro.core.cache_model import SANDY_BRIDGE, MachineModel
+from repro.core.formats import BELL, CSR, DIA, ELL
+from repro.kernels import _layout as kl
+
+from .fingerprint import matrix_fingerprint
+from .plan import SpmvPlan
+
+# 'auto' predictor switches from trace replay to the analytic model above
+# this nnz (replay is Python-speed: ~5 trace entries per nonzero per sweep).
+REPLAY_NNZ_MAX = 16384
+
+# A reordered candidate must beat the identity ordering by this fraction of
+# predicted throughput to win: executing under a reordering pays an x-gather
+# and y-scatter per multiply that the stream-level predictors do not model,
+# so a sub-margin "win" is a loss in practice.
+REORDER_MARGIN = 0.02
+
+
+def choose_format(report) -> str:
+    """Format name for a structure report (the dispatch rule that used to
+    live inline in `core.spmv.auto_format`)."""
+    if report.kind == "banded" and report.n_distinct_offsets <= 64:
+        return "dia"
+    if report.kind == "blocked":
+        return "bell"
+    return "csr"
+
+
+def convert(csr: CSR, format_name: str):
+    """Convert a CSR to the named storage format."""
+    if format_name == "dia":
+        return DIA.from_csr(csr)
+    if format_name == "bell":
+        return BELL.from_csr(csr)
+    if format_name == "ell":
+        return ELL.from_csr(csr)
+    if format_name == "csr":
+        return csr
+    raise ValueError(f"unknown format {format_name!r}")
+
+
+def _prepare(container, format_name: str, *, bn: int, bm: int,
+             n_stripes: int):
+    """Pre-padded kernel layout for the chosen container (plan-build time;
+    `SpmvPlan.execute` replays it with zero matrix-side work)."""
+    if format_name == "dia":
+        return kl.prepare_dia(container, bn=bn)
+    if format_name == "bell":
+        return kl.prepare_bell(container)
+    if format_name == "ell":
+        return kl.prepare_ell(container, bm=bm)
+    if format_name == "csr":
+        return kl.prepare_csr(container, n_stripes=n_stripes, bm=bm)
+    raise ValueError(f"unknown format {format_name!r}")
+
+
+def _candidates(csr: CSR, reorder) -> Dict[str, object]:
+    """label -> Reordering|None for the `reorder=` argument forms:
+    'auto' (none + rcm), 'none'/None, a strategy name, a strategy
+    callable, or a concrete Reordering."""
+    from repro.reorder import STRATEGIES, Reordering
+
+    if reorder is None or reorder == "none":
+        return {"none": None}
+    if reorder == "auto":
+        return {"none": None, "rcm": STRATEGIES["rcm"](csr)}
+    if isinstance(reorder, str):
+        return {reorder: STRATEGIES[reorder](csr)}
+    if isinstance(reorder, Reordering):
+        return {reorder.strategy: reorder}
+    if callable(reorder):
+        r = reorder(csr)
+        return {getattr(r, "strategy", getattr(reorder, "__name__", "custom")): r}
+    raise TypeError(f"unsupported reorder argument: {reorder!r}")
+
+
+def _predict(csr: CSR, threads: int, machine: MachineModel,
+             parallel_spec, predictor: str) -> Dict:
+    """Predicted contended-LLC throughput of one candidate's stream."""
+    if predictor == "auto":
+        predictor = "replay" if csr.nnz <= REPLAY_NNZ_MAX else "analytic"
+    if predictor == "replay":
+        from repro.core.partition import rowblock_balanced
+        from repro.parallel import ParallelSpec, simulate_parallel
+
+        spec = parallel_spec if parallel_spec is not None else ParallelSpec()
+        part = rowblock_balanced(csr, threads)
+        _, m = simulate_parallel(csr, part, machine, spec, sweeps=2)
+        return {"predictor": "replay", "gflops": m.gflops_est(),
+                "time_s": m.time_s, "dram_util": m.dram_util,
+                "l2_mpki": m.l2_mpki_mean}
+    if predictor == "analytic":
+        from repro.core.cache_model import analytic_metrics
+
+        m = analytic_metrics(csr, machine, threads=threads)
+        return {"predictor": "analytic", "gflops": m.gflops,
+                "l2_mpki": m.l2_miss_rate,
+                "dram_util": m.dram_utilization}
+    raise ValueError(f"unknown predictor {predictor!r}")
+
+
+def compile(matrix: CSR, *,                       # noqa: A001 (plan.compile)
+            threads: int = 1,
+            mesh=None,
+            partition=None,
+            reorder="auto",
+            machine: MachineModel = SANDY_BRIDGE,
+            parallel_spec=None,
+            predictor: str = "auto",
+            format: Optional[str] = None,         # noqa: A002
+            use_pallas: bool = True,
+            interpret: Optional[bool] = None,
+            bn: int = 512, bm: int = 128, n_stripes: int = 1,
+            keep_csr: bool = True,
+            sample_rows: Optional[int] = 65536) -> SpmvPlan:
+    """Compile a CSR matrix into a frozen `SpmvPlan`.
+
+    threads    target thread count the predictor scores contention at
+    mesh       a device mesh: build a row-sharded plan (`shard_map` ELL
+               path) over `partition` (default `rowblock_equal`)
+    reorder    'auto' (predictor picks none-vs-RCM) | 'none'/None | a
+               strategy name/callable | a concrete Reordering
+    format     force a storage format ('dia'|'bell'|'ell'|'csr');
+               default reads it off each candidate's permuted structure
+    keep_csr   retain the permuted CSR on the plan (needed for
+               `execute_many`'s SpMM path and telemetry trace replay)
+    """
+    fp = matrix_fingerprint(matrix)
+    stats: Dict[str, float] = {}
+
+    if predictor == "none" and reorder == "auto":
+        # no scoring requested, so don't build candidates that could only
+        # be chosen by a score: 'auto' degenerates to the identity order
+        reorder = "none"
+
+    t0 = time.perf_counter()
+    cands = _candidates(matrix, reorder)
+    permuted_by = {label: (r.apply(matrix) if r is not None else matrix)
+                   for label, r in cands.items()}
+    stats["reorder_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    predicted: Dict[str, Dict] = {}
+    if predictor == "none" or len(cands) == 1:
+        chosen = next(iter(cands))
+    else:
+        for label, permuted in permuted_by.items():
+            predicted[label] = _predict(permuted, threads, machine,
+                                        parallel_spec, predictor)
+        chosen = max(predicted, key=lambda k: predicted[k]["gflops"])
+        if chosen != "none" and "none" in predicted:
+            # reordered winners must clear the transport margin
+            bar = predicted["none"]["gflops"] * (1.0 + REORDER_MARGIN)
+            if predicted[chosen]["gflops"] <= bar:
+                chosen = "none"
+    stats["predict_s"] = time.perf_counter() - t0
+
+    reordering, permuted = cands[chosen], permuted_by[chosen]
+    # the structure report only exists to pick a format; a forced format
+    # skips the O(nnz) analysis entirely (plan.report stays None)
+    if format is not None:
+        report = None
+        format_name = format
+    else:
+        t0 = time.perf_counter()
+        report = structure.analyze(permuted, sample_rows=sample_rows)
+        stats["analyze_s"] = time.perf_counter() - t0
+        format_name = choose_format(report)
+
+    if mesh is not None:
+        return _compile_sharded(fp, permuted, reordering, report, mesh,
+                                partition, bm=bm, threads=threads,
+                                predicted=predicted, chosen=chosen,
+                                interpret=interpret, stats=stats,
+                                keep_csr=keep_csr)
+
+    t0 = time.perf_counter()
+    container = convert(permuted, format_name)
+    stats["convert_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    prep = _prepare(container, format_name, bn=bn, bm=bm,
+                    n_stripes=n_stripes) if use_pallas else None
+    stats["prepare_s"] = time.perf_counter() - t0
+
+    return SpmvPlan(
+        fingerprint=fp, format_name=format_name, container=container,
+        prep=prep, reordering=reordering, report=report,
+        csr=permuted if keep_csr else None, threads=threads,
+        use_pallas=use_pallas, interpret=interpret, predicted=predicted,
+        chosen=chosen, compile_stats=stats)
+
+
+def _compile_sharded(fp, permuted, reordering, report, mesh, partition, *,
+                     bm, threads, predicted, chosen, interpret, stats,
+                     keep_csr) -> SpmvPlan:
+    """Row-sharded plan: `prepare_ell_shards` is the plan-build step, the
+    `shard_map` Pallas ELL kernel is the executor."""
+    from repro.distributed.spmv import default_row_partition
+
+    t0 = time.perf_counter()
+    if partition is None:
+        partition = default_row_partition(permuted, mesh)
+    prep = kl.prepare_ell_shards(permuted, partition, bm=bm)
+    stats["prepare_s"] = time.perf_counter() - t0
+    return SpmvPlan(
+        fingerprint=fp, format_name="ell-sharded", container=None,
+        prep=prep, reordering=reordering, report=report,
+        csr=permuted if keep_csr else None, threads=threads,
+        use_pallas=True, interpret=interpret, predicted=predicted,
+        chosen=chosen, compile_stats=stats, mesh=mesh)
+
+
+def plan_for_container(matrix, interpret: Optional[bool] = None) -> SpmvPlan:
+    """Minimal plan for an ALREADY-CONVERTED container (no analysis, no
+    reordering decision — the caller chose the format): just the one-time
+    kernel layout prep.  This is what `core.spmv.spmv` caches so repeated
+    per-call dispatch stops re-padding the matrix."""
+    names = {DIA: "dia", BELL: "bell", ELL: "ell", CSR: "csr"}
+    format_name = names[type(matrix)]
+    prep = _prepare(matrix, format_name, bn=512, bm=128, n_stripes=1)
+    return SpmvPlan(
+        fingerprint=matrix_fingerprint(matrix), format_name=format_name,
+        container=matrix, prep=prep,
+        csr=matrix if isinstance(matrix, CSR) else None,
+        interpret=interpret, chosen="container")

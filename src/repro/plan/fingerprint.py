@@ -1,0 +1,69 @@
+"""Content fingerprints for sparse-matrix containers.
+
+A plan is only reusable while the matrix it froze is byte-identical, so
+the cache key is a digest of the container's actual contents (shape,
+dtype, and raw array bytes), not its object identity: two CSRs built
+from the same COO stream fingerprint equal, and flipping one stored
+value changes the digest (content-addressed invalidation -- no epoch or
+dirty-bit protocol needed).
+
+Fingerprinting is host-side and requires concrete (non-tracer) arrays;
+`is_concrete` is the guard callers use before touching plan machinery
+from inside a jitted region.
+"""
+from __future__ import annotations
+
+import hashlib
+import weakref
+
+import jax
+import numpy as np
+
+
+def is_concrete(container) -> bool:
+    """True when every array leaf is a concrete (host-readable) array."""
+    return not any(isinstance(leaf, jax.core.Tracer)
+                   for leaf in jax.tree_util.tree_leaves(container))
+
+
+def fingerprint_arrays(*arrays, extra: str = "") -> str:
+    """blake2b digest over array shapes, dtypes, and raw bytes."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(extra.encode())
+    for a in arrays:
+        a = np.asarray(a)
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
+# id -> (weakref, digest).  Hashing is O(container bytes), so the hot
+# paths (spmv's per-call cache lookup) must not redo it per multiply:
+# the digest is memoized per *object*, with a weakref callback evicting
+# the entry on collection so a recycled id can never serve a stale
+# digest.  Containers are frozen pytrees of immutable arrays; mutating
+# one's underlying buffer in place is outside the content-addressing
+# contract.
+_FP_MEMO: dict = {}
+
+
+def matrix_fingerprint(matrix) -> str:
+    """Digest of any supported container (CSR/ELL/BELL/DIA or dense).
+
+    The container type participates in the digest, so a CSR and the DIA
+    converted from it do not collide even when they encode the same
+    values.  Memoized per container object (O(1) after the first call).
+    """
+    key = id(matrix)
+    entry = _FP_MEMO.get(key)
+    if entry is not None and entry[0]() is matrix:
+        return entry[1]
+    leaves = jax.tree_util.tree_leaves(matrix)
+    fp = fingerprint_arrays(*leaves, extra=type(matrix).__name__)
+    try:
+        ref = weakref.ref(matrix, lambda _, k=key: _FP_MEMO.pop(k, None))
+    except TypeError:
+        return fp                       # not weakref-able: skip the memo
+    _FP_MEMO[key] = (ref, fp)
+    return fp

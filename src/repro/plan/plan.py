@@ -1,0 +1,204 @@
+"""`SpmvPlan` — the frozen decision chain for one matrix.
+
+A plan captures everything the per-call stack used to redo on every
+`spmv()` invocation: the structure report, the chosen reordering, the
+converted storage format, and the pre-padded Pallas kernel layout.
+`execute()` is the amortized hot path: it performs zero structure
+analysis, zero reordering, zero format conversion, and zero matrix-side
+layout padding — only the x gather/scatter transport (when reordered),
+the per-call x pad, and the kernel itself.
+
+Repeated-traffic surfaces built on a plan:
+
+  * `execute(x)`        one multiply, bit-identical to the per-call
+                        `core.spmv.spmv(fmt, x, use_pallas=True)` path
+                        (same prepared layout, same kernel);
+  * `execute_many(X)`   batched multi-vector SpMV (SpMM): the vectorized
+                        jnp format kernel vmapped over the leading axis
+                        of X, jitted once per plan;
+  * `power_iteration`   iterative driver (paper §I: repeated SpMV drives
+                        eigensolvers) that amortizes one plan across all
+                        iterations;
+  * `address_trace`     the cached telemetry demand trace, so sweeps
+                        replay one plan across the whole axis grid.
+
+Plans serialize through `repro.plan.serial` (backed by
+`repro.checkpoint`), so a planned matrix survives restart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import BELL, CSR, DIA, ELL
+from repro.kernels import _layout as kl
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+def _jnp_kernels():
+    """Container type -> vectorized jnp reference kernel (late import:
+    `core.spmv` is a thin client of this package)."""
+    from repro.core.spmv import (spmv_bell_jnp, spmv_csr_jnp, spmv_dia_jnp,
+                                 spmv_ell_jnp)
+
+    return {CSR: spmv_csr_jnp, ELL: spmv_ell_jnp,
+            BELL: spmv_bell_jnp, DIA: spmv_dia_jnp}
+
+
+@dataclasses.dataclass
+class SpmvPlan:
+    """Compiled, reusable execution plan for one matrix.
+
+    Obtain via `repro.plan.compile` (or `PlanCache.get_or_compile`); the
+    constructor is an implementation detail shared with `serial.load_plan`.
+    """
+
+    fingerprint: str                 # digest of the ORIGINAL matrix
+    format_name: str                 # 'dia' | 'bell' | 'ell' | 'csr' | 'ell-sharded'
+    container: Any                   # converted format container (post-reorder)
+    prep: Any                        # Prepared* / PaddedCSR / ShardedELL layout
+    reordering: Any = None           # repro.reorder.Reordering or None
+    report: Any = None               # StructureReport of the (permuted) matrix
+    csr: Any = None                  # post-reorder CSR (trace / SpMM source)
+    threads: int = 1
+    use_pallas: bool = True
+    interpret: Optional[bool] = None
+    predicted: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    chosen: str = "none"             # winning (reordering) candidate label
+    compile_stats: Dict[str, float] = dataclasses.field(default_factory=dict)
+    mesh: Any = None                 # sharded plans only; never serialized
+    _many_fn: Any = dataclasses.field(default=None, repr=False, compare=False)
+    _traces: Dict = dataclasses.field(default_factory=dict, repr=False,
+                                      compare=False)
+
+    # -- geometry -----------------------------------------------------------
+
+    @property
+    def n_rows(self) -> int:
+        src = self.container if self.container is not None else self.prep
+        return int(src.n_rows)
+
+    @property
+    def n_cols(self) -> int:
+        src = self.container if self.container is not None else self.prep
+        return int(src.n_cols)
+
+    # -- execution ----------------------------------------------------------
+
+    def execute(self, x: jax.Array, interpret: Optional[bool] = None
+                ) -> jax.Array:
+        """y = A @ x through the frozen plan (original row/col order)."""
+        x = jnp.asarray(x)
+        if self.reordering is not None:
+            y = self._run(self.reordering.permute_x(x), interpret)
+            return self.reordering.restore_y(y)
+        return self._run(x, interpret)
+
+    __call__ = execute
+
+    def _run(self, x: jax.Array, interpret: Optional[bool]) -> jax.Array:
+        if not self.use_pallas:
+            return self._jnp_kernel()(x)
+        interpret = _resolve_interpret(
+            self.interpret if interpret is None else interpret)
+        if self.format_name == "ell-sharded":
+            from repro.distributed.spmv import spmv_row_sharded_prepared
+            if self.mesh is None:
+                raise ValueError("sharded plan has no mesh bound; pass "
+                                 "mesh= to load_plan or set plan.mesh")
+            return spmv_row_sharded_prepared(self.prep, x, self.mesh,
+                                             interpret=interpret)
+        runners = {
+            "dia": kl.spmv_dia_prepared,
+            "bell": kl.spmv_bell_prepared,
+            "ell": kl.spmv_ell_prepared,
+            "csr": kl.spmv_csr_prepared,
+        }
+        return runners[self.format_name](self.prep, x, interpret=interpret)
+
+    def _source_container(self):
+        container = self.container if self.container is not None else self.csr
+        if container is None:
+            raise ValueError(
+                "plan retains no container or CSR (compiled with "
+                "keep_csr=False); recompile with keep_csr=True to use the "
+                "jnp/SpMM paths")
+        return container
+
+    def _jnp_kernel(self):
+        container = self._source_container()
+        kern = _jnp_kernels()[type(container)]
+        return lambda xv: kern(container, xv)
+
+    # -- repeated-traffic surfaces ------------------------------------------
+
+    def execute_many(self, X: jax.Array) -> jax.Array:
+        """Batched multi-vector SpMV (SpMM path): Y[k] = A @ X[k].
+
+        Uses the vectorized jnp format kernel vmapped over the leading
+        axis (one fused SpMM, not a Python loop of Pallas launches),
+        jitted once per plan and reused across calls.  Matches
+        `execute` per vector up to float summation-order tolerance.
+        """
+        X = jnp.asarray(X)
+        if X.ndim != 2:
+            raise ValueError(f"execute_many expects (k, n_cols), got {X.shape}")
+        if self._many_fn is None:
+            self._many_fn = self._build_many()
+        return self._many_fn(X)
+
+    def _build_many(self):
+        container = self._source_container()
+        kern = _jnp_kernels()[type(container)]
+        if self.reordering is not None:
+            cp = jnp.asarray(self.reordering.col_perm)
+            irp = jnp.asarray(self.reordering.inv_row_perm)
+
+            def one(xv):
+                return jnp.take(kern(container, jnp.take(xv, cp, axis=0)),
+                                irp, axis=0)
+        else:
+            def one(xv):
+                return kern(container, xv)
+        return jax.jit(jax.vmap(one))
+
+    def power_iteration(self, x0: jax.Array, n_iters: int = 16):
+        """Dominant-eigenpair driver over the cached plan (paper §I's
+        repeated-SpMV analytics).  Returns (eigenvalue estimate, vector)."""
+        x = jnp.asarray(x0)
+        lam = jnp.array(0.0, x.dtype)
+        for _ in range(n_iters):
+            y = self.execute(x)
+            lam = jnp.linalg.norm(y)
+            x = y / jnp.maximum(lam, 1e-30)
+        return lam, x
+
+    # -- telemetry ----------------------------------------------------------
+
+    def address_trace(self, machine):
+        """The SpMV demand-address trace of the planned (permuted) matrix,
+        computed once per machine and cached — telemetry sweeps replay this
+        one trace across the whole mechanism/thread grid."""
+        if self.csr is None:
+            raise ValueError("plan was compiled with keep_csr=False; "
+                             "no CSR retained for trace replay")
+        if machine not in self._traces:
+            from repro.telemetry.hierarchy import spmv_address_trace
+            self._traces[machine] = spmv_address_trace(self.csr, machine)
+        return self._traces[machine]
+
+    # -- reporting ----------------------------------------------------------
+
+    def summary(self) -> str:
+        r = self.reordering.strategy if self.reordering is not None else "none"
+        pred = self.predicted.get(self.chosen, {})
+        gf = pred.get("gflops")
+        gf_s = f" pred={gf:.2f}GF" if gf is not None else ""
+        return (f"SpmvPlan[{self.fingerprint[:8]}] fmt={self.format_name} "
+                f"reorder={r} threads={self.threads}{gf_s}")

@@ -1,0 +1,231 @@
+"""Plan serialization through `repro.checkpoint` — a planned matrix
+survives restart.
+
+A plan becomes one checkpointable pytree: every array (container fields,
+permutations, shard slabs, retained CSR) is a leaf, and the static
+decision record (format, knobs, structure report, predictor scores) is
+msgpack'd into a single uint8 leaf.  `CheckpointManager` then gives the
+usual guarantees for free: crash-safe commit marker, codec fallback,
+shard files.  Restore is schema-free (`CheckpointManager.restore_any`),
+so a fresh process can load a plan without knowing its format up front.
+
+The pre-padded kernel layout is NOT stored: it is a deterministic
+function of the container plus its knobs (`bn`/`bm`/`n_stripes`, which
+are recorded), so `load_plan` rebuilds it once — identical bits, half
+the checkpoint size.  Device meshes are never serialized; pass `mesh=`
+to `load_plan` to rebind a row-sharded plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import msgpack
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.formats import BELL, CSR, DIA, ELL
+from repro.core.structure import StructureReport
+from repro.kernels import _layout as kl
+
+from .compiler import _prepare
+from .plan import SpmvPlan
+
+_VERSION = 1
+
+
+def _plain(v):
+    """Coerce a metadata value to something msgpack can round-trip."""
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, dict):
+        return {str(k): _plain(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_plain(x) for x in v]
+    if v is None or isinstance(v, (bool, int, float, str, bytes)):
+        return v
+    return str(v)
+
+
+def _prep_knobs(plan: SpmvPlan) -> Dict:
+    """Recover the layout knobs from the built prep (enough to rebuild it
+    deterministically at load time)."""
+    p = plan.prep
+    if p is None:
+        return {}
+    if isinstance(p, kl.PreparedDIA):
+        return {"bn": p.bn}
+    if isinstance(p, kl.PreparedELL):
+        return {"bm": int(p.data.shape[1])}
+    if isinstance(p, kl.PaddedCSR):
+        return {"bm": p.bm, "n_stripes": int(p.vals.shape[0])}
+    return {}
+
+
+def plan_state(plan: SpmvPlan) -> Dict:
+    """The plan as one checkpointable pytree (nested string-keyed dicts)."""
+    meta = {
+        "version": _VERSION,
+        "fingerprint": plan.fingerprint,
+        "format_name": plan.format_name,
+        "threads": plan.threads,
+        "use_pallas": plan.use_pallas,
+        "interpret": plan.interpret,
+        "chosen": plan.chosen,
+        "predicted": _plain(plan.predicted),
+        "compile_stats": _plain(plan.compile_stats),
+        "prep_knobs": _prep_knobs(plan),
+        "has_csr": plan.csr is not None,
+        "report": (_plain(dataclasses.asdict(plan.report))
+                   if plan.report is not None else None),
+    }
+    state: Dict = {}
+
+    c = plan.container
+    if isinstance(c, DIA):
+        meta["container"] = {"type": "dia", "n_rows": c.n_rows,
+                             "n_cols": c.n_cols}
+        state["container"] = {"data": c.data, "offsets": c.offsets}
+    elif isinstance(c, BELL):
+        meta["container"] = {"type": "bell", "n_rows": c.n_rows,
+                             "n_cols": c.n_cols, "bm": c.bm, "bn": c.bn,
+                             "blocks_per_row": c.blocks_per_row}
+        state["container"] = {"data": c.data, "block_cols": c.block_cols}
+    elif isinstance(c, ELL):
+        meta["container"] = {"type": "ell", "n_rows": c.n_rows,
+                             "n_cols": c.n_cols, "max_nnz": c.max_nnz}
+        state["container"] = {"data": c.data, "indices": c.indices}
+    elif isinstance(c, CSR) or c is None:
+        # CSR containers are stored once, under "csr" (below)
+        meta["container"] = {"type": "csr" if isinstance(c, CSR) else None}
+        if isinstance(c, CSR) and plan.csr is None:
+            state["csr"] = {"data": c.data, "indices": c.indices,
+                            "indptr": c.indptr}
+            meta["csr_shape"] = [c.n_rows, c.n_cols]
+    else:
+        raise TypeError(f"unserializable container: {type(c)}")
+
+    if plan.format_name == "ell-sharded":
+        p = plan.prep
+        meta["sharded"] = {"n_rows": p.n_rows, "n_cols": p.n_cols,
+                           "bm": p.bm}
+        state["sharded"] = {"data": p.data, "idx": p.idx,
+                            "starts": np.asarray(p.starts)}
+
+    if plan.reordering is not None:
+        r = plan.reordering
+        meta["reorder"] = {"strategy": r.strategy,
+                           "params": _plain(r.params),
+                           "stats": _plain(r.stats)}
+        state["reorder"] = {"row_perm": np.asarray(r.row_perm),
+                            "col_perm": np.asarray(r.col_perm)}
+
+    if plan.csr is not None:
+        meta["csr_shape"] = [plan.csr.n_rows, plan.csr.n_cols]
+        state["csr"] = {"data": plan.csr.data, "indices": plan.csr.indices,
+                        "indptr": plan.csr.indptr}
+
+    state["meta"] = np.frombuffer(msgpack.packb(meta), dtype=np.uint8).copy()
+    return state
+
+
+def plan_from_state(state: Dict, mesh=None) -> SpmvPlan:
+    """Rebuild a `SpmvPlan` from `plan_state` output (as restored by
+    `CheckpointManager.restore_any`)."""
+    meta = msgpack.unpackb(np.asarray(state["meta"]).tobytes(),
+                           strict_map_key=False)
+    if meta["version"] != _VERSION:
+        raise ValueError(f"unknown plan state version {meta['version']}")
+
+    csr = None
+    if "csr" in state:
+        n_rows, n_cols = meta["csr_shape"]
+        g = state["csr"]
+        csr = CSR(data=g["data"], indices=g["indices"], indptr=g["indptr"],
+                  n_rows=int(n_rows), n_cols=int(n_cols))
+
+    cmeta = meta["container"]
+    ctype = cmeta["type"] if cmeta else None
+    if ctype == "dia":
+        g = state["container"]
+        container = DIA(data=g["data"], offsets=g["offsets"],
+                        n_rows=int(cmeta["n_rows"]),
+                        n_cols=int(cmeta["n_cols"]))
+    elif ctype == "bell":
+        g = state["container"]
+        container = BELL(data=g["data"], block_cols=g["block_cols"],
+                         n_rows=int(cmeta["n_rows"]),
+                         n_cols=int(cmeta["n_cols"]), bm=int(cmeta["bm"]),
+                         bn=int(cmeta["bn"]),
+                         blocks_per_row=int(cmeta["blocks_per_row"]))
+    elif ctype == "ell":
+        g = state["container"]
+        container = ELL(data=g["data"], indices=g["indices"],
+                        n_rows=int(cmeta["n_rows"]),
+                        n_cols=int(cmeta["n_cols"]),
+                        max_nnz=int(cmeta["max_nnz"]))
+    elif ctype == "csr":
+        container = csr
+    else:
+        container = None
+
+    reordering = None
+    if "reorder" in state:
+        from repro.reorder import Reordering
+
+        rmeta = meta["reorder"]
+        reordering = Reordering(
+            row_perm=np.asarray(state["reorder"]["row_perm"]),
+            col_perm=np.asarray(state["reorder"]["col_perm"]),
+            strategy=rmeta["strategy"], params=rmeta.get("params", {}),
+            stats=rmeta.get("stats", {}))
+
+    format_name = meta["format_name"]
+    if format_name == "ell-sharded":
+        g = state["sharded"]
+        smeta = meta["sharded"]
+        prep = kl.ShardedELL(
+            data=g["data"], idx=g["idx"], n_rows=int(smeta["n_rows"]),
+            n_cols=int(smeta["n_cols"]),
+            starts=np.asarray(g["starts"], dtype=np.int64),
+            bm=int(smeta["bm"]))
+    elif meta["use_pallas"] and container is not None:
+        knobs = meta.get("prep_knobs", {})
+        prep = _prepare(container, format_name,
+                        bn=int(knobs.get("bn", 512)),
+                        bm=int(knobs.get("bm", 128)),
+                        n_stripes=int(knobs.get("n_stripes", 1)))
+    else:
+        prep = None
+
+    report = (StructureReport(**meta["report"])
+              if meta.get("report") is not None else None)
+
+    return SpmvPlan(
+        fingerprint=meta["fingerprint"], format_name=format_name,
+        container=container, prep=prep, reordering=reordering,
+        report=report, csr=csr, threads=int(meta["threads"]),
+        use_pallas=bool(meta["use_pallas"]), interpret=meta["interpret"],
+        predicted=meta.get("predicted", {}), chosen=meta.get("chosen", "none"),
+        compile_stats=meta.get("compile_stats", {}), mesh=mesh)
+
+
+def save_plan(plan: SpmvPlan, ckpt_dir: str, step: int = 0,
+              manager: Optional[CheckpointManager] = None) -> str:
+    """Write the plan as a committed checkpoint step.  Returns the step dir."""
+    mgr = manager if manager is not None else CheckpointManager(ckpt_dir)
+    return mgr.save(step, plan_state(plan), blocking=True)
+
+
+def load_plan(ckpt_dir: str, step: Optional[int] = None, mesh=None
+              ) -> Tuple[SpmvPlan, int]:
+    """Load (plan, step) from a plan checkpoint written by `save_plan`.
+
+    `mesh=` rebinds a row-sharded plan to this process's devices (meshes
+    are never serialized).
+    """
+    mgr = CheckpointManager(ckpt_dir)
+    state, step = mgr.restore_any(step)
+    return plan_from_state(state, mesh=mesh), step

@@ -63,6 +63,29 @@ def test_restore_specific_step():
         assert step == 1 and float(restored["v"]) == 1.0
 
 
+def test_restore_any_rebuilds_dict_tree_without_target():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        tree = {"a": {"b": jnp.arange(6, dtype=jnp.float32),
+                      "c": jnp.int32(3)},
+                "meta": np.arange(4, dtype=np.uint8)}
+        mgr.save(2, tree, blocking=True)
+        restored, step = mgr.restore_any()
+        assert step == 2
+        np.testing.assert_array_equal(np.asarray(restored["a"]["b"]),
+                                      np.arange(6, dtype=np.float32))
+        np.testing.assert_array_equal(np.asarray(restored["meta"]),
+                                      np.arange(4, dtype=np.uint8))
+
+
+def test_restore_any_rejects_non_dict_trees():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(1, {"lst": [jnp.zeros(2), jnp.ones(2)]}, blocking=True)
+        with pytest.raises(ValueError, match="string-keyed"):
+            mgr.restore_any()
+
+
 def test_async_save_overlaps_then_joins():
     with tempfile.TemporaryDirectory() as d:
         mgr = CheckpointManager(d)
