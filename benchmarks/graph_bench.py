@@ -1,0 +1,72 @@
+"""Whole-analytic structure gap: the paper's §I motivation, measured.
+
+The paper measures one SpMV; its motivation is iterated SpMV inside
+"network and graph analytics".  This bench runs the `repro.graph`
+drivers (PageRank, BFS, SSSP -- plus-times / or-and / min-plus semiring
+plans compiled once, executed per iteration) on FD and R-MAT, then
+replays each run's memoized address trace per iteration through a warm
+hierarchy, so the FD-vs-R-MAT gap is reported on the *analytic*, not
+the single multiply:
+
+  * gap_cold    one cold SpMV -- the paper's single-kernel view;
+  * gap_warm    a steady-state iteration (what survives in cache
+                between SpMVs);
+  * gap_total   the whole analytic, iteration counts included -- the
+                end-to-end number the motivation actually implies.
+
+Geometry is the working-set-scaled reference cell (L2 16 KiB, LLC
+64 KiB -- same cell as scaling_bench): at 2^12, R-MAT's x gathers no
+longer fit the L2, so warm iterations keep missing while FD's bands
+stay resident -- the compounding regime.
+
+Invoked by `benchmarks.run` (section name: graph) or directly:
+
+    PYTHONPATH=src python -m benchmarks.graph_bench [--fast] [--smoke]
+"""
+from __future__ import annotations
+
+from repro.telemetry.hierarchy import HierarchySpec
+from repro.telemetry.report import graph_gap_report, graph_report
+from repro.telemetry.sweep import graph_sweep
+
+from . import common
+
+# Working-set-scaled cell (see module docstring / scaling_bench).
+SCALED_CELL = HierarchySpec(l2_bytes=16 * 1024, l3_bytes=64 * 1024)
+
+ANALYTICS = ("pagerank", "bfs", "sssp")
+
+
+def _config():
+    # caps sized so every analytic converges at the paired geometry
+    # (FD pagerank is the slowest: 76 iters at 2^12); runs that still
+    # hit a cap are starred in the gap report rather than silently
+    # truncating gap_total
+    if common.SMOKE:
+        return (8,), 96
+    if common.EMPIRICAL_MAX_LOG2 <= 16:          # --fast (here or via run.py)
+        return (10,), 96
+    return (12,), 128
+
+
+def main() -> None:
+    log2ns, max_iters = _config()
+    pts = graph_sweep(log2ns=log2ns, analytics=ANALYTICS, spec=SCALED_CELL,
+                      max_iters=max_iters)
+    print(graph_report(pts))
+    print()
+    print(graph_gap_report(pts))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.fast:
+        common.EMPIRICAL_MAX_LOG2 = 16
+    if args.smoke:
+        common.SMOKE = True
+    main()

@@ -3,9 +3,10 @@
 Runs one bench per paper table/figure plus the TPU-side benches, printing
 CSV blocks.  `--fast` trims the empirical sweep (CI); default reproduces
 the full paper sweep via synthetic profiles to 2^26.  `--smoke` is the
-benchmark smoke job: reorder + scaling + plan amortization only, tiny
-geometry, thread axis {1, 2} — just enough execution that those benches
-(and the plan warm/cold ratio assertion) cannot silently rot.
+benchmark smoke job: reorder + scaling + plan amortization + a
+tiny-geometry graph-analytic case, thread axis {1, 2} — just enough
+execution that those benches (and the plan warm/cold ratio assertion)
+cannot silently rot.
 """
 from __future__ import annotations
 
@@ -13,7 +14,7 @@ import argparse
 import sys
 import time
 
-ALL = "paper,kernels,traffic,moe,serve,telemetry,reorder,scaling,plan"
+ALL = "paper,kernels,traffic,moe,serve,telemetry,reorder,scaling,plan,graph"
 
 
 def main(argv=None) -> None:
@@ -33,7 +34,7 @@ def main(argv=None) -> None:
         common.SMOKE = True
         common.EMPIRICAL_MAX_LOG2 = 12
 
-    default = "reorder,scaling,plan" if args.smoke else ALL
+    default = "reorder,scaling,plan,graph" if args.smoke else ALL
     want = set((args.only or default).split(","))
     t0 = time.time()
 
@@ -64,6 +65,9 @@ def main(argv=None) -> None:
     if "plan" in want:
         from . import plan_bench
         plan_bench.main()
+    if "graph" in want:
+        from . import graph_bench
+        graph_bench.main()
 
     print(f"# benchmarks.run completed in {time.time()-t0:.1f}s",
           file=sys.stderr)

@@ -5,6 +5,7 @@ Subpackages (see README.md's package map):
 
   core        generators, structure metrics, formats, cache model, SpMV
   plan        compile-once execution plans (the repeated-traffic surface)
+  graph       semiring SpMV + iterative graph analytics on plans
   kernels     Pallas TPU kernels + prepared layouts
   reorder     structure-recovering permutations
   parallel    multithreaded shared-LLC scaling engine
@@ -23,9 +24,9 @@ from __future__ import annotations
 import importlib
 
 _SUBPACKAGES = (
-    "checkpoint", "configs", "core", "data", "distributed", "kernels",
-    "launch", "models", "optim", "parallel", "plan", "reorder", "roofline",
-    "serve", "telemetry", "train",
+    "checkpoint", "configs", "core", "data", "distributed", "graph",
+    "kernels", "launch", "models", "optim", "parallel", "plan", "reorder",
+    "roofline", "serve", "telemetry", "train",
 )
 
 # plan API re-exported at top level (lazily, via __getattr__)

@@ -161,10 +161,16 @@ class ELL:
         return (self.n_rows, self.n_cols)
 
     @staticmethod
-    def from_csr(csr: CSR, max_nnz: int | None = None) -> "ELL":
+    def from_csr(csr: CSR, max_nnz: int | None = None,
+                 fill: float = 0.0) -> "ELL":
+        """`fill` is the padding value for short rows -- 0.0 for plus-times
+        SpMV, the semiring's absorbing element (`Semiring.pad_value`, e.g.
+        +inf for min-plus) when the container feeds a semiring kernel."""
         lengths = csr.row_lengths()
-        width = int(lengths.max()) if max_nnz is None else int(max_nnz)
-        data = np.zeros((csr.n_rows, width), dtype=np.asarray(csr.data).dtype)
+        width = (int(lengths.max()) if len(lengths) else 0) \
+            if max_nnz is None else int(max_nnz)
+        data = np.full((csr.n_rows, width), fill,
+                       dtype=np.asarray(csr.data).dtype)
         idx = np.zeros((csr.n_rows, width), dtype=np.int32)
         indptr = np.asarray(csr.indptr)
         cols = np.asarray(csr.indices)

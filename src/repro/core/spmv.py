@@ -175,27 +175,16 @@ def power_iteration(matrix, x0: jax.Array, n_iters: int = 16):
 def pagerank(csr: CSR, damping: float = 0.85, n_iters: int = 32):
     """PageRank via repeated SpMV (network-analysis example, paper §I).
 
-    Dangling columns (zero out-degree) redistribute their mass uniformly,
-    keeping r a probability distribution."""
-    n = csr.n_rows
-    # column-stochastic scaling host-side
-    indptr = np.asarray(csr.indptr)
-    cols = np.asarray(csr.indices)
-    vals = np.ones(csr.nnz, dtype=np.float32)
-    col_deg = np.bincount(cols, minlength=n).astype(np.float32)
-    scale = 1.0 / np.maximum(col_deg[cols], 1.0)
-    rows = np.repeat(np.arange(n), np.diff(indptr))
-    stoch = CSR.from_coo(rows, cols, vals * scale, n, n)
-    dangling = jnp.asarray((col_deg == 0).astype(np.float32))
+    Compatibility wrapper over `repro.graph.pagerank` (the full driver:
+    compile-once semiring plan, convergence checks, per-iteration
+    telemetry): this entry historically scaled A's *columns* in place,
+    which equals the graph driver's documented A[i,j] = edge i->j
+    convention applied to A^T — so it delegates on the transpose and
+    keeps the fixed iteration count.  Prefer `repro.graph.pagerank`.
+    """
+    from repro.graph.drivers import pagerank as _graph_pagerank
+    from repro.graph.drivers import transpose_csr
 
-    r = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
-
-    @jax.jit
-    def step(r):
-        leaked = jnp.dot(dangling, r)
-        return (damping * (spmv_csr_jnp(stoch, r) + leaked / n)
-                + (1 - damping) / n)
-
-    for _ in range(n_iters):
-        r = step(r)
-    return r
+    res = _graph_pagerank(transpose_csr(csr), damping=damping, tol=0.0,
+                          max_iters=n_iters)
+    return jnp.asarray(res.values)

@@ -1,0 +1,29 @@
+"""Semiring graph analytics on the compile-once SpMV pipeline.
+
+The paper's motivating workloads ("network and graph analytics", §I)
+as iterated semiring SpMVs over `repro.plan`:
+
+  * `semiring`  -- the (⊕, ⊗) algebra: plus_times / min_plus / or_and /
+                   max_times, with the absorbing-padding contract the
+                   generalized Pallas kernels rely on
+  * `drivers`   -- pagerank, bfs, sssp, connected_components: compile a
+                   plan once, iterate `execute`/`execute_many` with
+                   host-side convergence checks
+  * `telemetry` -- per-iteration cache counters from the plan's memoized
+                   address trace (feeds `telemetry.sweep.graph_sweep`)
+"""
+from .drivers import (DRIVERS, GraphResult, bfs, connected_components,
+                      pagerank, sssp, transpose_csr)
+from .semiring import (MAX_TIMES, MIN_PLUS, OR_AND, PLUS_TIMES, SEMIRINGS,
+                       Semiring, resolve, spmv_csr_semiring_jnp,
+                       spmv_ell_semiring_jnp, spmv_semiring_jnp)
+from .telemetry import iteration_counters, iteration_summaries
+
+__all__ = [
+    "Semiring", "SEMIRINGS", "PLUS_TIMES", "MIN_PLUS", "OR_AND", "MAX_TIMES",
+    "resolve", "spmv_ell_semiring_jnp", "spmv_csr_semiring_jnp",
+    "spmv_semiring_jnp",
+    "GraphResult", "DRIVERS", "pagerank", "bfs", "sssp",
+    "connected_components", "transpose_csr",
+    "iteration_counters", "iteration_summaries",
+]

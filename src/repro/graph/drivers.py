@@ -1,0 +1,300 @@
+"""Iterative graph-analytics drivers on compiled `SpmvPlan`s.
+
+The paper motivates SpMV as "the core operation in many common network
+and graph analytics" -- these drivers are those analytics, each one an
+iterated semiring SpMV over a plan compiled ONCE:
+
+    pagerank              plus_times  on the column-stochastic transpose
+    bfs                   or_and      frontier propagation (hop depths)
+    sssp                  min_plus    Bellman-Ford relaxation
+    connected_components  min_plus    label propagation (zero weights)
+
+Every driver follows the same shape: build the analytic's operand matrix
+host-side, `plan.get_or_compile` it (structure analysis, optional
+reordering, absorbing-padded kernel layout -- all amortized across every
+iteration AND across repeated driver calls on the same graph), then loop
+`plan.execute` / `plan.execute_many` with a host-side convergence check.
+The per-iteration cost is therefore exactly the paper's object of study:
+one SpMV's worth of memory traffic, nothing else -- which is what lets
+`telemetry.sweep.graph_sweep` replay a whole analytic from the plan's
+memoized address trace.
+
+Graph convention: the input is a square CSR adjacency with A[i, j] != 0
+meaning an edge i -> j (weight = stored value).  SpMV computes
+y[i] = ⊕_j A[i,j] ⊗ x[j] -- a *pull* along rows -- so push-style
+traversals (BFS/SSSP from a source) run on the transpose, built once at
+plan-compile time.  Undirected graphs should be stored symmetrically
+(generators' FD/R-MAT matrices are fine as-is).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import CSR
+
+from .semiring import MIN_PLUS, OR_AND, PLUS_TIMES
+
+
+@dataclasses.dataclass
+class GraphResult:
+    """Outcome of one analytic run.
+
+    values    the analytic's vector: PageRank scores, hop depths,
+              distances, or component labels ((k, n) for multi-source)
+    n_iters   SpMV iterations executed
+    converged True when the fixpoint/tolerance was reached before
+              `max_iters`
+    history   one scalar per iteration (residual / frontier size /
+              labels changed) -- the convergence trajectory
+    plan      the compiled `SpmvPlan` the iterations executed through
+              (its memoized `address_trace` is what telemetry replays)
+    """
+
+    values: np.ndarray
+    n_iters: int
+    converged: bool
+    history: List[float]
+    plan: object
+
+    def summary(self) -> str:
+        tail = f"{self.history[-1]:.3g}" if self.history else "-"
+        return (f"{self.plan.summary()} iters={self.n_iters} "
+                f"converged={self.converged} last={tail}")
+
+
+def transpose_csr(csr: CSR) -> CSR:
+    """A^T as a canonically sorted CSR (host-side, plan-compile time)."""
+    indptr = np.asarray(csr.indptr, dtype=np.int64)
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), np.diff(indptr))
+    return CSR.from_coo(np.asarray(csr.indices, dtype=np.int64), rows,
+                        np.asarray(csr.data), csr.n_cols, csr.n_rows,
+                        dtype=np.asarray(csr.data).dtype)
+
+
+def _require_square(adj: CSR, who: str) -> int:
+    if adj.n_rows != adj.n_cols:
+        raise ValueError(f"{who} needs a square adjacency, "
+                         f"got {adj.n_rows}x{adj.n_cols}")
+    return adj.n_rows
+
+
+def _graph_plan(matrix: CSR, semiring, *, reorder, plan_cache, format=None,
+                use_pallas=True, interpret=None):
+    """Compile-once entry shared by every driver: plans land in the
+    process-wide `plan.DEFAULT_CACHE` (or a caller-supplied `PlanCache`),
+    so re-running an analytic -- or a different analytic over the same
+    derived matrix -- recompiles nothing."""
+    from repro import plan as _plan
+
+    cache = plan_cache if plan_cache is not None else _plan.DEFAULT_CACHE
+    opts = dict(reorder=reorder, predictor="none", semiring=semiring.name,
+                use_pallas=use_pallas, interpret=interpret, keep_csr=True)
+    if format is not None:
+        opts["format"] = format
+    return cache.get_or_compile(matrix, **opts)
+
+
+# ---------------------------------------------------------------------------
+# PageRank (plus_times)
+# ---------------------------------------------------------------------------
+
+def pagerank(adj: CSR, damping: float = 0.85, tol: float = 1e-8,
+             max_iters: int = 100, *, r0=None, reorder="none",
+             plan_cache=None, use_pallas: bool = True,
+             interpret: Optional[bool] = None) -> GraphResult:
+    """PageRank by power iteration on P = A^T D_out^{-1} (plus_times).
+
+    Dangling vertices (zero out-degree) redistribute their mass
+    uniformly, so r stays a probability distribution.  Converges when
+    the L1 step residual drops below `tol`.  `r0` overrides the uniform
+    start (it is normalized to sum 1) -- on near-regular graphs (FD
+    grids) the uniform vector is already the fixpoint, so a perturbed
+    start is what makes the iteration count meaningful there.
+    """
+    n = _require_square(adj, "pagerank")
+    indptr = np.asarray(adj.indptr, dtype=np.int64)
+    cols = np.asarray(adj.indices, dtype=np.int64)
+    out_deg = np.diff(indptr).astype(np.float32)
+    rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    # P[j, i] = 1/out_deg[i] for every edge i -> j (column-stochastic)
+    stoch = CSR.from_coo(cols, rows,
+                         1.0 / np.maximum(out_deg[rows], 1.0), n, n)
+    p = _graph_plan(stoch, PLUS_TIMES, reorder=reorder,
+                    plan_cache=plan_cache, use_pallas=use_pallas,
+                    interpret=interpret)
+    dangling = jnp.asarray((out_deg == 0).astype(np.float32))
+
+    if r0 is None:
+        r = jnp.full((n,), 1.0 / max(n, 1), jnp.float32)
+    else:
+        r = jnp.asarray(r0, jnp.float32)
+        r = r / jnp.maximum(r.sum(), 1e-30)
+    history: List[float] = []
+    converged = False
+    it = 0
+    for it in range(1, max_iters + 1):
+        leaked = jnp.dot(dangling, r)
+        r_new = (damping * (p.execute(r) + leaked / n)
+                 + (1.0 - damping) / n)
+        resid = float(jnp.abs(r_new - r).sum())
+        history.append(resid)
+        r = r_new
+        if resid < tol:
+            converged = True
+            break
+    return GraphResult(values=np.asarray(r), n_iters=it,
+                       converged=converged, history=history, plan=p)
+
+
+# ---------------------------------------------------------------------------
+# BFS (or_and)
+# ---------------------------------------------------------------------------
+
+def bfs(adj: CSR, source: Union[int, Sequence[int]],
+        max_iters: Optional[int] = None, *, reorder="none", plan_cache=None,
+        use_pallas: bool = True, interpret: Optional[bool] = None
+        ) -> GraphResult:
+    """Hop depths from `source` by or_and frontier propagation on A^T.
+
+    `values[v]` is the BFS depth of v (0 at the source, +inf if
+    unreachable).  A sequence of sources runs them all concurrently:
+    single source iterates `plan.execute`, multi-source batches the
+    frontiers through `plan.execute_many` (values then (k, n)).  The
+    loop terminates on the first empty frontier -- the normal end state,
+    reached immediately on an edgeless (nnz=0) graph.
+    """
+    n = _require_square(adj, "bfs")
+    sources = np.atleast_1d(np.asarray(source, dtype=np.int64))
+    multi = np.ndim(source) > 0
+    k = len(sources)
+    at = transpose_csr(adj)
+    pattern = CSR(data=jnp.ones_like(at.data), indices=at.indices,
+                  indptr=at.indptr, n_rows=n, n_cols=n)
+    p = _graph_plan(pattern, OR_AND, reorder=reorder, plan_cache=plan_cache,
+                    use_pallas=use_pallas, interpret=interpret)
+
+    depth = np.full((k, n), np.inf, dtype=np.float32)
+    depth[np.arange(k), sources] = 0.0
+    frontier = np.zeros((k, n), dtype=np.float32)
+    frontier[np.arange(k), sources] = 1.0
+    max_iters = n if max_iters is None else max_iters
+
+    history: List[float] = []
+    level = 0
+    converged = False
+    while level < max_iters:
+        if not frontier.any():
+            converged = True
+            break
+        level += 1
+        if multi:
+            y = np.asarray(p.execute_many(jnp.asarray(frontier)))
+        else:
+            y = np.asarray(p.execute(jnp.asarray(frontier[0])))[None]
+        reached = (y > 0.0) & np.isinf(depth)
+        depth[reached] = level
+        frontier = reached.astype(np.float32)
+        history.append(float(reached.sum()))
+    else:
+        converged = not frontier.any()
+    return GraphResult(values=depth if multi else depth[0], n_iters=level,
+                       converged=converged, history=history, plan=p)
+
+
+# ---------------------------------------------------------------------------
+# SSSP (min_plus)
+# ---------------------------------------------------------------------------
+
+def sssp(adj: CSR, source: int, max_iters: Optional[int] = None, *,
+         reorder="none", plan_cache=None, use_pallas: bool = True,
+         interpret: Optional[bool] = None) -> GraphResult:
+    """Single-source shortest paths by Bellman-Ford relaxation:
+    d' = d ⊕ (A^T (⊕=min, ⊗=+) d), iterated to fixpoint.
+
+    Edge weights are the stored values (nonnegative for the shortest-path
+    interpretation); unreachable vertices keep +inf.  Converges in at
+    most n-1 relaxations; typically far fewer (`history` counts the
+    distances lowered per iteration).
+    """
+    n = _require_square(adj, "sssp")
+    at = transpose_csr(adj)
+    p = _graph_plan(at, MIN_PLUS, reorder=reorder, plan_cache=plan_cache,
+                    use_pallas=use_pallas, interpret=interpret)
+
+    dist = np.full((n,), np.inf, dtype=np.float32)
+    dist[source] = 0.0
+    max_iters = n if max_iters is None else max_iters
+    history: List[float] = []
+    converged = False
+    it = 0
+    for it in range(1, max_iters + 1):
+        relaxed = np.asarray(p.execute(jnp.asarray(dist)))
+        nd = np.minimum(dist, relaxed)
+        changed = int((nd < dist).sum())
+        history.append(float(changed))
+        dist = nd
+        if changed == 0:
+            converged = True
+            break
+    return GraphResult(values=dist, n_iters=it, converged=converged,
+                       history=history, plan=p)
+
+
+# ---------------------------------------------------------------------------
+# Connected components (min_plus label propagation)
+# ---------------------------------------------------------------------------
+
+def connected_components(adj: CSR, max_iters: Optional[int] = None, *,
+                         reorder="none", plan_cache=None,
+                         use_pallas: bool = True,
+                         interpret: Optional[bool] = None) -> GraphResult:
+    """Component labels by min-label propagation over the symmetrized
+    pattern: with zero edge weights, min_plus SpMV computes each vertex's
+    minimum neighbor label, and l' = l ⊕ (S (min,+) l) converges to the
+    component-wise minimum vertex id.  `values[v]` is v's component label;
+    isolated vertices keep their own id (empty rows reduce to +inf, which
+    the ⊕ with the current label absorbs).
+
+    Labels ride through the f32 kernels, so vertex ids must be exactly
+    representable: graphs beyond 2^24 rows are refused rather than
+    silently merging components whose seed ids collide in f32."""
+    n = _require_square(adj, "connected_components")
+    if n > (1 << 24):
+        raise ValueError(
+            f"connected_components labels are f32 vertex ids, which are "
+            f"only injective up to 2^24; got n={n}")
+    indptr = np.asarray(adj.indptr, dtype=np.int64)
+    rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    cols = np.asarray(adj.indices, dtype=np.int64)
+    sym = CSR.from_coo(np.concatenate([rows, cols]),
+                       np.concatenate([cols, rows]),
+                       np.zeros(2 * len(rows), dtype=np.float32), n, n)
+    p = _graph_plan(sym, MIN_PLUS, reorder=reorder, plan_cache=plan_cache,
+                    use_pallas=use_pallas, interpret=interpret)
+
+    labels = np.arange(n, dtype=np.float32)
+    max_iters = n if max_iters is None else max_iters
+    history: List[float] = []
+    converged = False
+    it = 0
+    for it in range(1, max_iters + 1):
+        nl = np.minimum(labels, np.asarray(p.execute(jnp.asarray(labels))))
+        changed = int((nl < labels).sum())
+        history.append(float(changed))
+        labels = nl
+        if changed == 0:
+            converged = True
+            break
+    return GraphResult(values=labels, n_iters=it, converged=converged,
+                       history=history, plan=p)
+
+
+DRIVERS = {"pagerank": pagerank, "bfs": bfs, "sssp": sssp,
+           "connected_components": connected_components}
+
+__all__ = ["GraphResult", "transpose_csr", "pagerank", "bfs", "sssp",
+           "connected_components", "DRIVERS"]

@@ -1,0 +1,146 @@
+"""Semirings: the algebra that turns SpMV into a graph-analytics engine.
+
+The paper's opening claim is that SpMV is "the core operation in many
+common network and graph analytics".  Those analytics are iterated
+*semiring* SpMVs: replace (+, *) in y[i] = SUM_j A[i,j] * x[j] with a
+pluggable (add ⊕, mul ⊗) pair and the same kernel computes
+
+    plus_times   y[i] = Σ_j   A[i,j] * x[j]     linear algebra / PageRank
+    min_plus     y[i] = min_j A[i,j] + x[j]     shortest paths (SSSP)
+    or_and       y[i] = OR_j  A[i,j] & x[j]     BFS reachability/frontier
+    max_times    y[i] = max_j A[i,j] * x[j]     widest/most-reliable path
+
+The access *stream* -- the thing the paper measures -- is identical for
+every semiring: same gathers of x, same streaming of the matrix arrays.
+Only the two scalar ops in the inner loop change, which is why the whole
+`repro.plan` pipeline (structure analysis, reordering decisions, cache
+prediction, telemetry traces) carries over unchanged.
+
+A `Semiring` is shape-compatible with the Pallas kernel inner loops: the
+kernels call `mul` elementwise and `reduce` along the slot axis, so an
+instance must be hashable (all fields are module-level jnp functions or
+floats) to ride through `jax.jit` static arguments.
+
+Padding contract: sparse layouts pad rows/cells to fixed width, and a
+padding slot must be *absorbing*: `mul(pad_value, x) == identity` for
+every x the analytic can produce, so padded slots vanish under `reduce`.
+plus_times pads 0.0 (0 * x = 0), min_plus pads +inf (inf + x = inf).
+This is also why the dense-footprint formats (DIA bands, BELL tiles) are
+plus-times-only: they materialize absent entries as stored 0.0, which is
+only absorbing when ⊗ is multiplication.
+
+Booleans are embedded in f32 {0.0, 1.0} (or_and is max_times restricted
+to indicator values), so every semiring reuses the float kernels and the
+float address traces unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import CSR, ELL
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """A (⊕, ⊗) pair with the identities the kernels and layouts need.
+
+    add / mul      elementwise jnp binary ops (⊕ / ⊗)
+    reduce         the jnp reduction matching `add` (sum / min / max)
+    segment        the jax.ops segment reduction matching `add`
+    identity       ⊕-identity: the value of an empty reduction (what an
+                   all-padding row -- e.g. a vertex with no in-edges --
+                   produces)
+    pad_value      stored-slot fill: mul(pad_value, x) == identity
+    """
+
+    name: str
+    add: Callable
+    mul: Callable
+    reduce: Callable
+    segment: Callable
+    identity: float
+    pad_value: float
+
+    def __repr__(self) -> str:          # stable across runs: cache-key safe
+        return f"Semiring({self.name})"
+
+
+PLUS_TIMES = Semiring("plus_times", jnp.add, jnp.multiply, jnp.sum,
+                      jax.ops.segment_sum, 0.0, 0.0)
+MIN_PLUS = Semiring("min_plus", jnp.minimum, jnp.add, jnp.min,
+                    jax.ops.segment_min, math.inf, math.inf)
+# or_and over {0.0, 1.0} indicators: AND is *, OR is max.
+OR_AND = Semiring("or_and", jnp.maximum, jnp.multiply, jnp.max,
+                  jax.ops.segment_max, 0.0, 0.0)
+# max_times is only a semiring over nonnegative values (max's identity is
+# then 0, which is also the absorbing pad).
+MAX_TIMES = Semiring("max_times", jnp.maximum, jnp.multiply, jnp.max,
+                     jax.ops.segment_max, 0.0, 0.0)
+
+SEMIRINGS = {s.name: s for s in (PLUS_TIMES, MIN_PLUS, OR_AND, MAX_TIMES)}
+
+
+def resolve(semiring: Union[str, Semiring, None]) -> Semiring:
+    """Name | instance | None (-> plus_times) to a registry `Semiring`."""
+    if semiring is None:
+        return PLUS_TIMES
+    if isinstance(semiring, Semiring):
+        return semiring
+    return SEMIRINGS[semiring]
+
+
+# ---------------------------------------------------------------------------
+# Semiring jnp reference kernels (the oracles for the generalized Pallas
+# paths, and the vmappable bodies behind `SpmvPlan.execute_many`)
+# ---------------------------------------------------------------------------
+
+def spmv_ell_semiring_jnp(ell: ELL, x: jax.Array, sr: Semiring) -> jax.Array:
+    """y[i] = ⊕_slots  data[i, s] ⊗ x[idx[i, s]].
+
+    The ELL container must have been built with `fill=sr.pad_value`
+    (`ELL.from_csr(..., fill=...)`) so its padding slots are absorbing.
+    Zero-width containers (nnz=0 matrices) reduce to the ⊕-identity.
+    """
+    if ell.data.shape[1] == 0:
+        return jnp.full((ell.n_rows,), sr.identity, ell.data.dtype)
+    return sr.reduce(sr.mul(ell.data, jnp.take(x, ell.indices, axis=0)),
+                     axis=1)
+
+
+def spmv_csr_semiring_jnp(csr: CSR, x: jax.Array, sr: Semiring) -> jax.Array:
+    """Gather + segment-⊕ over row ids; empty rows get the ⊕-identity
+    (jax's segment_min/max fill empty segments with +/-inf, which is only
+    right for min_plus -- the where() fixes the rest)."""
+    nnz = csr.data.shape[0]
+    lengths = jnp.diff(csr.indptr)
+    if nnz == 0:
+        return jnp.full((csr.n_rows,), sr.identity, csr.data.dtype)
+    row_ids = jnp.repeat(jnp.arange(csr.n_rows), lengths,
+                         total_repeat_length=nnz)
+    prods = sr.mul(csr.data, jnp.take(x, csr.indices, axis=0))
+    y = sr.segment(prods, row_ids, num_segments=csr.n_rows)
+    return jnp.where(lengths > 0, y,
+                     jnp.asarray(sr.identity, y.dtype))
+
+
+def spmv_semiring_jnp(container, x: jax.Array, sr: Semiring) -> jax.Array:
+    """Dispatch on container type (ELL and CSR only -- see the padding
+    contract in the module docstring for why DIA/BELL are excluded)."""
+    if isinstance(container, ELL):
+        return spmv_ell_semiring_jnp(container, x, sr)
+    if isinstance(container, CSR):
+        return spmv_csr_semiring_jnp(container, x, sr)
+    raise TypeError(
+        f"semiring SpMV supports ELL and CSR, got {type(container).__name__}"
+        " (dense-footprint formats store absent entries as 0.0, which is "
+        "only absorbing under plus_times)")
+
+
+__all__ = ["Semiring", "PLUS_TIMES", "MIN_PLUS", "OR_AND", "MAX_TIMES",
+           "SEMIRINGS", "resolve", "spmv_ell_semiring_jnp",
+           "spmv_csr_semiring_jnp", "spmv_semiring_jnp"]

@@ -1,0 +1,48 @@
+"""Per-iteration cache behavior of a whole analytic, from one plan.
+
+An iterative analytic is the same SpMV demand stream replayed once per
+iteration, so its memory behavior falls out of the plan's memoized
+`address_trace` with zero extra tracing: instantiate one hierarchy and
+replay the trace n_iters times against *warm* state, keeping one
+`EventCounters` per iteration.  Iteration 1 is the cold pass; later
+iterations show what survives in cache between SpMVs (x and the hot
+front of the matrix arrays) -- the compounding the paper's single-SpMV
+tables cannot show, and what `telemetry.sweep.graph_sweep` tabulates
+across the FD / R-MAT structure axis.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core.cache_model import SANDY_BRIDGE, MachineModel
+from repro.telemetry.events import EventCounters
+from repro.telemetry.hierarchy import HierarchySpec
+from repro.telemetry.topdown import TopdownSummary, topdown_summary
+
+
+def iteration_counters(plan, n_iters: int,
+                       machine: MachineModel = SANDY_BRIDGE,
+                       spec: Optional[HierarchySpec] = None
+                       ) -> List[EventCounters]:
+    """One `EventCounters` per iteration of an analytic run over `plan`.
+
+    The hierarchy stays warm across iterations (that is the point);
+    the plan must have been compiled with `keep_csr=True` (drivers do).
+    """
+    spec = spec if spec is not None else HierarchySpec()
+    hier = spec.instantiate(machine)
+    trace = plan.address_trace(machine).tolist()
+    return [hier.replay(trace) for _ in range(max(int(n_iters), 1))]
+
+
+def iteration_summaries(plan, n_iters: int,
+                        machine: MachineModel = SANDY_BRIDGE,
+                        spec: Optional[HierarchySpec] = None
+                        ) -> List[TopdownSummary]:
+    """`iteration_counters` flattened to topdown report rows."""
+    nnz = plan.csr.nnz if plan.csr is not None else plan.n_rows
+    return [topdown_summary(c, machine, max(nnz, 1))
+            for c in iteration_counters(plan, n_iters, machine, spec)]
+
+
+__all__ = ["iteration_counters", "iteration_summaries"]

@@ -52,7 +52,15 @@ class PreparedDIA:
 def prepare_dia(dia: DIA, bn: int = 512) -> PreparedDIA:
     n_pad = round_up(dia.n_rows, bn)
     band = jnp.pad(dia.data, ((0, 0), (0, n_pad - dia.n_rows)))
-    return PreparedDIA(band=band, offsets=dia.offsets, n_rows=dia.n_rows,
+    offsets = dia.offsets
+    if band.shape[0] == 0:
+        # nnz=0 matrix: DIA.from_csr stores zero diagonals, which the
+        # Pallas grid (n_diags as a grid axis, scalar-prefetched offsets)
+        # cannot represent.  Synthesize one explicit zero main diagonal --
+        # zeros are the plus-times identity, so y is exactly zeros.
+        band = jnp.zeros((1, n_pad), dia.data.dtype)
+        offsets = jnp.zeros((1,), jnp.int32)
+    return PreparedDIA(band=band, offsets=offsets, n_rows=dia.n_rows,
                        n_cols=dia.n_cols, bn=bn)
 
 
@@ -106,11 +114,17 @@ class PreparedELL:
     x_pad: int           # padded x length
 
 
-def prepare_ell(ell: ELL, bm: int = 128, pad_mult: int = 128) -> PreparedELL:
+def prepare_ell(ell: ELL, bm: int = 128, pad_mult: int = 128,
+                pad_value: float = 0.0) -> PreparedELL:
+    """`pad_value` fills the width/row padding slots: 0.0 for plus-times,
+    the semiring's absorbing element (`Semiring.pad_value`) otherwise.
+    The container itself must already use the same fill
+    (`ELL.from_csr(..., fill=...)`) for its own short-row padding."""
     n, w = ell.data.shape
     n_pad = round_up(n, bm)
     w_pad = round_up(max(w, 1), pad_mult)
-    data = jnp.pad(ell.data, ((0, n_pad - n), (0, w_pad - w)))
+    data = jnp.pad(ell.data, ((0, n_pad - n), (0, w_pad - w)),
+                   constant_values=pad_value)
     idx = jnp.pad(ell.indices, ((0, n_pad - n), (0, w_pad - w)))
     b_dim = n_pad // bm
     return PreparedELL(
@@ -121,9 +135,10 @@ def prepare_ell(ell: ELL, bm: int = 128, pad_mult: int = 128) -> PreparedELL:
 
 
 def spmv_ell_prepared(prep: PreparedELL, x: jax.Array,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool = True, semiring=None) -> jax.Array:
     xp = jnp.pad(x, (0, prep.x_pad - prep.n_cols))
-    y = _ell.spmv_ell_pallas(prep.data, prep.idx, xp, interpret=interpret)
+    y = _ell.spmv_ell_pallas(prep.data, prep.idx, xp, interpret=interpret,
+                             semiring=semiring)
     return y.reshape(-1)[: prep.n_rows]
 
 
@@ -191,8 +206,12 @@ class PaddedCSR:
 
 
 def prepare_csr(csr: CSR, n_stripes: int = 1, bm: int = 128,
-                pad_mult: int = 128) -> PaddedCSR:
-    """Pad each (stripe x row-block) cell to the max nonzero count."""
+                pad_mult: int = 128, pad_value: float = 0.0) -> PaddedCSR:
+    """Pad each (stripe x row-block) cell to the max nonzero count.
+
+    `pad_value` fills the value padding slots (cols/rowin pad to 0): 0.0
+    for plus-times, the semiring's absorbing element otherwise, so the
+    kernel's segment-⊕ treats padding as the empty contribution."""
     stripe_w = round_up(ceil_div(csr.n_cols, n_stripes), 128)
     n_blocks = ceil_div(csr.n_rows, bm)
     indptr = np.asarray(csr.indptr, dtype=np.int64)
@@ -208,7 +227,7 @@ def prepare_csr(csr: CSR, n_stripes: int = 1, bm: int = 128,
     counts = np.bincount(cell_s, minlength=n_stripes * n_blocks)
     w = max(int(counts.max()), 1)
     w = round_up(w, pad_mult)
-    V = np.zeros((n_stripes, n_blocks, w), dtype=vals.dtype)
+    V = np.full((n_stripes, n_blocks, w), pad_value, dtype=vals.dtype)
     C = np.zeros((n_stripes, n_blocks, w), dtype=np.int32)
     R = np.zeros((n_stripes, n_blocks, w), dtype=np.int32)
     # position within cell
@@ -227,13 +246,17 @@ def prepare_csr(csr: CSR, n_stripes: int = 1, bm: int = 128,
 
 
 def spmv_csr_prepared(prep: PaddedCSR, x: jax.Array,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool = True, semiring=None) -> jax.Array:
     s_dim = prep.vals.shape[0]
     xp = jnp.pad(x, (0, s_dim * prep.stripe_w - prep.n_cols))
     x_stripes = xp.reshape(s_dim, prep.stripe_w)
     partials = _csr.spmv_csr_pallas(prep.vals, prep.cols, prep.rowin,
-                                    x_stripes, interpret=interpret)
-    y = partials.sum(axis=0).reshape(-1)      # reduce over stripes
+                                    x_stripes, interpret=interpret,
+                                    semiring=semiring)
+    if semiring is None or semiring.name == "plus_times":
+        y = partials.sum(axis=0).reshape(-1)  # reduce over stripes
+    else:
+        y = semiring.reduce(partials, axis=0).reshape(-1)
     return y[: prep.n_rows]
 
 

@@ -65,22 +65,57 @@ def spmv_bell(bell: BELL, x: jax.Array, interpret: bool = True) -> jax.Array:
     return spmv_bell_prepared(prepare_bell(bell), x, interpret=interpret)
 
 
+def _check_ell_padding_absorbing(ell: ELL, semiring) -> None:
+    """An ELL built with the default `fill=0.0` pads short rows with
+    (value 0.0, col 0) slots.  Under a semiring whose absorbing element is
+    not 0.0 (min-plus: +inf) those slots read as real weight-0 edges to
+    vertex 0 and silently corrupt every short row — so refuse any
+    container holding such ambiguous slots and point at the fix.  (The
+    check is conservative: a genuine explicit-zero entry in column 0
+    trips it too; store it as the CSR path does, or nudge it off 0.0.)"""
+    if isinstance(ell.data, jax.core.Tracer) or \
+            isinstance(ell.indices, jax.core.Tracer):
+        return                         # can't inspect under tracing
+    import numpy as np
+
+    data, idx = np.asarray(ell.data), np.asarray(ell.indices)
+    if data.size and bool(np.any((data == 0.0) & (idx == 0))):
+        raise ValueError(
+            f"ELL container has (value 0.0, col 0) slots, which the "
+            f"{semiring.name!r} semiring (pad_value="
+            f"{semiring.pad_value!r}) would treat as real edges; build it "
+            f"with ELL.from_csr(csr, fill=semiring.pad_value) so padding "
+            "is absorbing, or use spmv_csr(csr, x, semiring=...)")
+
+
 @_reordered
 def spmv_ell(ell: ELL, x: jax.Array, bm: int = 128,
-             interpret: bool = True) -> jax.Array:
+             interpret: bool = True, semiring=None) -> jax.Array:
     """Row-block the (n_rows, max_nnz) ELL arrays to (B, bm, W) and run the
-    Pallas kernel; padding rows index col 0 with value 0."""
-    return spmv_ell_prepared(prepare_ell(ell, bm=bm), x, interpret=interpret)
+    Pallas kernel; padding rows index col 0 with the absorbing pad value
+    (0 for the default plus-times `semiring`).
+
+    Non-plus-times semirings require the CONTAINER's own short-row
+    padding to be absorbing too: build it with
+    `ELL.from_csr(csr, fill=semiring.pad_value)` (checked when the pad
+    value is not 0.0)."""
+    pad = 0.0 if semiring is None else semiring.pad_value
+    if semiring is not None and semiring.pad_value != 0.0:
+        _check_ell_padding_absorbing(ell, semiring)
+    return spmv_ell_prepared(prepare_ell(ell, bm=bm, pad_value=pad), x,
+                             interpret=interpret, semiring=semiring)
 
 
 @_reordered
 def spmv_csr(csr: CSR, x: jax.Array, n_stripes: int = 1,
-             interpret: bool = True) -> jax.Array:
+             interpret: bool = True, semiring=None) -> jax.Array:
     """Convenience wrapper: preps layout per call (compile a
     `repro.plan.SpmvPlan` to cache the `PaddedCSR` for repeated
     multiplies)."""
-    return spmv_csr_prepared(prepare_csr(csr, n_stripes=n_stripes), x,
-                             interpret=interpret)
+    pad = 0.0 if semiring is None else semiring.pad_value
+    return spmv_csr_prepared(
+        prepare_csr(csr, n_stripes=n_stripes, pad_value=pad), x,
+        interpret=interpret, semiring=semiring)
 
 
 # ---------------------------------------------------------------------------

@@ -34,33 +34,49 @@ from jax.experimental.pallas import tpu as pltpu
 from .compat import CompilerParams
 
 
-def _kernel(vals_ref, cols_ref, rowin_ref, x_ref, part_ref, *, bm):
+def _kernel(vals_ref, cols_ref, rowin_ref, x_ref, part_ref, *, bm,
+            semiring=None):
     xg = jnp.take(x_ref[0, :], cols_ref[0, 0, :], axis=0)      # VMEM gather
-    prods = vals_ref[0, 0, :] * xg                             # (W,)
     rows = rowin_ref[0, 0, :]                                  # (W,)
     onehot = (jax.lax.broadcasted_iota(jnp.int32, (bm, rows.shape[0]), 0)
               == rows[None, :])
-    part_ref[0, 0, :] = jax.lax.dot_general(
-        onehot.astype(prods.dtype), prods[:, None],
-        (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )[:, 0].astype(part_ref.dtype)
+    if semiring is None:                                       # plus-times
+        prods = vals_ref[0, 0, :] * xg                         # (W,)
+        part_ref[0, 0, :] = jax.lax.dot_general(
+            onehot.astype(prods.dtype), prods[:, None],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )[:, 0].astype(part_ref.dtype)
+    else:
+        # generalized segment-⊕: min/max have no matmul form, so select
+        # each row's slots with the same one-hot mask (identity
+        # elsewhere) and ⊕-reduce on the VPU instead of the MXU.
+        prods = semiring.mul(vals_ref[0, 0, :], xg)            # (W,)
+        masked = jnp.where(onehot, prods[None, :],
+                           jnp.asarray(semiring.identity, prods.dtype))
+        part_ref[0, 0, :] = semiring.reduce(masked,
+                                            axis=1).astype(part_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "semiring"))
 def spmv_csr_pallas(vals: jax.Array, cols: jax.Array, rowin: jax.Array,
-                    x_stripes: jax.Array, interpret: bool = True
-                    ) -> jax.Array:
-    """Partial-product pass: returns (S, B, bm) partials; sum over S outside.
+                    x_stripes: jax.Array, interpret: bool = True,
+                    semiring=None) -> jax.Array:
+    """Partial-product pass: returns (S, B, bm) partials; ⊕ over S outside.
 
     vals/cols/rowin : (S, B, W)
     x_stripes       : (S, stripe_w)
+    semiring        : None or a `repro.graph.semiring.Semiring`; None
+                      (and plus_times) takes the byte-identical
+                      historical MXU one-hot path
     """
+    if semiring is not None and semiring.name == "plus_times":
+        semiring = None
     s_dim, b_dim, w = vals.shape
     bm = 128  # rows per block (fixed by ops.py prep)
 
     partials = pl.pallas_call(
-        functools.partial(_kernel, bm=bm),
+        functools.partial(_kernel, bm=bm, semiring=semiring),
         grid=(s_dim, b_dim),
         in_specs=[
             pl.BlockSpec((1, 1, w), lambda s, b: (s, b, 0)),

@@ -29,26 +29,36 @@ from jax.experimental import pallas as pl
 from .compat import CompilerParams
 
 
-def _kernel(data_ref, idx_ref, x_ref, y_ref):
+def _kernel(data_ref, idx_ref, x_ref, y_ref, *, semiring=None):
     idx = idx_ref[0]                                       # (bm, W)
     flat = jnp.take(x_ref[0, :], idx.reshape(-1), axis=0)  # VMEM gather
     xg = flat.reshape(idx.shape)
-    y_ref[0, :] = (data_ref[0] * xg).sum(axis=1)
+    if semiring is None:                                   # plus-times
+        y_ref[0, :] = (data_ref[0] * xg).sum(axis=1)
+    else:
+        # generalized inner loop: ⊗ elementwise, ⊕-reduce over slots.
+        # Padding slots hold semiring.pad_value (absorbing), so they
+        # vanish under the reduction exactly like 0.0 does under sum.
+        y_ref[0, :] = semiring.reduce(semiring.mul(data_ref[0], xg), axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "semiring"))
 def spmv_ell_pallas(data: jax.Array, idx: jax.Array, x: jax.Array,
-                    interpret: bool = True) -> jax.Array:
-    """y = A @ x for A in row-blocked ELL layout.
+                    interpret: bool = True, semiring=None) -> jax.Array:
+    """y = A (⊕,⊗) x for A in row-blocked ELL layout.
 
     data / idx : (B, bm, W)
     x          : (n_pad,) -- padded so every idx is in range
+    semiring   : None or a `repro.graph.semiring.Semiring`; None (and
+                 plus_times) takes the byte-identical historical path
     returns    : (B, bm)
     """
+    if semiring is not None and semiring.name == "plus_times":
+        semiring = None                 # one compiled path, bit-identical
     b_dim, bm, w = data.shape
     xp = x.reshape(1, -1)
     y = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, semiring=semiring),
         grid=(b_dim,),
         in_specs=[
             pl.BlockSpec((1, bm, w), lambda b: (b, 0, 0)),

@@ -187,10 +187,14 @@ def _sdpa_chunked(q, k, v, *, causal: bool, window: Optional[int],
             one_chunk, policy=jax.checkpoint_policies.nothing_saveable)
 
     # Causal-unrolled path (train-time self-attention): chunk ci only ever
-    # sees keys < (ci+1)*chunk, so slice the KV prefix statically -- future
-    # blocks are skipped outright (the flash kernel's block-skip, in jnp:
-    # ~37.5% of score flops+bytes for 4 chunks) and the boolean where()
-    # mask collapses to an additive bias on the diagonal block alone.
+    # sees keys < (ci+1)*chunk, so slice the KV prefix statically for the
+    # score einsum -- future blocks are skipped outright (the flash
+    # kernel's block-skip on the QK^T half) and the boolean where() mask
+    # collapses to an additive bias on the diagonal block alone.  The
+    # scores are then padded back to the full KV length with -1e30 before
+    # softmax, so the softmax denominator and the PV accumulation reduce
+    # over the SAME extent (and order) as the fori path above: the two
+    # knob settings are bitwise-identical, not merely close.
     if (tuning.causal_chunk_unroll and causal and window is None
             and isinstance(q_offset, int) and q_offset == 0
             and n_chunks > 1 and n_chunks <= 16):
@@ -200,16 +204,21 @@ def _sdpa_chunked(q, k, v, *, causal: bool, window: Optional[int],
 
         def causal_chunk(ci, qc):
             hi = (ci + 1) * chunk
-            kc, vc = k[:, :hi], v[:, :hi]
+            kc = k[:, :hi]
             s_ci = jnp.einsum("bqkgd,bskd->bqkgs", qc.astype(jnp.float32),
                               kc.astype(jnp.float32)) * scale
             bias = jnp.concatenate(
                 [jnp.zeros((chunk, ci * chunk), jnp.float32), tri_bias],
                 axis=1)                            # (chunk, hi)
             s_ci = s_ci + bias[None, :, None, None, :]
-            p_ci = jax.nn.softmax(s_ci, axis=-1)
+            # pad the skipped future blocks as -1e30 (exactly what the
+            # masked path stores there): exp underflows to 0.0, and the
+            # full-width softmax/PV reductions match the fori path bitwise
+            s_full = jnp.pad(s_ci, ((0, 0),) * 4 + ((0, skv - hi),),
+                             constant_values=-1e30)
+            p_ci = jax.nn.softmax(s_full, axis=-1)
             return jnp.einsum("bqkgs,bskd->bqkgd", p_ci,
-                              vc.astype(jnp.float32))
+                              v.astype(jnp.float32))
 
         if tuning.attn_chunk_remat:
             causal_chunk = jax.checkpoint(

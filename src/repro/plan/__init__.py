@@ -9,7 +9,8 @@ This package freezes that decision chain once per matrix:
   fingerprint  content digests (a plan is valid while the bytes match)
   compiler     `compile(matrix, ...)` -> SpmvPlan: candidate reorderings
                scored by predicted contended-LLC throughput, winning
-               format converted, kernel layout pre-padded
+               format converted, kernel layout pre-padded; `semiring=`
+               builds absorbing-padded plans for `repro.graph` analytics
   plan         SpmvPlan: execute / execute_many (SpMM) /
                power_iteration / address_trace
   cache        PlanCache + the process-wide DEFAULT_CACHE behind the

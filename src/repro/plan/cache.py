@@ -106,13 +106,31 @@ class PlanCache:
         key = self.key_for(matrix, **opts)
         return self.get_or_build(key, lambda: _compile(matrix, **opts))
 
-    def invalidate(self, fingerprint: str) -> int:
-        """Drop every plan for the given matrix fingerprint (any options).
-        Returns the number of entries removed.  Rarely needed — content
-        addressing invalidates implicitly — but explicit for eviction."""
+    def invalidate(self, matrix_or_fingerprint) -> int:
+        """Drop every plan for the given matrix (any options).  Returns the
+        number of entries removed.
+
+        Accepts a fingerprint string, or the container itself.  Passing
+        the container is what makes invalidation after IN-PLACE mutation
+        work: `matrix_fingerprint` memoizes its digest per object, so a
+        mutated container would otherwise keep resolving to the
+        pre-mutation digest (and the cache would keep serving the stale
+        plan).  Here the memo entry is evicted first and plans under BOTH
+        digests -- the stale memoized one and the re-hash of the current
+        bytes -- are dropped.  Rarely needed for immutable containers,
+        where content addressing invalidates implicitly.
+        """
+        if isinstance(matrix_or_fingerprint, str):
+            fps = {matrix_or_fingerprint}
+        else:
+            from .fingerprint import forget_fingerprint
+            stale_fp = forget_fingerprint(matrix_or_fingerprint)
+            fps = {matrix_fingerprint(matrix_or_fingerprint)}
+            if stale_fp is not None:
+                fps.add(stale_fp)
         with self._lock:
             stale = [k for k in self._plans
-                     if k.split("|", 1)[0] == fingerprint]
+                     if k.split("|", 1)[0] in fps]
             for k in stale:
                 del self._plans[k]
             return len(stale)

@@ -67,21 +67,23 @@ def choose_format(report) -> str:
     return "csr"
 
 
-def convert(csr: CSR, format_name: str):
-    """Convert a CSR to the named storage format."""
+def convert(csr: CSR, format_name: str, fill: float = 0.0):
+    """Convert a CSR to the named storage format.  `fill` is the padding
+    value for layouts that materialize padding slots (ELL): 0.0 for
+    plus-times, the semiring's absorbing element otherwise."""
     if format_name == "dia":
         return DIA.from_csr(csr)
     if format_name == "bell":
         return BELL.from_csr(csr)
     if format_name == "ell":
-        return ELL.from_csr(csr)
+        return ELL.from_csr(csr, fill=fill)
     if format_name == "csr":
         return csr
     raise ValueError(f"unknown format {format_name!r}")
 
 
 def _prepare(container, format_name: str, *, bn: int, bm: int,
-             n_stripes: int):
+             n_stripes: int, pad_value: float = 0.0):
     """Pre-padded kernel layout for the chosen container (plan-build time;
     `SpmvPlan.execute` replays it with zero matrix-side work)."""
     if format_name == "dia":
@@ -89,9 +91,10 @@ def _prepare(container, format_name: str, *, bn: int, bm: int,
     if format_name == "bell":
         return kl.prepare_bell(container)
     if format_name == "ell":
-        return kl.prepare_ell(container, bm=bm)
+        return kl.prepare_ell(container, bm=bm, pad_value=pad_value)
     if format_name == "csr":
-        return kl.prepare_csr(container, n_stripes=n_stripes, bm=bm)
+        return kl.prepare_csr(container, n_stripes=n_stripes, bm=bm,
+                              pad_value=pad_value)
     raise ValueError(f"unknown format {format_name!r}")
 
 
@@ -151,6 +154,7 @@ def compile(matrix: CSR, *,                       # noqa: A001 (plan.compile)
             format: Optional[str] = None,         # noqa: A002
             use_pallas: bool = True,
             interpret: Optional[bool] = None,
+            semiring: str = "plus_times",
             bn: int = 512, bm: int = 128, n_stripes: int = 1,
             keep_csr: bool = True,
             sample_rows: Optional[int] = 65536) -> SpmvPlan:
@@ -163,11 +167,43 @@ def compile(matrix: CSR, *,                       # noqa: A001 (plan.compile)
                strategy name/callable | a concrete Reordering
     format     force a storage format ('dia'|'bell'|'ell'|'csr');
                default reads it off each candidate's permuted structure
+    semiring   name (or `Semiring`) of the (⊕, ⊗) pair the plan executes
+               under ('plus_times' default).  Non-plus-times plans use
+               absorbing-padded ELL/CSR layouts (default ELL: fixed
+               width suits iterated analytics); the reordering/predictor
+               machinery is semiring-independent (same access stream)
     keep_csr   retain the permuted CSR on the plan (needed for
                `execute_many`'s SpMM path and telemetry trace replay)
     """
     fp = matrix_fingerprint(matrix)
     stats: Dict[str, float] = {}
+
+    sr = None
+    if semiring != "plus_times":
+        from repro.graph.semiring import SEMIRINGS, resolve
+        sr = resolve(semiring)
+        if SEMIRINGS.get(sr.name) is not sr:
+            # plans store the semiring by NAME (it must survive
+            # serialization and cache keys), so an unregistered instance
+            # would compile fine and KeyError on the first execute
+            raise ValueError(
+                f"semiring {sr.name!r} is not registered in "
+                "repro.graph.semiring.SEMIRINGS; plans resolve semirings "
+                "by name, so add custom semirings to the registry first")
+        if sr.name == "plus_times":
+            sr = None
+        semiring = sr.name if sr is not None else "plus_times"
+    pad_value = sr.pad_value if sr is not None else 0.0
+    if sr is not None:
+        if mesh is not None:
+            raise ValueError("sharded plans are plus-times only")
+        if format is None:
+            format = "ell"              # fixed-width: the analytics default
+        elif format not in ("ell", "csr"):
+            raise ValueError(
+                f"semiring {semiring!r} requires format 'ell' or 'csr' "
+                f"(dense-footprint {format!r} stores absent entries as "
+                "0.0, which is only absorbing under plus_times)")
 
     if predictor == "none" and reorder == "auto":
         # no scoring requested, so don't build candidates that could only
@@ -216,20 +252,21 @@ def compile(matrix: CSR, *,                       # noqa: A001 (plan.compile)
                                 keep_csr=keep_csr)
 
     t0 = time.perf_counter()
-    container = convert(permuted, format_name)
+    container = convert(permuted, format_name, fill=pad_value)
     stats["convert_s"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
     prep = _prepare(container, format_name, bn=bn, bm=bm,
-                    n_stripes=n_stripes) if use_pallas else None
+                    n_stripes=n_stripes,
+                    pad_value=pad_value) if use_pallas else None
     stats["prepare_s"] = time.perf_counter() - t0
 
     return SpmvPlan(
         fingerprint=fp, format_name=format_name, container=container,
         prep=prep, reordering=reordering, report=report,
         csr=permuted if keep_csr else None, threads=threads,
-        use_pallas=use_pallas, interpret=interpret, predicted=predicted,
-        chosen=chosen, compile_stats=stats)
+        use_pallas=use_pallas, interpret=interpret, semiring=semiring,
+        predicted=predicted, chosen=chosen, compile_stats=stats)
 
 
 def _compile_sharded(fp, permuted, reordering, report, mesh, partition, *,

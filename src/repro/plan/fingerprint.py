@@ -48,6 +48,22 @@ def fingerprint_arrays(*arrays, extra: str = "") -> str:
 _FP_MEMO: dict = {}
 
 
+def forget_fingerprint(matrix) -> str | None:
+    """Drop `matrix`'s memoized digest, returning the stale digest if one
+    was memoized for this exact object.
+
+    Mutating a container's underlying buffers in place is outside the
+    content-addressing contract (the per-object memo would keep serving
+    the pre-mutation digest); callers that do it anyway use this to evict
+    the memo -- `PlanCache.invalidate(matrix)` wraps it so both the stale
+    and the re-hashed entries are dropped in one call.
+    """
+    entry = _FP_MEMO.pop(id(matrix), None)
+    if entry is not None and entry[0]() is matrix:
+        return entry[1]
+    return None
+
+
 def matrix_fingerprint(matrix) -> str:
     """Digest of any supported container (CSR/ELL/BELL/DIA or dense).
 

@@ -69,6 +69,7 @@ class SpmvPlan:
     threads: int = 1
     use_pallas: bool = True
     interpret: Optional[bool] = None
+    semiring: str = "plus_times"     # (⊕, ⊗) pair the kernels run under
     predicted: Dict[str, Dict] = dataclasses.field(default_factory=dict)
     chosen: str = "none"             # winning (reordering) candidate label
     compile_stats: Dict[str, float] = dataclasses.field(default_factory=dict)
@@ -89,6 +90,14 @@ class SpmvPlan:
         src = self.container if self.container is not None else self.prep
         return int(src.n_cols)
 
+    def _semiring(self):
+        """Resolved `Semiring` object, or None for plus-times (the
+        historical bit-exact kernel paths take the None branch)."""
+        if self.semiring == "plus_times":
+            return None
+        from repro.graph.semiring import resolve
+        return resolve(self.semiring)
+
     # -- execution ----------------------------------------------------------
 
     def execute(self, x: jax.Array, interpret: Optional[bool] = None
@@ -107,13 +116,25 @@ class SpmvPlan:
             return self._jnp_kernel()(x)
         interpret = _resolve_interpret(
             self.interpret if interpret is None else interpret)
+        sr = self._semiring()
         if self.format_name == "ell-sharded":
             from repro.distributed.spmv import spmv_row_sharded_prepared
+            if sr is not None:
+                raise ValueError("sharded plans are plus-times only")
             if self.mesh is None:
                 raise ValueError("sharded plan has no mesh bound; pass "
                                  "mesh= to load_plan or set plan.mesh")
             return spmv_row_sharded_prepared(self.prep, x, self.mesh,
                                              interpret=interpret)
+        if sr is not None:
+            if self.format_name not in ("ell", "csr"):
+                raise ValueError(
+                    f"semiring {self.semiring!r} plans support ell/csr, "
+                    f"not {self.format_name!r}")
+            runners = {"ell": kl.spmv_ell_prepared,
+                       "csr": kl.spmv_csr_prepared}
+            return runners[self.format_name](self.prep, x,
+                                             interpret=interpret, semiring=sr)
         runners = {
             "dia": kl.spmv_dia_prepared,
             "bell": kl.spmv_bell_prepared,
@@ -133,6 +154,10 @@ class SpmvPlan:
 
     def _jnp_kernel(self):
         container = self._source_container()
+        sr = self._semiring()
+        if sr is not None:
+            from repro.graph.semiring import spmv_semiring_jnp
+            return lambda xv: spmv_semiring_jnp(container, xv, sr)
         kern = _jnp_kernels()[type(container)]
         return lambda xv: kern(container, xv)
 
@@ -154,18 +179,16 @@ class SpmvPlan:
         return self._many_fn(X)
 
     def _build_many(self):
-        container = self._source_container()
-        kern = _jnp_kernels()[type(container)]
+        base = self._jnp_kernel()       # semiring-aware one-vector body
         if self.reordering is not None:
             cp = jnp.asarray(self.reordering.col_perm)
             irp = jnp.asarray(self.reordering.inv_row_perm)
 
             def one(xv):
-                return jnp.take(kern(container, jnp.take(xv, cp, axis=0)),
+                return jnp.take(base(jnp.take(xv, cp, axis=0)),
                                 irp, axis=0)
         else:
-            def one(xv):
-                return kern(container, xv)
+            one = base
         return jax.jit(jax.vmap(one))
 
     def power_iteration(self, x0: jax.Array, n_iters: int = 16):
@@ -200,5 +223,6 @@ class SpmvPlan:
         pred = self.predicted.get(self.chosen, {})
         gf = pred.get("gflops")
         gf_s = f" pred={gf:.2f}GF" if gf is not None else ""
-        return (f"SpmvPlan[{self.fingerprint[:8]}] fmt={self.format_name} "
-                f"reorder={r} threads={self.threads}{gf_s}")
+        sr_s = "" if self.semiring == "plus_times" else f" sr={self.semiring}"
+        return (f"SpmvPlan[{self.fingerprint[:8]}] fmt={self.format_name}"
+                f"{sr_s} reorder={r} threads={self.threads}{gf_s}")

@@ -73,6 +73,7 @@ def plan_state(plan: SpmvPlan) -> Dict:
         "threads": plan.threads,
         "use_pallas": plan.use_pallas,
         "interpret": plan.interpret,
+        "semiring": plan.semiring,
         "chosen": plan.chosen,
         "predicted": _plain(plan.predicted),
         "compile_stats": _plain(plan.compile_stats),
@@ -193,10 +194,16 @@ def plan_from_state(state: Dict, mesh=None) -> SpmvPlan:
             bm=int(smeta["bm"]))
     elif meta["use_pallas"] and container is not None:
         knobs = meta.get("prep_knobs", {})
+        semiring = meta.get("semiring", "plus_times")
+        pad_value = 0.0
+        if semiring != "plus_times":
+            from repro.graph.semiring import resolve
+            pad_value = resolve(semiring).pad_value
         prep = _prepare(container, format_name,
                         bn=int(knobs.get("bn", 512)),
                         bm=int(knobs.get("bm", 128)),
-                        n_stripes=int(knobs.get("n_stripes", 1)))
+                        n_stripes=int(knobs.get("n_stripes", 1)),
+                        pad_value=pad_value)
     else:
         prep = None
 
@@ -208,6 +215,7 @@ def plan_from_state(state: Dict, mesh=None) -> SpmvPlan:
         container=container, prep=prep, reordering=reordering,
         report=report, csr=csr, threads=int(meta["threads"]),
         use_pallas=bool(meta["use_pallas"]), interpret=meta["interpret"],
+        semiring=meta.get("semiring", "plus_times"),
         predicted=meta.get("predicted", {}), chosen=meta.get("chosen", "none"),
         compile_stats=meta.get("compile_stats", {}), mesh=mesh)
 

@@ -6,7 +6,9 @@ victim caches, miss caches, and stream buffers, count named hardware
 events, and roll them up into a topdown metric tree.  Sweeps cross four
 axes — geometry × mechanism × reordering (`repro.reorder` strategies
 applied before tracing) × threads (`scaling_sweep`, which drives the
-`repro.parallel` shared-LLC engine).
+`repro.parallel` shared-LLC engine) — plus the whole-analytic axis
+(`graph_sweep`: per-iteration replay of `repro.graph` driver runs, so
+the FD/R-MAT gap is measured end-to-end, compounding included).
 
   events     named hardware-event counters (L2_DEMAND_MISS, VICTIM_HIT, ...)
   hierarchy  set-assoc. caches + prefetcher + §V mechanisms; trace replay
@@ -14,15 +16,17 @@ applied before tracing) × threads (`scaling_sweep`, which drives the
   sweep      geometry x mechanism x reorder x thread sweep harness
   report     CSV / JSON / markdown rendering + the bottom-line tables:
              gap_report (hardware), reorder_gap_report (software),
-             scaling_report / scaling_gap_report (thread scaling)
+             scaling_report / scaling_gap_report (thread scaling),
+             graph_report / graph_gap_report (whole analytics)
 """
 from . import events, hierarchy, report, sweep, topdown
 from .events import EventCounters, known_events, register_event
 from .hierarchy import (CacheLevel, Hierarchy, HierarchySpec, MissCache,
                         SequentialPrefetcher, SetAssocCache, StreamBuffers,
                         VictimCache, spmv_address_trace)
-from .report import scaling_gap_report, scaling_report
-from .sweep import ScalingPoint, scaling_sweep
+from .report import (graph_gap_report, graph_report, scaling_gap_report,
+                     scaling_report)
+from .sweep import GraphPoint, ScalingPoint, graph_sweep, scaling_sweep
 from .topdown import MetricNode, topdown_tree, topdown_summary
 
 __all__ = [
@@ -32,4 +36,5 @@ __all__ = [
     "SequentialPrefetcher", "SetAssocCache", "StreamBuffers", "VictimCache",
     "spmv_address_trace", "MetricNode", "topdown_tree", "topdown_summary",
     "ScalingPoint", "scaling_sweep", "scaling_report", "scaling_gap_report",
+    "GraphPoint", "graph_sweep", "graph_report", "graph_gap_report",
 ]

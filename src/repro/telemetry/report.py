@@ -9,7 +9,7 @@ from __future__ import annotations
 import json
 from typing import Dict, Iterable, List, Sequence
 
-from .sweep import ScalingPoint, SweepPoint
+from .sweep import GraphPoint, ScalingPoint, SweepPoint
 
 
 def _fmt(v) -> str:
@@ -174,6 +174,64 @@ def scaling_gap_report(points: Sequence[ScalingPoint]) -> str:
                 "" if rr is None or not gf_ok
                 else f"{(rr.metrics.gflops_est() - rm.metrics.gflops_est()) / gf_gap:.3f}")
         lines.append(",".join(row + closed + closed_gf))
+    return "\n".join(lines)
+
+
+def graph_report(points: Sequence[GraphPoint]) -> str:
+    """One CSV row per (matrix, analytic) from a `sweep.graph_sweep`:
+    iteration count, cold/warm/total cycles-per-nnz, cold vs warm L2
+    miss rates."""
+    lines = ["# whole-analytic runs (per-iteration trace replay, warm "
+             "hierarchy)", ",".join(GraphPoint.header())]
+    for p in points:
+        lines.append(",".join(_fmt(v) for v in p.row()))
+    return "\n".join(lines)
+
+
+def graph_gap_report(points: Sequence[GraphPoint]) -> str:
+    """How the FD-vs-R-MAT structure gap compounds over whole analytics.
+
+    Per (size, analytic):
+
+        gap_cold  = rmat.cold_cycles / fd.cold_cycles    (one SpMV, cold --
+                                                          the paper's view)
+        gap_warm  = rmat.warm_cycles / fd.warm_cycles    (steady iteration)
+        gap_total = rmat.total_cycles / fd.total_cycles  (whole analytic,
+                                                          iteration counts
+                                                          included)
+
+    gap_total > gap_cold means structure hurts *more* end-to-end than the
+    single-SpMV tables suggest (R-MAT's working set keeps missing while
+    FD's bands stay resident between iterations, or R-MAT needs more
+    iterations to converge); the ratio of the two is the compounding
+    factor.
+
+    Iteration counts from runs that hit the `max_iters` cap without
+    converging are marked with `*`: their gap_total reflects the cap,
+    not the analytic — raise the cap before reading that row's total.
+    """
+    by = {}
+    for p in points:
+        by[(p.kind, p.log2n, p.analytic)] = p
+    keys = sorted({(p.log2n, p.analytic) for p in points})
+    lines = ["# FD vs R-MAT gap on whole analytics",
+             "log2n,analytic,fd_iters,rmat_iters,gap_cold,gap_warm,"
+             "gap_total,compounding"]
+    for (log2n, analytic) in keys:
+        fd = by.get(("fd", log2n, analytic))
+        rm = by.get(("rmat", log2n, analytic))
+        if fd is None or rm is None:
+            continue
+        gap_cold = rm.cold_cycles_per_nnz / max(fd.cold_cycles_per_nnz, 1e-12)
+        gap_warm = rm.warm_cycles_per_nnz / max(fd.warm_cycles_per_nnz, 1e-12)
+        gap_total = (rm.total_cycles_per_nnz
+                     / max(fd.total_cycles_per_nnz, 1e-12))
+        lines.append(",".join([
+            str(log2n), analytic,
+            f"{fd.n_iters}{'' if fd.converged else '*'}",
+            f"{rm.n_iters}{'' if rm.converged else '*'}",
+            f"{gap_cold:.3f}", f"{gap_warm:.3f}", f"{gap_total:.3f}",
+            f"{gap_total / max(gap_cold, 1e-12):.3f}"]))
     return "\n".join(lines)
 
 

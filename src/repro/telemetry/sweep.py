@@ -302,6 +302,95 @@ def scaling_sweep(log2ns: Sequence[int] = (12,),
     return points
 
 
+@dataclasses.dataclass(frozen=True)
+class GraphPoint:
+    """One (matrix, analytic) cell of a graph sweep: a whole iterative
+    analytic, with per-iteration cache behavior from the plan's memoized
+    trace (iteration 1 cold, later iterations warm)."""
+
+    kind: str                 # 'fd' | 'rmat'
+    log2n: int
+    nnz: int                  # of the analytic's operand matrix
+    analytic: str             # 'pagerank' | 'bfs' | 'sssp' | ...
+    semiring: str
+    n_iters: int
+    converged: bool
+    iters: Tuple              # TopdownSummary per iteration
+
+    @property
+    def cold_cycles_per_nnz(self) -> float:
+        return self.iters[0].cycles_per_nnz
+
+    @property
+    def warm_cycles_per_nnz(self) -> float:
+        tail = self.iters[1:] or self.iters
+        return float(np.mean([s.cycles_per_nnz for s in tail]))
+
+    @property
+    def total_cycles_per_nnz(self) -> float:
+        """Whole-analytic cost: per-iteration cycles/nnz summed over the
+        run -- what the FD/R-MAT gap compounds into."""
+        return float(sum(s.cycles_per_nnz for s in self.iters))
+
+    def row(self) -> List:
+        return [self.kind, self.log2n, self.nnz, self.analytic,
+                self.semiring, self.n_iters, int(self.converged),
+                self.cold_cycles_per_nnz, self.warm_cycles_per_nnz,
+                self.total_cycles_per_nnz,
+                self.iters[0].l2_mpki, self.iters[-1].l2_mpki]
+
+    @staticmethod
+    def header() -> List[str]:
+        return ["kind", "log2n", "nnz", "analytic", "semiring", "n_iters",
+                "converged", "cold_cyc_nnz", "warm_cyc_nnz", "total_cyc_nnz",
+                "l2_mpki_cold", "l2_mpki_warm"]
+
+
+def graph_sweep(log2ns: Sequence[int] = (10,),
+                kinds: Sequence[str] = ("fd", "rmat"),
+                analytics: Sequence[str] = ("pagerank", "bfs", "sssp"),
+                spec: Optional[HierarchySpec] = None,
+                machine: MachineModel = SANDY_BRIDGE,
+                seed: int = 0, max_iters: int = 64) -> List[GraphPoint]:
+    """Whole-analytic axis: run each `repro.graph` driver to convergence,
+    then replay its plan's memoized address trace once per executed
+    iteration through a warm hierarchy.  The per-iteration summaries show
+    how the single-SpMV FD-vs-R-MAT gap compounds across a full PageRank /
+    BFS / SSSP run (`report.graph_gap_report` tabulates it).
+
+    Source-based analytics (bfs, sssp) start from the max-out-degree
+    vertex (a hub -- vertex 0 can be edgeless on sparse R-MAT draws);
+    pagerank starts from a seeded random restart vector so near-regular
+    FD grids don't begin at their own fixpoint.
+    """
+    from repro.graph import DRIVERS
+    from repro.graph.telemetry import iteration_summaries
+
+    points: List[GraphPoint] = []
+    for kind in kinds:
+        for log2n in log2ns:
+            base = _matrix(kind, 2 ** log2n, seed=seed)
+            source = int(np.argmax(np.diff(np.asarray(base.indptr))))
+            r0 = np.random.default_rng(seed).uniform(
+                0.5, 1.5, size=base.n_rows).astype(np.float32)
+            for name in analytics:
+                driver = DRIVERS[name]
+                if name in ("bfs", "sssp"):
+                    res = driver(base, source, max_iters=max_iters)
+                elif name == "pagerank":
+                    res = driver(base, r0=r0, max_iters=max_iters)
+                else:
+                    res = driver(base, max_iters=max_iters)
+                iters = tuple(iteration_summaries(
+                    res.plan, res.n_iters, machine=machine, spec=spec))
+                points.append(GraphPoint(
+                    kind=kind, log2n=log2n, nnz=res.plan.csr.nnz,
+                    analytic=name, semiring=res.plan.semiring,
+                    n_iters=res.n_iters, converged=res.converged,
+                    iters=iters))
+    return points
+
+
 def geometry_sweep(log2n: int = 14,
                    kinds: Sequence[str] = ("fd", "rmat"),
                    l2_kb: Sequence[int] = (128, 256, 512),

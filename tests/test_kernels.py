@@ -210,3 +210,83 @@ def test_flash_window_equals_banded_mask():
     want = ref.mha_ref(q, k, v, causal=True, window=32)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# degenerate geometries + semiring inner loops
+# ---------------------------------------------------------------------------
+
+def _empty_csr(n=8):
+    z = np.array([], dtype=np.int64)
+    return CSR.from_coo(z, z, np.array([], dtype=np.float32), n, n)
+
+
+def test_all_kernels_handle_empty_matrix():
+    """nnz=0 regression: the DIA path used to crash on a zero-diagonal
+    band (empty scalar-prefetch operand); every per-call wrapper must
+    return exact zeros."""
+    from repro.core.formats import ELL
+
+    m = _empty_csr(8)
+    x = _x(8)
+    for name, got in [
+        ("dia", ops.spmv_dia(DIA.from_csr(m), x)),
+        ("bell", ops.spmv_bell(BELL.from_csr(m), x)),
+        ("ell", ops.spmv_ell(ELL.from_csr(m), x)),
+        ("csr", ops.spmv_csr(m, x)),
+    ]:
+        np.testing.assert_array_equal(np.asarray(got), np.zeros(8),
+                                      err_msg=name)
+
+
+def test_single_row_kernels_match_dense():
+    from repro.core.formats import ELL
+
+    m = CSR.from_coo([0, 0, 0], [0, 2, 5], [1.0, 2.0, 3.0], 1, 6)
+    x = _x(6, seed=3)
+    want = np.asarray(m.to_dense()) @ np.asarray(x)
+    for got in (ops.spmv_csr(m, x), ops.spmv_ell(ELL.from_csr(m), x)):
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("fmt", ["ell", "csr"])
+def test_semiring_kernel_min_plus_matches_reference(fmt):
+    """The generalized inner loop (⊗=+, ⊕=min) against a dense reference;
+    padding slots must be absorbing (+inf), empty rows reduce to +inf."""
+    from repro.core.formats import ELL
+    from repro.graph.semiring import MIN_PLUS
+
+    m = rmat_matrix(256, seed=6)
+    x = jnp.asarray(np.abs(np.random.default_rng(0).normal(size=256))
+                    .astype(np.float32))
+    if fmt == "ell":
+        container = ELL.from_csr(m, fill=MIN_PLUS.pad_value)
+        got = ops.spmv_ell(container, x, semiring=MIN_PLUS)
+    else:
+        got = ops.spmv_csr(m, x, semiring=MIN_PLUS)
+
+    dense = np.asarray(m.to_dense(), np.float64)
+    nz = np.zeros(dense.shape, bool)
+    ip, ci = np.asarray(m.indptr), np.asarray(m.indices)
+    for r in range(256):
+        nz[r, ci[ip[r]:ip[r + 1]]] = True
+    want = np.where(nz, dense + np.asarray(x)[None, :], np.inf).min(axis=1)
+    np.testing.assert_allclose(np.asarray(got), want.astype(np.float32),
+                               rtol=1e-6)
+
+
+def test_semiring_plus_times_arg_is_bit_identical():
+    """Passing the plus_times semiring explicitly must take the exact
+    historical kernel path (same bytes out)."""
+    from repro.core.formats import ELL
+    from repro.graph.semiring import PLUS_TIMES
+
+    m = rmat_matrix(256, seed=8)
+    ell = ELL.from_csr(m)
+    x = _x(256, seed=9)
+    np.testing.assert_array_equal(
+        np.asarray(ops.spmv_ell(ell, x)),
+        np.asarray(ops.spmv_ell(ell, x, semiring=PLUS_TIMES)))
+    np.testing.assert_array_equal(
+        np.asarray(ops.spmv_csr(m, x)),
+        np.asarray(ops.spmv_csr(m, x, semiring=PLUS_TIMES)))

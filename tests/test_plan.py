@@ -360,3 +360,60 @@ def test_predictor_none_with_auto_reorder_does_no_candidate_work(monkeypatch):
     monkeypatch.setitem(_reorder.STRATEGIES, "rcm", counting)
     p = plan.compile(rmat_matrix(256, seed=15), predictor="none")
     assert calls == {} and p.chosen == "none" and p.reordering is None
+
+
+# ---------------------------------------------------------------------------
+# degenerate geometries (nnz=0, single row, in-place mutation)
+# ---------------------------------------------------------------------------
+
+def _empty_csr(n=8):
+    z = np.array([], dtype=np.int64)
+    return CSR.from_coo(z, z, np.array([], dtype=np.float32), n, n)
+
+
+def test_empty_matrix_plan_executes_to_zeros():
+    """nnz=0 regression: the auto-chosen format (DIA with zero diagonals)
+    used to crash the Pallas grid with a zero-size scalar-prefetch
+    operand."""
+    m = _empty_csr(8)
+    x = jnp.ones((8,), jnp.float32)
+    p = plan.compile(m)
+    np.testing.assert_array_equal(np.asarray(p.execute(x)), np.zeros(8))
+    np.testing.assert_array_equal(
+        np.asarray(spmv(m, x, use_pallas=True)), np.zeros(8))
+    # every forced format survives nnz=0 too
+    for fmt in ("dia", "bell", "ell", "csr"):
+        pf = plan.compile(m, format=fmt, reorder="none", predictor="none")
+        np.testing.assert_array_equal(np.asarray(pf.execute(x)), np.zeros(8))
+
+
+def test_empty_matrix_semiring_plan_yields_identity():
+    m = _empty_csr(8)
+    p = plan.compile(m, semiring="min_plus")
+    y = np.asarray(p.execute(jnp.ones((8,), jnp.float32)))
+    assert np.isinf(y).all()                     # min-plus ⊕-identity
+
+
+def test_single_row_matrix_plan_and_spmv():
+    m = CSR.from_coo([0, 0], [0, 2], [1.0, 2.0], 1, 3)
+    x = jnp.asarray([1.0, 10.0, 100.0], jnp.float32)
+    p = plan.compile(m)
+    np.testing.assert_array_equal(np.asarray(p.execute(x)), [201.0])
+    np.testing.assert_array_equal(
+        np.asarray(spmv(m, x, use_pallas=True)), [201.0])
+
+
+def test_invalidate_accepts_mutated_matrix():
+    """In-place mutation regression: the per-object fingerprint memo used
+    to keep serving the pre-mutation digest, so `invalidate` could never
+    find (and the cache kept serving) the stale plan."""
+    cache = plan.PlanCache()
+    m = CSR(data=np.ones(2, np.float32), indices=np.array([0, 1], np.int32),
+            indptr=np.array([0, 1, 2], np.int32), n_rows=2, n_cols=2)
+    cache.get_or_compile(m, format="csr", reorder="none", predictor="none")
+    fp_before = plan.matrix_fingerprint(m)
+    np.asarray(m.data)[0] = 5.0                  # in-place: memo now stale
+    assert plan.matrix_fingerprint(m) == fp_before   # the failure mode
+    assert cache.invalidate(m) == 1              # drops the stale entry
+    assert len(cache) == 0
+    assert plan.matrix_fingerprint(m) != fp_before   # memo evicted, re-hashed
