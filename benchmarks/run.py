@@ -4,9 +4,10 @@ Runs one bench per paper table/figure plus the TPU-side benches, printing
 CSV blocks.  `--fast` trims the empirical sweep (CI); default reproduces
 the full paper sweep via synthetic profiles to 2^26.  `--smoke` is the
 benchmark smoke job: reorder + scaling + plan amortization + a
-tiny-geometry graph-analytic case, thread axis {1, 2} — just enough
-execution that those benches (and the plan warm/cold ratio assertion)
-cannot silently rot.
+tiny-geometry graph-analytic case + the analytics serving bench
+(hundreds of requests, ≥20 graphs, asserted warm hit rate), thread
+axis {1, 2} — just enough execution that those benches (and the plan
+warm/cold ratio and serving hit-rate assertions) cannot silently rot.
 """
 from __future__ import annotations
 
@@ -14,7 +15,8 @@ import argparse
 import sys
 import time
 
-ALL = "paper,kernels,traffic,moe,serve,telemetry,reorder,scaling,plan,graph"
+ALL = ("paper,kernels,traffic,moe,serve,telemetry,reorder,scaling,plan,"
+       "graph,serve_graph")
 
 
 def main(argv=None) -> None:
@@ -34,7 +36,7 @@ def main(argv=None) -> None:
         common.SMOKE = True
         common.EMPIRICAL_MAX_LOG2 = 12
 
-    default = "reorder,scaling,plan,graph" if args.smoke else ALL
+    default = "reorder,scaling,plan,graph,serve_graph" if args.smoke else ALL
     want = set((args.only or default).split(","))
     t0 = time.time()
 
@@ -68,6 +70,9 @@ def main(argv=None) -> None:
     if "graph" in want:
         from . import graph_bench
         graph_bench.main()
+    if "serve_graph" in want:
+        from . import serve_bench_graph
+        serve_bench_graph.main()
 
     print(f"# benchmarks.run completed in {time.time()-t0:.1f}s",
           file=sys.stderr)

@@ -1,0 +1,215 @@
+"""Analytics serving under load: throughput, tail latency, cache hit rate.
+
+Drives the `repro.serve_graph` engine with a synthetic fleet of FD and
+R-MAT graphs and a randomized (but seeded -- the run is deterministic)
+request stream of BFS / SSSP / PageRank queries:
+
+  1. **warmup** -- one request per (graph, analytic) primes the plan
+     cache, so the measured phase starts from a warm pool;
+  2. **measured** -- hundreds (smoke) to thousands (full) of concurrent
+     requests, including a couple of graphs *not* seen during warmup so
+     the admission path still exercises cold compiles under load.
+
+Output: the engine's serving counters, the windowed plan-cache report
+(measured phase only, via `telemetry.plan_cache_report`), and a
+per-family latency table.  Latency is reported two ways:
+
+  * `steps` -- engine steps from arrival to completion: queueing,
+    compile stalls and preemption restarts included (the scheduling
+    view);
+  * modelled milliseconds -- each request's iterations costed through
+    `graph.telemetry.iteration_summaries` on the working-set-scaled
+    reference cell (cold first iteration + warm steady state, at the
+    Sandy Bridge clock).  This is where matrix *structure* shows up:
+    R-MAT's warm per-iteration penalty (~1.8x cycles/nnz vs FD at this
+    geometry, PR 5's graph bench) lands directly on the serving tail.
+
+Invoked by `benchmarks.run` (section name: serve_graph) or directly:
+
+    PYTHONPATH=src python -m benchmarks.serve_bench_graph [--fast] [--smoke]
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.cache_model import SANDY_BRIDGE
+from repro.core.generators import fd_matrix, rmat_matrix
+from repro.graph.telemetry import iteration_summaries
+from repro.serve_graph import (AnalyticRequest, GraphEngine,
+                               GraphEngineConfig)
+from repro.telemetry.hierarchy import HierarchySpec
+from repro.telemetry.report import plan_cache_report
+
+from . import common
+
+# Working-set-scaled reference cell (same as graph_bench / scaling_bench):
+# at these geometries R-MAT's x gathers fall out of the L2 while FD's
+# bands stay resident -- the warm-iteration gap the tail latency inherits.
+SCALED_CELL = HierarchySpec(l2_bytes=16 * 1024, l3_bytes=64 * 1024)
+
+ANALYTICS = ("bfs", "sssp", "pagerank")
+ANALYTIC_WEIGHTS = (0.5, 0.3, 0.2)
+
+
+def _config():
+    if common.SMOKE:
+        return dict(log2n=7, per_family=12, n_requests=240, n_cold=2)
+    if common.EMPIRICAL_MAX_LOG2 <= 16:                  # --fast
+        return dict(log2n=8, per_family=12, n_requests=600, n_cold=2)
+    return dict(log2n=10, per_family=16, n_requests=3000, n_cold=4)
+
+
+def _fleet(log2n: int, per_family: int, n_cold: int):
+    """(graph_id -> adjacency) for the warm fleet plus `n_cold` extra
+    graphs per family that only appear mid-stream."""
+    n = 2 ** log2n
+    warm, cold = {}, {}
+    for i in range(per_family):
+        warm[f"fd{i:02d}"] = fd_matrix(n, seed=100 + i)
+        warm[f"rmat{i:02d}"] = rmat_matrix(n, seed=200 + i)
+    for i in range(n_cold):
+        cold[f"fd_cold{i}"] = fd_matrix(n, seed=300 + i)
+        cold[f"rmat_cold{i}"] = rmat_matrix(n, seed=400 + i)
+    return warm, cold
+
+
+def _request(rng, req_id: int, gid: str, n: int) -> AnalyticRequest:
+    analytic = rng.choice(ANALYTICS, p=ANALYTIC_WEIGHTS)
+    if analytic == "pagerank":
+        return AnalyticRequest(req_id, gid, "pagerank",
+                               params={"tol": 1e-5}, max_iters=64)
+    n_src = int(rng.choice((1, 1, 1, 2, 4)))    # mostly single-source
+    sources = tuple(int(s) for s in rng.choice(n, size=n_src,
+                                               replace=False))
+    return AnalyticRequest(req_id, gid, analytic, sources=sources)
+
+
+def _modelled_ms(eng: GraphEngine, results, memo: Dict) -> Dict[int, float]:
+    """Per-request modelled service time: nnz x (cold + warm x (iters-1))
+    cycles on the scaled cell, at the machine clock."""
+    out = {}
+    for rid, res in results.items():
+        ck = (res.graph_id, res.analytic)
+        if ck not in memo:
+            matrix, opts, _, _ = eng._derive(*ck)
+            plan = eng.plan_cache.get_or_compile(matrix, **opts)
+            s = iteration_summaries(plan, 2, spec=SCALED_CELL)
+            nnz = plan.csr.nnz if plan.csr is not None else plan.n_rows
+            memo[ck] = (nnz, s[0].cycles_per_nnz, s[1].cycles_per_nnz)
+        nnz, cold, warm = memo[ck]
+        cycles = nnz * (cold + warm * max(res.n_iters - 1, 0)) \
+            if res.n_iters else 0.0
+        out[rid] = cycles / (SANDY_BRIDGE.freq_ghz * 1e9) * 1e3
+    return out
+
+
+def _pcts(xs: List[float]):
+    return [float(np.percentile(xs, q)) for q in (50, 95, 99)] if xs else \
+        [0.0, 0.0, 0.0]
+
+
+def main() -> None:
+    cfg = _config()
+    n = 2 ** cfg["log2n"]
+    warm, cold = _fleet(cfg["log2n"], cfg["per_family"], cfg["n_cold"])
+    eng = GraphEngine(GraphEngineConfig(
+        n_lanes=256, compile_queue_cap=16, compiles_per_step=2,
+        max_plans=max(4 * cfg["per_family"] + 4 * cfg["n_cold"], 64)))
+    for gid, adj in {**warm, **cold}.items():
+        eng.register_graph(gid, adj)
+
+    # -- warmup: prime one plan per (warm graph, analytic) -------------------
+    rng = np.random.default_rng(7)
+    rid = 0
+    for gid in warm:
+        for analytic in ANALYTICS:
+            eng.submit(AnalyticRequest(
+                rid, gid, analytic,
+                sources=(0,) if analytic != "pagerank" else (),
+                params={"tol": 1e-5} if analytic == "pagerank" else {},
+                max_iters=64))
+            rid += 1
+    eng.run()
+    warm_stats = eng.plan_cache.stats()
+    steps_before = eng.step_count
+
+    # -- measured phase ------------------------------------------------------
+    gids = sorted(warm)
+    cold_gids = sorted(cold)
+    t0 = time.perf_counter()
+    first_measured = rid
+    for i in range(cfg["n_requests"]):
+        if cold_gids and i == cfg["n_requests"] // 3:
+            # mid-stream cold graphs: admission must compile under load
+            for gid in cold_gids:
+                eng.submit(_request(rng, rid, gid, n))
+                rid += 1
+        eng.submit(_request(rng, rid, gids[int(rng.integers(len(gids)))], n))
+        rid += 1
+    out = eng.run()
+    wall_s = time.perf_counter() - t0
+
+    measured = {r: v for r, v in out.items() if r >= first_measured}
+    steps = eng.step_count - steps_before
+    stats = eng.stats()
+
+    memo: Dict = {}
+    ms = _modelled_ms(eng, measured, memo)
+    fams = {"fd": [r for r in measured.values()
+                   if r.graph_id.startswith("fd")],
+            "rmat": [r for r in measured.values()
+                     if r.graph_id.startswith("rmat")]}
+    rows = []
+    for fam, rs in fams.items():
+        lat = [ms[r.req_id] for r in rs]
+        stp = [float(r.latency_steps) for r in rs]
+        iters = [r.n_iters for r in rs]
+        rows.append([fam, len(rs), float(np.mean(iters))]
+                    + _pcts(stp) + _pcts(lat))
+    common.emit(rows,
+                ["family", "requests", "mean_iters", "p50_steps",
+                 "p95_steps", "p99_steps", "p50_model_ms", "p95_model_ms",
+                 "p99_model_ms"],
+                f"serving latency by matrix family (n=2^{cfg['log2n']}, "
+                f"{len(warm) + len(cold)} graphs)")
+
+    thr = [["requests", len(measured)], ["engine_steps", steps],
+           ["requests_per_step", len(measured) / max(steps, 1)],
+           ["wall_s", wall_s],
+           ["requests_per_s", len(measured) / max(wall_s, 1e-9)],
+           ["spmm_calls", stats["spmm_calls"]],
+           ["max_running", stats["max_running"]],
+           ["max_inflight", stats["max_inflight"]],
+           ["preemptions", stats["preemptions"]],
+           ["admission_hit_rate", stats["admission_hit_rate"]]]
+    common.emit(thr, ["metric", "value"], "serving throughput")
+
+    print(plan_cache_report(eng.plan_cache.stats(), before=warm_stats,
+                            title="plan cache, measured phase"))
+
+    if common.SMOKE:
+        # acceptance floor: real concurrency over a real fleet, warm pool
+        assert len(warm) + len(cold) >= 20
+        assert stats["max_inflight"] >= 100
+        win = eng.plan_cache.stats()
+        served = (win["hits"] - warm_stats["hits"]) + \
+            (win["misses"] - warm_stats["misses"])
+        rate = (win["hits"] - warm_stats["hits"]) / max(served, 1)
+        assert rate > 0.8, f"measured-phase hit rate {rate:.2f} <= 0.8"
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    if args.fast:
+        common.EMPIRICAL_MAX_LOG2 = 16
+    if args.smoke:
+        common.SMOKE = True
+    main()

@@ -1,0 +1,78 @@
+"""Analytics serving demo: a mixed FD/R-MAT request stream through the
+continuous-batching engine.
+
+    PYTHONPATH=src python examples/serve_graph_demo.py
+
+Registers a small fleet of structured (FD) and unstructured (R-MAT)
+graphs, fires a seeded stream of BFS / SSSP / PageRank requests at the
+`repro.serve_graph` engine, and prints what serving at scale looks like
+on top of the compile-once plan pipeline:
+
+  * per-analytic latency percentiles, split by matrix family -- R-MAT's
+    warm per-iteration penalty (the paper's structure gap) surfaces as
+    the serving tail;
+  * the plan-cache hit rate: after the first request per (graph,
+    analytic) compiles, everything else rides warm plans, and dozens of
+    concurrent sources on one graph coalesce into single `execute_many`
+    batches per step.
+"""
+import numpy as np
+
+from repro.core.generators import fd_matrix, rmat_matrix
+from repro.serve_graph import (AnalyticRequest, GraphEngine,
+                               GraphEngineConfig)
+from repro.telemetry import plan_cache_report
+
+N = 1 << 8
+N_GRAPHS = 6          # per family
+N_REQUESTS = 150
+
+eng = GraphEngine(GraphEngineConfig(n_lanes=128, compiles_per_step=2))
+for i in range(N_GRAPHS):
+    eng.register_graph(f"fd{i}", fd_matrix(N, seed=10 + i))
+    eng.register_graph(f"rmat{i}", rmat_matrix(N, seed=20 + i))
+gids = sorted(eng.graphs)
+
+rng = np.random.default_rng(0)
+# arrive in waves: the first wave compiles the fleet's plans, later
+# waves ride the warm pool
+for wave in range(0, N_REQUESTS, 30):
+    for rid in range(wave, min(wave + 30, N_REQUESTS)):
+        gid = gids[int(rng.integers(len(gids)))]
+        analytic = ("bfs", "sssp", "pagerank")[int(rng.integers(3))]
+        if analytic == "pagerank":
+            req = AnalyticRequest(rid, gid, "pagerank",
+                                  params={"tol": 1e-5}, max_iters=64)
+        else:
+            sources = tuple(int(s) for s in
+                            rng.choice(N, size=int(rng.integers(1, 4)),
+                                       replace=False))
+            req = AnalyticRequest(rid, gid, analytic, sources=sources)
+        eng.submit(req)
+    for _ in range(8):
+        eng.step()
+
+results = eng.run()
+stats = eng.stats()
+
+print(f"=== served {stats['finished']} requests in {stats['steps']} engine "
+      f"steps ({stats['spmm_calls']} coalesced SpMV dispatches, "
+      f"max {stats['max_running']} running) ===\n")
+
+print(f"{'analytic':>10s} {'family':>6s} {'n':>4s} "
+      f"{'p50':>5s} {'p95':>5s} {'p99':>5s}   latency in engine steps")
+for analytic in ("bfs", "sssp", "pagerank"):
+    for fam in ("fd", "rmat"):
+        lat = [r.latency_steps for r in results.values()
+               if r.analytic == analytic and r.graph_id.startswith(fam)]
+        if not lat:
+            continue
+        p50, p95, p99 = (np.percentile(lat, q) for q in (50, 95, 99))
+        print(f"{analytic:>10s} {fam:>6s} {len(lat):>4d} "
+              f"{p50:>5.1f} {p95:>5.1f} {p99:>5.1f}")
+
+print(f"\nadmission: {stats['warm_hits']} warm hits, "
+      f"{stats['cold_misses']} cold misses "
+      f"(hit rate {stats['admission_hit_rate']:.1%}), "
+      f"{stats['preemptions']} preemptions\n")
+print(plan_cache_report(eng.plan_cache.stats()))

@@ -11,6 +11,7 @@ Subpackages (see README.md's package map):
   parallel    multithreaded shared-LLC scaling engine
   telemetry   trace-driven hierarchy simulation + topdown reports
   distributed meshes, collectives, row-sharded SpMV
+  serve_graph analytics serving: continuous batching over the plan cache
   serve / models / train / optim / data / checkpoint / launch / roofline
               the production scaffolding
 
@@ -26,7 +27,7 @@ import importlib
 _SUBPACKAGES = (
     "checkpoint", "configs", "core", "data", "distributed", "graph",
     "kernels", "launch", "models", "optim", "parallel", "plan", "reorder",
-    "roofline", "serve", "telemetry", "train",
+    "roofline", "serve", "serve_graph", "telemetry", "train",
 )
 
 # plan API re-exported at top level (lazily, via __getattr__)

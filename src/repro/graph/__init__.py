@@ -8,12 +8,18 @@ as iterated semiring SpMVs over `repro.plan`:
                    generalized Pallas kernels rely on
   * `drivers`   -- pagerank, bfs, sssp, connected_components: compile a
                    plan once, iterate `execute`/`execute_many` with
-                   host-side convergence checks
+                   host-side convergence checks; each analytic is
+                   factored into an operand builder + a per-iteration
+                   stepper (`ANALYTICS` / `make_stepper`), the
+                   step-function API `repro.serve_graph` batches across
+                   concurrent requests
   * `telemetry` -- per-iteration cache counters from the plan's memoized
                    address trace (feeds `telemetry.sweep.graph_sweep`)
 """
-from .drivers import (DRIVERS, GraphResult, bfs, connected_components,
-                      pagerank, sssp, transpose_csr)
+from .drivers import (ANALYTICS, DRIVERS, AnalyticDef, GraphResult,
+                      analytic_operand, bfs, check_sources,
+                      connected_components, make_stepper, pagerank,
+                      plan_options, sssp, transpose_csr)
 from .semiring import (MAX_TIMES, MIN_PLUS, OR_AND, PLUS_TIMES, SEMIRINGS,
                        Semiring, resolve, spmv_csr_semiring_jnp,
                        spmv_ell_semiring_jnp, spmv_semiring_jnp)
@@ -25,5 +31,7 @@ __all__ = [
     "spmv_semiring_jnp",
     "GraphResult", "DRIVERS", "pagerank", "bfs", "sssp",
     "connected_components", "transpose_csr",
+    "AnalyticDef", "ANALYTICS", "analytic_operand", "make_stepper",
+    "check_sources", "plan_options",
     "iteration_counters", "iteration_summaries",
 ]

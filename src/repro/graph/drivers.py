@@ -9,11 +9,22 @@ iterated semiring SpMV over a plan compiled ONCE:
     sssp                  min_plus    Bellman-Ford relaxation
     connected_components  min_plus    label propagation (zero weights)
 
-Every driver follows the same shape: build the analytic's operand matrix
-host-side, `plan.get_or_compile` it (structure analysis, optional
-reordering, absorbing-padded kernel layout -- all amortized across every
-iteration AND across repeated driver calls on the same graph), then loop
-`plan.execute` / `plan.execute_many` with a host-side convergence check.
+Every analytic is factored into three pieces so both the blocking
+drivers here and the `repro.serve_graph` engine can run it:
+
+  * an **operand builder** (`analytic_operand`) -- host-side derivation
+    of the matrix the iteration multiplies (stochastic transpose,
+    pattern transpose, symmetrized zero-weight adjacency) plus any
+    auxiliary vectors (PageRank's dangling mask);
+  * a **stepper** (`make_stepper`) -- the per-iteration state machine:
+    `frontier()` yields the (k, n) batch the next SpMV consumes,
+    `advance(y)` folds the product back in, updates per-lane
+    convergence, and returns the iteration's progress scalar;
+  * the **SpMV itself**, which the *caller* owns: the drivers below loop
+    `plan.execute` / `plan.execute_many`, while the serving engine
+    coalesces frontiers from many concurrent requests over the same
+    graph into one batched `execute_many` per step.
+
 The per-iteration cost is therefore exactly the paper's object of study:
 one SpMV's worth of memory traffic, nothing else -- which is what lets
 `telemetry.sweep.graph_sweep` replay a whole analytic from the plan's
@@ -29,14 +40,14 @@ plan-compile time.  Undirected graphs should be stored symmetrically
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.formats import CSR
 
-from .semiring import MIN_PLUS, OR_AND, PLUS_TIMES
+from .semiring import MIN_PLUS, OR_AND, PLUS_TIMES, Semiring
 
 
 @dataclasses.dataclass
@@ -82,6 +93,24 @@ def _require_square(adj: CSR, who: str) -> int:
     return adj.n_rows
 
 
+def check_sources(source, n: int, who: str = "analytic") -> np.ndarray:
+    """Validate and normalize a source spec to an int64 array.
+
+    Empty and duplicate sources are well-defined (zero lanes / equal
+    lanes); out-of-range indices are refused up front with a clear error
+    instead of surfacing as an IndexError deep in the frontier setup.
+    """
+    sources = np.atleast_1d(np.asarray(source, dtype=np.int64))
+    if sources.ndim != 1:
+        raise ValueError(f"{who} sources must be a scalar or 1-D sequence, "
+                         f"got shape {sources.shape}")
+    if sources.size and (sources.min() < 0 or sources.max() >= n):
+        bad = sources[(sources < 0) | (sources >= n)]
+        raise ValueError(f"{who} sources out of range for n={n}: "
+                         f"{bad.tolist()}")
+    return sources
+
+
 def _graph_plan(matrix: CSR, semiring, *, reorder, plan_cache, format=None,
                 use_pallas=True, interpret=None):
     """Compile-once entry shared by every driver: plans land in the
@@ -91,15 +120,291 @@ def _graph_plan(matrix: CSR, semiring, *, reorder, plan_cache, format=None,
     from repro import plan as _plan
 
     cache = plan_cache if plan_cache is not None else _plan.DEFAULT_CACHE
-    opts = dict(reorder=reorder, predictor="none", semiring=semiring.name,
+    return cache.get_or_compile(matrix, **plan_options(
+        semiring, reorder=reorder, format=format, use_pallas=use_pallas,
+        interpret=interpret))
+
+
+def plan_options(semiring, *, reorder="none", format=None, use_pallas=True,
+                 interpret=None) -> Dict:
+    """The exact compile-option dict the drivers use -- shared with
+    `serve_graph` admission so its warm-pool check (`PlanCache.key_for`)
+    and its compiles produce the same cache keys the drivers would."""
+    name = semiring.name if isinstance(semiring, Semiring) else str(semiring)
+    opts = dict(reorder=reorder, predictor="none", semiring=name,
                 use_pallas=use_pallas, interpret=interpret, keep_csr=True)
     if format is not None:
         opts["format"] = format
-    return cache.get_or_compile(matrix, **opts)
+    return opts
 
 
 # ---------------------------------------------------------------------------
-# PageRank (plus_times)
+# Operand builders: adjacency -> the matrix the iteration multiplies
+# ---------------------------------------------------------------------------
+
+def pagerank_operand(adj: CSR) -> Tuple[CSR, Dict]:
+    """Column-stochastic transpose P[j, i] = 1/out_deg[i] per edge i -> j,
+    plus the dangling-vertex mask the iteration redistributes."""
+    n = _require_square(adj, "pagerank")
+    indptr = np.asarray(adj.indptr, dtype=np.int64)
+    cols = np.asarray(adj.indices, dtype=np.int64)
+    out_deg = np.diff(indptr).astype(np.float32)
+    rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    stoch = CSR.from_coo(cols, rows,
+                         1.0 / np.maximum(out_deg[rows], 1.0), n, n)
+    return stoch, {"dangling": (out_deg == 0).astype(np.float32)}
+
+
+def bfs_operand(adj: CSR) -> Tuple[CSR, Dict]:
+    """0/1 pattern of A^T: or_and propagation pulls each vertex's
+    frontier membership from its in-neighbors along original edges."""
+    n = _require_square(adj, "bfs")
+    at = transpose_csr(adj)
+    pattern = CSR(data=jnp.ones_like(at.data), indices=at.indices,
+                  indptr=at.indptr, n_rows=n, n_cols=n)
+    return pattern, {}
+
+
+def sssp_operand(adj: CSR) -> Tuple[CSR, Dict]:
+    _require_square(adj, "sssp")
+    return transpose_csr(adj), {}
+
+
+def cc_operand(adj: CSR) -> Tuple[CSR, Dict]:
+    """Symmetrized zero-weight pattern: min_plus SpMV then computes each
+    vertex's minimum neighbor label."""
+    n = _require_square(adj, "connected_components")
+    if n > (1 << 24):
+        raise ValueError(
+            f"connected_components labels are f32 vertex ids, which are "
+            f"only injective up to 2^24; got n={n}")
+    indptr = np.asarray(adj.indptr, dtype=np.int64)
+    rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
+    cols = np.asarray(adj.indices, dtype=np.int64)
+    sym = CSR.from_coo(np.concatenate([rows, cols]),
+                       np.concatenate([cols, rows]),
+                       np.zeros(2 * len(rows), dtype=np.float32), n, n)
+    return sym, {}
+
+
+# ---------------------------------------------------------------------------
+# Steppers: per-iteration state machines (frontier -> SpMV -> advance)
+# ---------------------------------------------------------------------------
+
+class PageRankStepper:
+    """Power iteration on the stochastic transpose, k lanes.
+
+    Without sources each lane teleports uniformly (classic PageRank, the
+    historical driver semantics); a source lane teleports to its seed
+    vertex instead -- personalized PageRank, which is what makes
+    multi-source serving requests produce genuinely distinct lanes.
+    """
+
+    analytic = "pagerank"
+
+    def __init__(self, plan, aux: Dict, sources=(), damping: float = 0.85,
+                 tol: float = 1e-8, r0=None):
+        n = plan.n_cols
+        sources = check_sources(sources, n, "pagerank") if len(
+            np.atleast_1d(sources)) else np.array([], dtype=np.int64)
+        self.plan, self.damping, self.tol = plan, float(damping), float(tol)
+        self.dangling = jnp.asarray(aux["dangling"])
+        if sources.size:
+            t = np.zeros((len(sources), n), np.float32)
+            t[np.arange(len(sources)), sources] = 1.0
+        else:
+            t = np.full((1, n), 1.0 / max(n, 1), np.float32)
+        self.teleport = jnp.asarray(t)
+        if r0 is not None:
+            r = jnp.asarray(r0, jnp.float32).reshape(1, n)
+            r = r / jnp.maximum(r.sum(), 1e-30)
+        else:
+            r = self.teleport
+        self.r = r
+        self.k = int(r.shape[0])
+        self.lane_done = np.zeros(self.k, bool)
+        self.done = self.k == 0
+
+    def frontier(self):
+        return self.r
+
+    def advance(self, y) -> float:
+        y = jnp.asarray(y)
+        leaked = self.r @ self.dangling                       # (k,)
+        r_new = (self.damping * (y + leaked[:, None] * self.teleport)
+                 + (1.0 - self.damping) * self.teleport)
+        resid = np.asarray(jnp.abs(r_new - self.r).sum(axis=1))
+        self.r = r_new
+        self.lane_done = resid < self.tol
+        self.done = bool(self.lane_done.all())
+        return float(resid.max()) if resid.size else 0.0
+
+    def values(self) -> np.ndarray:
+        return np.asarray(self.r)
+
+
+class BfsStepper:
+    """or_and frontier propagation; `values()[l, v]` is v's hop depth
+    from lane l's source (+inf if unreachable).  Duplicate sources are
+    fine (equal lanes); zero sources is a zero-lane no-op run."""
+
+    analytic = "bfs"
+
+    def __init__(self, plan, aux: Dict, sources=(), **_):
+        n = plan.n_cols
+        sources = check_sources(sources, n, "bfs")
+        k = len(sources)
+        self.plan, self.k, self.level = plan, k, 0
+        self.depth = np.full((k, n), np.inf, dtype=np.float32)
+        self.depth[np.arange(k), sources] = 0.0
+        self.front = np.zeros((k, n), dtype=np.float32)
+        self.front[np.arange(k), sources] = 1.0
+        self.done = not self.front.any()
+        self.lane_done = ~self.front.any(axis=1)
+
+    def frontier(self):
+        return self.front
+
+    def advance(self, y) -> float:
+        y = np.asarray(y)
+        self.level += 1
+        reached = (y > 0.0) & np.isinf(self.depth)
+        self.depth[reached] = self.level
+        self.front = reached.astype(np.float32)
+        self.lane_done = ~self.front.any(axis=1)
+        self.done = not self.front.any()
+        return float(reached.sum())
+
+    def values(self) -> np.ndarray:
+        return self.depth
+
+
+class SsspStepper:
+    """min_plus Bellman-Ford relaxation, k source lanes."""
+
+    analytic = "sssp"
+
+    def __init__(self, plan, aux: Dict, sources=(), **_):
+        n = plan.n_cols
+        sources = check_sources(sources, n, "sssp")
+        k = len(sources)
+        self.plan, self.k = plan, k
+        self.dist = np.full((k, n), np.inf, dtype=np.float32)
+        self.dist[np.arange(k), sources] = 0.0
+        self.lane_done = np.zeros(k, bool)
+        self.done = k == 0
+
+    def frontier(self):
+        return self.dist
+
+    def advance(self, y) -> float:
+        nd = np.minimum(self.dist, np.asarray(y))
+        changed = (nd < self.dist).sum(axis=1)
+        self.dist = nd
+        self.lane_done = changed == 0
+        self.done = bool(self.lane_done.all())
+        return float(changed.sum())
+
+    def values(self) -> np.ndarray:
+        return self.dist
+
+
+class CcStepper:
+    """min-label propagation to the component-wise minimum vertex id.
+    Always one lane; sources are ignored."""
+
+    analytic = "connected_components"
+
+    def __init__(self, plan, aux: Dict, sources=(), **_):
+        n = plan.n_cols
+        self.plan, self.k = plan, 1
+        self.labels = np.arange(n, dtype=np.float32)[None]
+        self.lane_done = np.zeros(1, bool)
+        self.done = False
+
+    def frontier(self):
+        return self.labels
+
+    def advance(self, y) -> float:
+        nl = np.minimum(self.labels, np.asarray(y))
+        changed = int((nl < self.labels).sum())
+        self.labels = nl
+        self.lane_done[:] = changed == 0
+        self.done = changed == 0
+        return float(changed)
+
+    def values(self) -> np.ndarray:
+        return self.labels
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticDef:
+    """One analytic, decomposed for engine-driven execution."""
+
+    name: str
+    semiring: Semiring
+    operand: Callable[[CSR], Tuple[CSR, Dict]]
+    stepper: Callable
+    source_based: bool          # lanes = sources (vs one state vector)
+
+
+ANALYTICS: Dict[str, AnalyticDef] = {
+    "pagerank": AnalyticDef("pagerank", PLUS_TIMES, pagerank_operand,
+                            PageRankStepper, source_based=False),
+    "bfs": AnalyticDef("bfs", OR_AND, bfs_operand, BfsStepper,
+                       source_based=True),
+    "sssp": AnalyticDef("sssp", MIN_PLUS, sssp_operand, SsspStepper,
+                        source_based=True),
+    "connected_components": AnalyticDef(
+        "connected_components", MIN_PLUS, cc_operand, CcStepper,
+        source_based=False),
+}
+
+
+def analytic_operand(analytic: str, adj: CSR) -> Tuple[CSR, str, Dict]:
+    """(operand matrix, semiring name, aux) for one analytic -- the
+    host-side derivation `serve_graph` admission performs once per
+    (graph, analytic) before consulting the plan cache."""
+    d = ANALYTICS.get(analytic)
+    if d is None:
+        raise ValueError(f"unknown analytic {analytic!r}; "
+                         f"have {sorted(ANALYTICS)}")
+    matrix, aux = d.operand(adj)
+    return matrix, d.semiring.name, aux
+
+
+def make_stepper(analytic: str, plan, aux: Dict, sources=(), params=None):
+    """Instantiate the per-iteration state machine for one request."""
+    d = ANALYTICS.get(analytic)
+    if d is None:
+        raise ValueError(f"unknown analytic {analytic!r}; "
+                         f"have {sorted(ANALYTICS)}")
+    return d.stepper(plan, aux, sources=sources, **(params or {}))
+
+
+def _drive(stepper, plan, max_iters: int, multi: bool) -> GraphResult:
+    """The blocking driver loop: pull `frontier()`, run the plan, feed
+    `advance()` -- single-source stays on the 1-D Pallas `execute` path
+    (bit-compatible with the historical drivers), multi-source batches
+    through `execute_many`."""
+    history: List[float] = []
+    it = 0
+    while it < max_iters and not stepper.done:
+        it += 1
+        F = stepper.frontier()
+        if multi:
+            y = np.asarray(plan.execute_many(jnp.asarray(F)))
+        else:
+            y = np.asarray(plan.execute(jnp.asarray(F)[0]))[None]
+        history.append(stepper.advance(y))
+    vals = stepper.values()
+    return GraphResult(values=vals if multi else vals[0], n_iters=it,
+                       converged=bool(stepper.done), history=history,
+                       plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# Blocking drivers (compile one plan, iterate to convergence)
 # ---------------------------------------------------------------------------
 
 def pagerank(adj: CSR, damping: float = 0.85, tol: float = 1e-8,
@@ -115,44 +420,13 @@ def pagerank(adj: CSR, damping: float = 0.85, tol: float = 1e-8,
     grids) the uniform vector is already the fixpoint, so a perturbed
     start is what makes the iteration count meaningful there.
     """
-    n = _require_square(adj, "pagerank")
-    indptr = np.asarray(adj.indptr, dtype=np.int64)
-    cols = np.asarray(adj.indices, dtype=np.int64)
-    out_deg = np.diff(indptr).astype(np.float32)
-    rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
-    # P[j, i] = 1/out_deg[i] for every edge i -> j (column-stochastic)
-    stoch = CSR.from_coo(cols, rows,
-                         1.0 / np.maximum(out_deg[rows], 1.0), n, n)
-    p = _graph_plan(stoch, PLUS_TIMES, reorder=reorder,
+    matrix, _, aux = analytic_operand("pagerank", adj)
+    p = _graph_plan(matrix, PLUS_TIMES, reorder=reorder,
                     plan_cache=plan_cache, use_pallas=use_pallas,
                     interpret=interpret)
-    dangling = jnp.asarray((out_deg == 0).astype(np.float32))
+    st = PageRankStepper(p, aux, damping=damping, tol=tol, r0=r0)
+    return _drive(st, p, max_iters, multi=False)
 
-    if r0 is None:
-        r = jnp.full((n,), 1.0 / max(n, 1), jnp.float32)
-    else:
-        r = jnp.asarray(r0, jnp.float32)
-        r = r / jnp.maximum(r.sum(), 1e-30)
-    history: List[float] = []
-    converged = False
-    it = 0
-    for it in range(1, max_iters + 1):
-        leaked = jnp.dot(dangling, r)
-        r_new = (damping * (p.execute(r) + leaked / n)
-                 + (1.0 - damping) / n)
-        resid = float(jnp.abs(r_new - r).sum())
-        history.append(resid)
-        r = r_new
-        if resid < tol:
-            converged = True
-            break
-    return GraphResult(values=np.asarray(r), n_iters=it,
-                       converged=converged, history=history, plan=p)
-
-
-# ---------------------------------------------------------------------------
-# BFS (or_and)
-# ---------------------------------------------------------------------------
 
 def bfs(adj: CSR, source: Union[int, Sequence[int]],
         max_iters: Optional[int] = None, *, reorder="none", plan_cache=None,
@@ -163,51 +437,21 @@ def bfs(adj: CSR, source: Union[int, Sequence[int]],
     `values[v]` is the BFS depth of v (0 at the source, +inf if
     unreachable).  A sequence of sources runs them all concurrently:
     single source iterates `plan.execute`, multi-source batches the
-    frontiers through `plan.execute_many` (values then (k, n)).  The
-    loop terminates on the first empty frontier -- the normal end state,
-    reached immediately on an edgeless (nnz=0) graph.
+    frontiers through `plan.execute_many` (values then (k, n), one row
+    per source -- duplicates produce equal rows, an empty sequence a
+    (0, n) result).  The loop terminates on the first empty frontier --
+    the normal end state, reached immediately on an edgeless (nnz=0)
+    graph.
     """
     n = _require_square(adj, "bfs")
-    sources = np.atleast_1d(np.asarray(source, dtype=np.int64))
     multi = np.ndim(source) > 0
-    k = len(sources)
-    at = transpose_csr(adj)
-    pattern = CSR(data=jnp.ones_like(at.data), indices=at.indices,
-                  indptr=at.indptr, n_rows=n, n_cols=n)
-    p = _graph_plan(pattern, OR_AND, reorder=reorder, plan_cache=plan_cache,
+    matrix, _, aux = analytic_operand("bfs", adj)
+    p = _graph_plan(matrix, OR_AND, reorder=reorder, plan_cache=plan_cache,
                     use_pallas=use_pallas, interpret=interpret)
+    st = BfsStepper(p, aux, sources=np.atleast_1d(
+        np.asarray(source, dtype=np.int64)))
+    return _drive(st, p, n if max_iters is None else max_iters, multi=multi)
 
-    depth = np.full((k, n), np.inf, dtype=np.float32)
-    depth[np.arange(k), sources] = 0.0
-    frontier = np.zeros((k, n), dtype=np.float32)
-    frontier[np.arange(k), sources] = 1.0
-    max_iters = n if max_iters is None else max_iters
-
-    history: List[float] = []
-    level = 0
-    converged = False
-    while level < max_iters:
-        if not frontier.any():
-            converged = True
-            break
-        level += 1
-        if multi:
-            y = np.asarray(p.execute_many(jnp.asarray(frontier)))
-        else:
-            y = np.asarray(p.execute(jnp.asarray(frontier[0])))[None]
-        reached = (y > 0.0) & np.isinf(depth)
-        depth[reached] = level
-        frontier = reached.astype(np.float32)
-        history.append(float(reached.sum()))
-    else:
-        converged = not frontier.any()
-    return GraphResult(values=depth if multi else depth[0], n_iters=level,
-                       converged=converged, history=history, plan=p)
-
-
-# ---------------------------------------------------------------------------
-# SSSP (min_plus)
-# ---------------------------------------------------------------------------
 
 def sssp(adj: CSR, source: int, max_iters: Optional[int] = None, *,
          reorder="none", plan_cache=None, use_pallas: bool = True,
@@ -221,32 +465,12 @@ def sssp(adj: CSR, source: int, max_iters: Optional[int] = None, *,
     distances lowered per iteration).
     """
     n = _require_square(adj, "sssp")
-    at = transpose_csr(adj)
-    p = _graph_plan(at, MIN_PLUS, reorder=reorder, plan_cache=plan_cache,
+    matrix, _, aux = analytic_operand("sssp", adj)
+    p = _graph_plan(matrix, MIN_PLUS, reorder=reorder, plan_cache=plan_cache,
                     use_pallas=use_pallas, interpret=interpret)
+    st = SsspStepper(p, aux, sources=[source])
+    return _drive(st, p, n if max_iters is None else max_iters, multi=False)
 
-    dist = np.full((n,), np.inf, dtype=np.float32)
-    dist[source] = 0.0
-    max_iters = n if max_iters is None else max_iters
-    history: List[float] = []
-    converged = False
-    it = 0
-    for it in range(1, max_iters + 1):
-        relaxed = np.asarray(p.execute(jnp.asarray(dist)))
-        nd = np.minimum(dist, relaxed)
-        changed = int((nd < dist).sum())
-        history.append(float(changed))
-        dist = nd
-        if changed == 0:
-            converged = True
-            break
-    return GraphResult(values=dist, n_iters=it, converged=converged,
-                       history=history, plan=p)
-
-
-# ---------------------------------------------------------------------------
-# Connected components (min_plus label propagation)
-# ---------------------------------------------------------------------------
 
 def connected_components(adj: CSR, max_iters: Optional[int] = None, *,
                          reorder="none", plan_cache=None,
@@ -263,38 +487,18 @@ def connected_components(adj: CSR, max_iters: Optional[int] = None, *,
     representable: graphs beyond 2^24 rows are refused rather than
     silently merging components whose seed ids collide in f32."""
     n = _require_square(adj, "connected_components")
-    if n > (1 << 24):
-        raise ValueError(
-            f"connected_components labels are f32 vertex ids, which are "
-            f"only injective up to 2^24; got n={n}")
-    indptr = np.asarray(adj.indptr, dtype=np.int64)
-    rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
-    cols = np.asarray(adj.indices, dtype=np.int64)
-    sym = CSR.from_coo(np.concatenate([rows, cols]),
-                       np.concatenate([cols, rows]),
-                       np.zeros(2 * len(rows), dtype=np.float32), n, n)
-    p = _graph_plan(sym, MIN_PLUS, reorder=reorder, plan_cache=plan_cache,
+    matrix, _, aux = analytic_operand("connected_components", adj)
+    p = _graph_plan(matrix, MIN_PLUS, reorder=reorder, plan_cache=plan_cache,
                     use_pallas=use_pallas, interpret=interpret)
-
-    labels = np.arange(n, dtype=np.float32)
-    max_iters = n if max_iters is None else max_iters
-    history: List[float] = []
-    converged = False
-    it = 0
-    for it in range(1, max_iters + 1):
-        nl = np.minimum(labels, np.asarray(p.execute(jnp.asarray(labels))))
-        changed = int((nl < labels).sum())
-        history.append(float(changed))
-        labels = nl
-        if changed == 0:
-            converged = True
-            break
-    return GraphResult(values=labels, n_iters=it, converged=converged,
-                       history=history, plan=p)
+    st = CcStepper(p, aux)
+    return _drive(st, p, n if max_iters is None else max_iters, multi=False)
 
 
 DRIVERS = {"pagerank": pagerank, "bfs": bfs, "sssp": sssp,
            "connected_components": connected_components}
 
 __all__ = ["GraphResult", "transpose_csr", "pagerank", "bfs", "sssp",
-           "connected_components", "DRIVERS"]
+           "connected_components", "DRIVERS",
+           "AnalyticDef", "ANALYTICS", "analytic_operand", "make_stepper",
+           "check_sources", "plan_options",
+           "PageRankStepper", "BfsStepper", "SsspStepper", "CcStepper"]

@@ -13,6 +13,7 @@ from __future__ import annotations
 import functools
 import hashlib
 import threading
+import time
 from collections import OrderedDict
 from typing import Callable, Dict
 
@@ -69,6 +70,9 @@ class PlanCache:
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.compiles = 0
+        self.compile_s = 0.0
 
     def __len__(self) -> int:
         return len(self._plans)
@@ -78,6 +82,13 @@ class PlanCache:
         salt = ";".join(f"{k}={_opt_token(v)}" for k, v in sorted(opts.items()))
         return f"{matrix_fingerprint(matrix)}|{salt}"
 
+    def contains(self, key: str) -> bool:
+        """Warm-pool probe: True iff `key` is resident.  Does NOT touch
+        LRU order or hit/miss counters -- admission controllers call this
+        every scheduling step, and a probe is not a serve."""
+        with self._lock:
+            return key in self._plans
+
     def get_or_build(self, key: str, builder: Callable[[], object]):
         """Low-level entry: return the cached value for `key` or build,
         insert (evicting LRU past `max_plans`), and return it."""
@@ -86,13 +97,18 @@ class PlanCache:
                 self._plans.move_to_end(key)
                 self.hits += 1
                 return self._plans[key]
+        t0 = time.perf_counter()
         value = builder()          # build outside the lock (can be slow)
+        elapsed = time.perf_counter() - t0
         with self._lock:
             if key not in self._plans:
                 self.misses += 1
+                self.compiles += 1
+                self.compile_s += elapsed
                 self._plans[key] = value
                 while len(self._plans) > self.max_plans:
                     self._plans.popitem(last=False)
+                    self.evictions += 1
             else:
                 self.hits += 1
             self._plans.move_to_end(key)
@@ -140,10 +156,22 @@ class PlanCache:
             self._plans.clear()
             self.hits = 0
             self.misses = 0
+            self.evictions = 0
+            self.compiles = 0
+            self.compile_s = 0.0
 
-    def stats(self) -> Dict[str, int]:
-        return {"plans": len(self._plans), "hits": self.hits,
-                "misses": self.misses}
+    def stats(self) -> Dict[str, float]:
+        """Counter snapshot.  `hit_rate` is hits/(hits+misses) over the
+        cache's lifetime (0.0 before any traffic); callers wanting a
+        windowed rate diff two snapshots (`telemetry.plan_cache_report`
+        does exactly that for the serving benchmark's measured phase)."""
+        with self._lock:
+            served = self.hits + self.misses
+            return {"plans": len(self._plans), "hits": self.hits,
+                    "misses": self.misses, "evictions": self.evictions,
+                    "compiles": self.compiles,
+                    "compile_s": round(self.compile_s, 6),
+                    "hit_rate": self.hits / served if served else 0.0}
 
 
 DEFAULT_CACHE = PlanCache()

@@ -1,0 +1,22 @@
+"""Graph-analytics serving: continuous batching over the plan cache.
+
+The vLLM-style `repro.serve` pattern (scheduler / engine / admission)
+re-based onto semiring analytics: a request is (graph, analytic,
+sources, params), admission is a `PlanCache` warm-pool check with a
+bounded compile queue, and each engine step coalesces every running
+request on the same compiled plan into one `execute_many` SpMV.
+
+  requests    AnalyticRequest / AnalyticResult records
+  admission   warm-hit vs bounded compile queue with FIFO back-pressure
+  scheduler   lane-pool FIFO admission, youngest-first preemption
+  engine      the per-step loop: intake -> compile budget -> admit ->
+              coalesced iterate -> per-request convergence release
+"""
+from .admission import AdmissionController
+from .engine import GraphEngine, GraphEngineConfig
+from .requests import AnalyticRequest, AnalyticResult
+from .scheduler import GraphScheduler, RunningRequest
+
+__all__ = ["AdmissionController", "GraphEngine", "GraphEngineConfig",
+           "AnalyticRequest", "AnalyticResult", "GraphScheduler",
+           "RunningRequest"]

@@ -1,0 +1,244 @@
+"""The analytics serving engine: continuous batching over the plan cache.
+
+`GraphEngine` is `serve.Engine`'s sibling with the decode step swapped
+for a semiring SpMV: registered graphs play the role of model weights,
+compiled `SpmvPlan`s the role of the compiled decode program, and one
+engine step advances *every* running analytic by one iteration.
+
+Per step:
+
+  1. admission (`AdmissionController.intake`): warm requests -- plan
+     already resident in the `PlanCache` -- go ready immediately; misses
+     queue behind a bounded compile queue with FIFO back-pressure;
+  2. at most `compiles_per_step` queued plans compile, releasing every
+     request pending on them (so compiles never stall running work for
+     longer than the configured budget);
+  3. the lane scheduler admits ready requests FIFO, preempting
+     youngest-first when the lane pool is exhausted;
+  4. running requests are grouped by plan: all lanes iterating the same
+     compiled plan -- e.g. forty BFS sources across a dozen requests on
+     one graph -- coalesce into a single `execute_many` call, padded up
+     to a power-of-two lane count so only O(log lanes) batched programs
+     ever JIT per plan (the same discipline as `serve`'s prefill
+     bucketing); per-request convergence then releases lanes
+     individually.
+
+The engine is host-side deterministic: identical request traces produce
+identical schedules, preemption logs, and bit-identical results
+(pinned by `tests/test_serve_graph.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.drivers import (ANALYTICS, analytic_operand, check_sources,
+                                 make_stepper, plan_options)
+from repro.plan import PlanCache
+
+from .admission import AdmissionController
+from .requests import AnalyticRequest, AnalyticResult
+from .scheduler import GraphScheduler, RunningRequest
+
+
+@dataclasses.dataclass
+class GraphEngineConfig:
+    n_lanes: int = 64               # batch-lane pool (= max coalesced width)
+    compile_queue_cap: int = 8      # bounded miss queue (back-pressure past it)
+    compiles_per_step: int = 1      # compile budget per engine step
+    max_plans: int = 64             # plan-cache LRU capacity
+    reorder: str = "none"           # compile option for every served plan
+    use_pallas: bool = True
+    interpret: Optional[bool] = None
+    max_iters_default: int = 256    # per-request iteration cap
+    lane_bucket: bool = True        # pad batches to pow2 lane counts
+
+
+class GraphEngine:
+    def __init__(self, cfg: Optional[GraphEngineConfig] = None,
+                 plan_cache: Optional[PlanCache] = None):
+        self.cfg = cfg or GraphEngineConfig()
+        self.plan_cache = (plan_cache if plan_cache is not None
+                           else PlanCache(max_plans=self.cfg.max_plans))
+        self.admission = AdmissionController(
+            self.plan_cache, compile_queue_cap=self.cfg.compile_queue_cap)
+        self.scheduler = GraphScheduler(self.cfg.n_lanes)
+        self.graphs: Dict[str, object] = {}
+        self._derived: Dict[Tuple[str, str], Tuple[object, Dict, Dict, str]] = {}
+        self._by_key: Dict[str, Tuple[object, Dict]] = {}
+        self.results: Dict[int, AnalyticResult] = {}
+        self.step_count = 0
+        self.submitted = 0
+        self.spmm_calls = 0
+        self.max_running = 0
+        self.max_inflight = 0
+
+    # -- registration / intake ----------------------------------------------
+
+    def register_graph(self, graph_id: str, adj) -> None:
+        """Register an adjacency under a serving id.  Operand derivation
+        (stochastic/pattern transposes) and plan compilation stay lazy:
+        nothing is paid until a request arrives for the graph."""
+        if adj.n_rows != adj.n_cols:
+            raise ValueError(f"graph {graph_id!r} must be square, "
+                             f"got {adj.n_rows}x{adj.n_cols}")
+        self.graphs[graph_id] = adj
+
+    def submit(self, req: AnalyticRequest) -> None:
+        """Validate and enqueue.  Rejections are immediate (unknown
+        graph/analytic, out-of-range sources, wider than the lane pool)
+        so malformed requests can never deadlock admission."""
+        adj = self.graphs.get(req.graph_id)
+        if adj is None:
+            raise KeyError(f"graph {req.graph_id!r} is not registered; "
+                           f"have {sorted(self.graphs)}")
+        if req.analytic not in ANALYTICS:
+            raise ValueError(f"unknown analytic {req.analytic!r}; "
+                             f"have {sorted(ANALYTICS)}")
+        if req.sources and req.analytic == "connected_components":
+            raise ValueError("connected_components takes no sources")
+        check_sources(np.asarray(req.sources, dtype=np.int64), adj.n_rows,
+                      req.analytic)
+        if req.lanes > self.cfg.n_lanes:
+            raise ValueError(f"request {req.req_id} needs {req.lanes} lanes "
+                             f"but the pool has {self.cfg.n_lanes}")
+        req.arrived_step = self.step_count
+        self.submitted += 1
+        self.admission.submit(req)
+
+    # -- plan resolution -----------------------------------------------------
+
+    def _derive(self, graph_id: str, analytic: str):
+        """(operand matrix, compile opts, aux, plan key) for one
+        (graph, analytic) -- derived once, then reused by every request.
+        Uses the drivers' own `plan_options`, so engine-compiled plans
+        and blocking-driver plans share cache entries."""
+        ck = (graph_id, analytic)
+        hit = self._derived.get(ck)
+        if hit is not None:
+            return hit
+        matrix, semiring, aux = analytic_operand(analytic,
+                                                 self.graphs[graph_id])
+        opts = plan_options(semiring, reorder=self.cfg.reorder,
+                            use_pallas=self.cfg.use_pallas,
+                            interpret=self.cfg.interpret)
+        key = self.plan_cache.key_for(matrix, **opts)
+        self._derived[ck] = (matrix, opts, aux, key)
+        self._by_key[key] = (matrix, opts)
+        return self._derived[ck]
+
+    def _key_of(self, req: AnalyticRequest) -> str:
+        return self._derive(req.graph_id, req.analytic)[3]
+
+    def _compile_key(self, key: str):
+        matrix, opts = self._by_key[key]
+        return self.plan_cache.get_or_compile(matrix, **opts)
+
+    def _start(self, req: AnalyticRequest) -> RunningRequest:
+        matrix, opts, aux, key = self._derive(req.graph_id, req.analytic)
+        plan = self.plan_cache.get_or_compile(matrix, **opts)  # warm: a hit
+        stepper = make_stepper(req.analytic, plan, aux,
+                               sources=np.asarray(req.sources, np.int64),
+                               params=req.params)
+        cap = (req.max_iters if req.max_iters is not None
+               else self.cfg.max_iters_default)
+        return RunningRequest(req=req, stepper=stepper, plan=plan,
+                              plan_key=key, max_iters=cap)
+
+    # -- the engine step ------------------------------------------------------
+
+    def step(self) -> None:
+        self.step_count += 1
+        for req in self.admission.intake(self._key_of):
+            self.scheduler.push_ready(req)
+        for req in self.admission.run_compiles(self.cfg.compiles_per_step,
+                                               self._compile_key):
+            self.scheduler.push_ready(req)
+        self.scheduler.admit(self.step_count, self._start)
+        self.max_running = max(self.max_running, len(self.scheduler.running))
+        self.max_inflight = max(
+            self.max_inflight, self.submitted - len(self.results))
+        self._iterate_running()
+
+    def _iterate_running(self) -> None:
+        """One coalesced SpMV iteration per distinct plan, then release
+        every request that converged (or hit its iteration cap)."""
+        groups: "OrderedDict[str, List[RunningRequest]]" = OrderedDict()
+        for run in self.scheduler.running:
+            if not run.stepper.done:
+                groups.setdefault(run.plan_key, []).append(run)
+        for key, members in groups.items():
+            fronts = [np.asarray(m.stepper.frontier(), np.float32)
+                      for m in members]
+            F = np.concatenate(fronts, axis=0)
+            k = F.shape[0]
+            kpad = 1 << max(k - 1, 0).bit_length() if self.cfg.lane_bucket \
+                else k
+            if kpad > k:
+                F = np.concatenate(
+                    [F, np.zeros((kpad - k, F.shape[1]), F.dtype)], axis=0)
+            y = np.asarray(members[0].plan.execute_many(jnp.asarray(F)))[:k]
+            self.spmm_calls += 1
+            off = 0
+            for m, f in zip(members, fronts):
+                w = f.shape[0]
+                m.stepper.advance(y[off:off + w])
+                m.iters += 1
+                off += w
+        for run in list(self.scheduler.running):
+            if run.stepper.done or run.iters >= run.max_iters:
+                self._finish(run)
+
+    def _finish(self, run: RunningRequest) -> None:
+        self.scheduler.finish(run, self.step_count)
+        req = run.req
+        self.results[req.req_id] = AnalyticResult(
+            req_id=req.req_id, graph_id=req.graph_id, analytic=req.analytic,
+            values=np.asarray(run.stepper.values()), n_iters=run.iters,
+            converged=bool(run.stepper.done),
+            arrived_step=req.arrived_step, admitted_step=req.admitted_step,
+            finished_step=req.finished_step, restarts=req.restarts)
+
+    # -- driving --------------------------------------------------------------
+
+    @property
+    def idle(self) -> bool:
+        return self.admission.idle and self.scheduler.idle
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, AnalyticResult]:
+        """Step until every submitted request has a result (or the step
+        budget runs out -- a stuck engine raises rather than spinning)."""
+        for _ in range(max_steps):
+            if self.idle:
+                return self.results
+            self.step()
+        if not self.idle:
+            raise RuntimeError(
+                f"engine not idle after {max_steps} steps: "
+                f"{self.admission.stats()} {self.scheduler.stats()}")
+        return self.results
+
+    def stats(self) -> Dict:
+        adm = self.admission.stats()
+        served = adm["warm_hits"] + adm["cold_misses"]
+        return {
+            "steps": self.step_count,
+            "submitted": self.submitted,
+            "finished": len(self.results),
+            "preemptions": self.scheduler.preemptions,
+            "warm_hits": adm["warm_hits"],
+            "cold_misses": adm["cold_misses"],
+            "backpressure": adm["backpressure"],
+            "admission_hit_rate": adm["warm_hits"] / served if served else 0.0,
+            "max_running": self.max_running,
+            "max_inflight": self.max_inflight,
+            "spmm_calls": self.spmm_calls,
+            "plan_cache": self.plan_cache.stats(),
+        }
+
+
+__all__ = ["GraphEngine", "GraphEngineConfig"]

@@ -24,8 +24,8 @@ from .events import EventCounters, known_events, register_event
 from .hierarchy import (CacheLevel, Hierarchy, HierarchySpec, MissCache,
                         SequentialPrefetcher, SetAssocCache, StreamBuffers,
                         VictimCache, spmv_address_trace)
-from .report import (graph_gap_report, graph_report, scaling_gap_report,
-                     scaling_report)
+from .report import (graph_gap_report, graph_report, plan_cache_report,
+                     scaling_gap_report, scaling_report)
 from .sweep import GraphPoint, ScalingPoint, graph_sweep, scaling_sweep
 from .topdown import MetricNode, topdown_tree, topdown_summary
 
@@ -37,4 +37,5 @@ __all__ = [
     "spmv_address_trace", "MetricNode", "topdown_tree", "topdown_summary",
     "ScalingPoint", "scaling_sweep", "scaling_report", "scaling_gap_report",
     "GraphPoint", "graph_sweep", "graph_report", "graph_gap_report",
+    "plan_cache_report",
 ]

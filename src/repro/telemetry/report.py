@@ -107,6 +107,33 @@ def gap_report(points: Sequence[SweepPoint]) -> str:
     return "\n".join(lines)
 
 
+def plan_cache_report(stats: Dict, before: Dict = None,
+                      title: str = "plan cache") -> str:
+    """Render one `PlanCache.stats()` snapshot as a small CSV block.
+
+    Pass `before` (an earlier snapshot of the SAME cache) to report the
+    delta window instead of lifetime totals -- the serving benchmark uses
+    this to quote the measured-phase hit rate with warmup traffic
+    excluded.  `hit_rate` is recomputed from the (windowed) hit/miss
+    counts, and mean compile seconds from the compile totals.
+    """
+    s = dict(stats)
+    if before is not None:
+        for k in ("hits", "misses", "evictions", "compiles", "compile_s"):
+            s[k] = s.get(k, 0) - before.get(k, 0)
+    served = s.get("hits", 0) + s.get("misses", 0)
+    hit_rate = s["hits"] / served if served else 0.0
+    compiles = s.get("compiles", 0)
+    mean_compile = s.get("compile_s", 0.0) / compiles if compiles else 0.0
+    head = ["plans", "hits", "misses", "hit_rate", "evictions",
+            "compiles", "compile_s", "mean_compile_s"]
+    row = [s.get("plans", 0), s.get("hits", 0), s.get("misses", 0),
+           hit_rate, s.get("evictions", 0), compiles,
+           s.get("compile_s", 0.0), mean_compile]
+    return "\n".join([f"# {title}" + (" (windowed)" if before else ""),
+                      ",".join(head), ",".join(_fmt(v) for v in row)])
+
+
 def scaling_report(points: Sequence[ScalingPoint]) -> str:
     """Speedup curves from a `sweep.scaling_sweep`: one CSV row per
     (kind, size, reorder, thread-count) with speedup, parallel

@@ -259,6 +259,44 @@ def test_pagerank_empty_graph_is_uniform():
     np.testing.assert_allclose(res.values, np.full(8, 1 / 8), rtol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# source edge cases through the plan path (empty / duplicate / bad sources)
+# ---------------------------------------------------------------------------
+
+def test_bfs_empty_sources_is_well_defined():
+    """An empty source list is a zero-lane run: (0, n) values, converged
+    at zero iterations, nothing executed through the plan."""
+    m = fd_matrix(N, seed=2)
+    res = bfs(m, [])
+    assert res.values.shape == (0, N)
+    assert res.converged and res.n_iters == 0 and res.history == []
+
+
+@pytest.mark.parametrize("reorder", ["none", "rcm"])
+def test_bfs_duplicate_sources_produce_equal_rows(reorder):
+    """Duplicate source indices are distinct lanes with identical
+    frontiers -- the batched path (including the reordered gather /
+    scatter) must keep them bit-identical to the deduplicated run."""
+    m = rmat_matrix(N, seed=2)
+    res = bfs(m, [7, 7, 3], reorder=reorder)
+    assert res.values.shape == (3, N)
+    np.testing.assert_array_equal(res.values[0], res.values[1])
+    solo = bfs(m, 7, reorder=reorder)
+    np.testing.assert_array_equal(res.values[0], solo.values)
+
+
+@pytest.mark.parametrize("bad", [[-1], [0, N + 3], N + 3])
+def test_bfs_out_of_range_sources_raise_value_error(bad):
+    m = fd_matrix(N, seed=2)
+    with pytest.raises(ValueError, match="out of range"):
+        bfs(m, bad)
+
+
+def test_sssp_out_of_range_source_raises_value_error():
+    with pytest.raises(ValueError, match="out of range"):
+        sssp(fd_matrix(N, seed=2), N)
+
+
 def test_transpose_csr_roundtrip():
     m = rmat_matrix(128, seed=7)
     tt = transpose_csr(transpose_csr(m))
