@@ -19,6 +19,13 @@ Geometry is the working-set-scaled reference cell (L2 16 KiB, LLC
 longer fit the L2, so warm iterations keep missing while FD's bands
 stay resident -- the compounding regime.
 
+The sweep runs twice: once with structure-driven format choice (R-MAT
+plans auto-route to the hybrid row split) and once with every plan
+pinned to CSR -- the historical baseline -- so the final section
+reports how much of the warm R-MAT gap the nnz-balanced containers
+recover.  In smoke mode the bench asserts the R-MAT plans actually
+picked an nnz-balanced container.
+
 Invoked by `benchmarks.run` (section name: graph) or directly:
 
     PYTHONPATH=src python -m benchmarks.graph_bench [--fast] [--smoke]
@@ -49,13 +56,57 @@ def _config():
     return (12,), 128
 
 
+def _recovered_gap_report(auto_pts, csr_pts) -> str:
+    """How much of the warm FD-vs-R-MAT gap the auto-picked nnz-balanced
+    containers recover, vs the same sweep with every plan pinned to CSR.
+
+    warm_gap = rmat.warm_cyc_nnz / fd.warm_cyc_nnz per (size, analytic);
+    the csr column is the historical baseline (EXPERIMENTS.md's ~1.8x),
+    the auto column is with structure-driven format choice (R-MAT plans
+    route to the hybrid row split), recovered = 1 - auto/csr."""
+    def by(pts):
+        return {(p.kind, p.log2n, p.analytic): p for p in pts}
+    a, c = by(auto_pts), by(csr_pts)
+    lines = ["# warm R-MAT gap recovered by nnz-balanced containers",
+             "log2n,analytic,rmat_format,warm_gap_csr,warm_gap_auto,"
+             "recovered"]
+    for (log2n, analytic) in sorted({(p.log2n, p.analytic)
+                                     for p in auto_pts}):
+        cells = [m.get(("fd", log2n, analytic)) for m in (a, c)]
+        cells += [m.get(("rmat", log2n, analytic)) for m in (a, c)]
+        fd_a, fd_c, rm_a, rm_c = cells
+        if None in cells:
+            continue
+        gap_a = rm_a.warm_cycles_per_nnz / max(fd_a.warm_cycles_per_nnz,
+                                               1e-12)
+        gap_c = rm_c.warm_cycles_per_nnz / max(fd_c.warm_cycles_per_nnz,
+                                               1e-12)
+        lines.append(",".join([
+            str(log2n), analytic, rm_a.format_name,
+            f"{gap_c:.3f}", f"{gap_a:.3f}", f"{1.0 - gap_a / gap_c:.3f}"]))
+    return "\n".join(lines)
+
+
 def main() -> None:
     log2ns, max_iters = _config()
     pts = graph_sweep(log2ns=log2ns, analytics=ANALYTICS, spec=SCALED_CELL,
                       max_iters=max_iters)
+    # fixed-format baseline: the same sweep with every plan pinned to CSR,
+    # to measure what the auto-picked nnz-balanced containers recover
+    pts_csr = graph_sweep(log2ns=log2ns, analytics=ANALYTICS,
+                          spec=SCALED_CELL, max_iters=max_iters,
+                          format="csr")
     print(graph_report(pts))
     print()
     print(graph_gap_report(pts))
+    print()
+    print(_recovered_gap_report(pts, pts_csr))
+    if common.SMOKE:
+        picked = {p.format_name for p in pts if p.kind == "rmat"}
+        assert picked & {"hyb", "csr-seg"}, (
+            f"R-MAT plans auto-picked only {picked}: the nnz-balanced "
+            "candidates are not being selected")
+        print(f"# smoke: R-MAT plans auto-picked {sorted(picked)}")
 
 
 if __name__ == "__main__":

@@ -14,8 +14,13 @@ report answers both headline questions:
 
 Geometry is the working-set-scaled reference cell (L2 16 KiB, shared
 LLC 64 KiB: x is about half the LLC at 2^12, the paper's >LLC regime at
-Python-tractable trace sizes).  Partitioning is `rowblock_balanced`, so
-RCM's row clustering is not mistaken for a scaling defect.
+Python-tractable trace sizes).  The partition axis runs twice: row
+blocks split on the nnz CDF (`balanced` -- the best a row-granular
+split can do, and the axis the historical gap reports use) and equal
+nonzero segments that may cut mid-row (`merge` -- the segmented /
+merge-CSR execution).  `partition_gap_report` tabulates what nnz
+balancing buys per cell; in smoke mode the bench *asserts* merge wins
+at least one R-MAT cell.
 
 Invoked by `benchmarks.run` (section name: scaling) or directly:
 
@@ -25,7 +30,8 @@ from __future__ import annotations
 
 from repro import reorder
 from repro.parallel import ParallelSpec
-from repro.telemetry.report import scaling_gap_report, scaling_report
+from repro.telemetry.report import (partition_gap_report, scaling_gap_report,
+                                    scaling_report)
 from repro.telemetry.sweep import scaling_sweep
 
 from . import common
@@ -44,15 +50,43 @@ def _config():
     return (12,), THREADS
 
 
+def _assert_merge_wins_rmat(points) -> None:
+    """Smoke gate: the nnz-balanced merge partition must beat the best
+    row-granular split on at least one R-MAT cell (hub rows defeat any
+    row-granular cut, so if this fails the merge slicing is broken)."""
+    by = {(p.kind, p.log2n, p.reorder, p.threads, p.partition): p
+          for p in points}
+    wins = [
+        (kind, log2n, rl, t)
+        for (kind, log2n, rl, t, part) in by
+        if part == "merge" and kind == "rmat" and t > 1
+        and (kind, log2n, rl, t, "balanced") in by
+        and by[(kind, log2n, rl, t, "merge")].metrics.time_s
+        < by[(kind, log2n, rl, t, "balanced")].metrics.time_s
+    ]
+    assert wins, ("merge partition beat row-balanced on no R-MAT cell: "
+                  "nnz-balanced slicing is not delivering its win")
+    print(f"# smoke: merge partition wins {len(wins)} R-MAT cell(s), "
+          f"e.g. {wins[0]}")
+
+
 def main() -> None:
     log2ns, threads = _config()
-    pts = scaling_sweep(
-        log2ns=log2ns, threads_list=threads, spec=SCALED_PARALLEL,
-        partition="balanced", sweeps=2,
-        reorderings={"none": None, "rcm": reorder.rcm})
+    pts = []
+    for partition in ("balanced", "merge"):
+        pts += scaling_sweep(
+            log2ns=log2ns, threads_list=threads, spec=SCALED_PARALLEL,
+            partition=partition, sweeps=2,
+            reorderings={"none": None, "rcm": reorder.rcm})
     print(scaling_report(pts))
     print()
-    print(scaling_gap_report(pts))
+    # speedup-gap view keyed by (kind, size, reorder, threads): keep it on
+    # the row-balanced axis it has always reported
+    print(scaling_gap_report([p for p in pts if p.partition == "balanced"]))
+    print()
+    print(partition_gap_report(pts))
+    if common.SMOKE:
+        _assert_merge_wins_rmat(pts)
 
 
 if __name__ == "__main__":

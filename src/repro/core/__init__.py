@@ -3,7 +3,7 @@
 Quantifying (and then exploiting) the effect of matrix structure on sparse
 matrix-vector multiply performance:
 
-  formats      CSR / ELL / BELL / DIA sparse containers (pytrees)
+  formats      CSR / ELL / BELL / DIA / HYB sparse containers (pytrees)
   generators   FD 9-point stencil + R-MAT (paper §II-A) + sweep helpers
   structure    structure metrics: bandedness, locality, block density
   cache_model  Sandy Bridge L2/L3+prefetcher model -> the paper's 5 metrics
@@ -13,7 +13,7 @@ matrix-vector multiply performance:
 """
 from . import cache_model, formats, generators, partition, spmv, structure, traffic
 from .cache_model import SANDY_BRIDGE, CacheMetrics, MachineModel, analytic_metrics
-from .formats import BELL, CSR, DIA, ELL
+from .formats import BELL, CSR, DIA, ELL, HYB
 from .generators import banded_matrix, fd_matrix, rmat_matrix, uniform_random_matrix
 from .spmv import auto_format, spmv
 from .structure import StructureReport, analyze
@@ -22,7 +22,7 @@ from .traffic import TPU_V5E, TPUModel
 __all__ = [
     "cache_model", "formats", "generators", "partition", "spmv", "structure",
     "traffic", "SANDY_BRIDGE", "CacheMetrics", "MachineModel",
-    "analytic_metrics", "BELL", "CSR", "DIA", "ELL", "banded_matrix",
+    "analytic_metrics", "BELL", "CSR", "DIA", "ELL", "HYB", "banded_matrix",
     "fd_matrix", "rmat_matrix", "uniform_random_matrix", "auto_format",
     "analyze", "StructureReport", "TPU_V5E", "TPUModel",
 ]

@@ -61,6 +61,40 @@ def rowblock_balanced(csr: CSR, parts: int) -> RowPartition:
     return RowPartition(starts=starts, nnz_per_part=nnz)
 
 
+@dataclasses.dataclass(frozen=True)
+class NnzPartition:
+    """Flat-nonzero ranges [cuts[i], cuts[i+1]) per worker (merge-CSR
+    style): cuts may fall mid-row, so a row crossing a boundary is shared
+    and its partials reconciled by a carry-out merge.  Duck-typed with
+    `RowPartition` where only `nnz_per_part` matters
+    (`parallel.simulate_parallel`)."""
+    cuts: np.ndarray       # (parts+1,) positions in the nonzero stream
+
+    @property
+    def n_parts(self) -> int:
+        return len(self.cuts) - 1
+
+    @property
+    def nnz_per_part(self) -> np.ndarray:
+        return np.diff(self.cuts)
+
+    def imbalance(self) -> float:
+        """max/mean nnz ratio -- by construction within 1 nonzero of 1.0."""
+        m = self.nnz_per_part.mean()
+        return float(self.nnz_per_part.max() / max(m, 1e-9))
+
+
+def nnz_split(csr: CSR, parts: int) -> NnzPartition:
+    """Equal nonzero segments regardless of row boundaries -- the
+    partition the merge/segmented CSR kernel executes.  Unlike
+    `rowblock_balanced` (which can still be skewed by a single hub row
+    heavier than the target share), segment loads differ by at most one
+    nonzero."""
+    parts = max(1, min(int(parts), max(csr.nnz, 1)))
+    cuts = (np.arange(parts + 1, dtype=np.int64) * csr.nnz) // parts
+    return NnzPartition(cuts=cuts)
+
+
 def col_stripes(csr: CSR, n_stripes: int) -> List[CSR]:
     """Split A into column stripes A = [A_0 | A_1 | ... ]; SpMV becomes
     y = sum_s A_s @ x_s with x_s pinned in VMEM (paper P2+P3 on TPU).

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import structure
-from .formats import BELL, CSR, DIA, ELL
+from .formats import BELL, CSR, DIA, ELL, HYB
 
 
 # ---------------------------------------------------------------------------
@@ -72,6 +72,16 @@ def spmv_dia_jnp(dia: DIA, x: jax.Array) -> jax.Array:
 
     contrib = jax.vmap(one_diag)(dia.data, dia.offsets)
     return contrib.sum(axis=0)
+
+
+@jax.jit
+def spmv_hyb_jnp(hyb: HYB, x: jax.Array) -> jax.Array:
+    """Light ELL partial plus heavy COO segment-sum (heavy rows are
+    all-padding in the light slab, so the + join is exact)."""
+    y = (hyb.data * jnp.take(x, hyb.indices, axis=0)).sum(axis=1)
+    prods = hyb.hvals * jnp.take(x, hyb.hcols, axis=0)
+    return y + jax.ops.segment_sum(prods, hyb.hrows,
+                                   num_segments=hyb.n_rows)
 
 
 def spmv_dense_jnp(a: jax.Array, x: jax.Array) -> jax.Array:
@@ -131,7 +141,7 @@ def spmv(matrix, x: jax.Array, use_pallas: bool = False,
         from repro.kernels import ops as kops
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
-        if isinstance(matrix, (CSR, ELL, BELL, DIA)):
+        if isinstance(matrix, (CSR, ELL, BELL, DIA, HYB)):
             if _plan.is_concrete(matrix):
                 p = _plan.DEFAULT_CACHE.get_or_build(
                     _plan.matrix_fingerprint(matrix) + "|container",
@@ -140,12 +150,15 @@ def spmv(matrix, x: jax.Array, use_pallas: bool = False,
             # tracer fallback: per-call wrappers (prep under jit where the
             # format permits it)
             direct = {DIA: kops.spmv_dia, BELL: kops.spmv_bell,
-                      CSR: kops.spmv_csr, ELL: kops.spmv_ell}
+                      CSR: kops.spmv_csr, ELL: kops.spmv_ell,
+                      HYB: kops.spmv_hyb}
             return direct[type(matrix)](matrix, x, interpret=interpret)
     if isinstance(matrix, CSR):
         return spmv_csr_jnp(matrix, x)
     if isinstance(matrix, ELL):
         return spmv_ell_jnp(matrix, x)
+    if isinstance(matrix, HYB):
+        return spmv_hyb_jnp(matrix, x)
     if isinstance(matrix, BELL):
         return spmv_bell_jnp(matrix, x)
     if isinstance(matrix, DIA):

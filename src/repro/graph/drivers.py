@@ -409,7 +409,8 @@ def _drive(stepper, plan, max_iters: int, multi: bool) -> GraphResult:
 
 def pagerank(adj: CSR, damping: float = 0.85, tol: float = 1e-8,
              max_iters: int = 100, *, r0=None, reorder="none",
-             plan_cache=None, use_pallas: bool = True,
+             format: Optional[str] = None, plan_cache=None,
+             use_pallas: bool = True,
              interpret: Optional[bool] = None) -> GraphResult:
     """PageRank by power iteration on P = A^T D_out^{-1} (plus_times).
 
@@ -421,7 +422,7 @@ def pagerank(adj: CSR, damping: float = 0.85, tol: float = 1e-8,
     start is what makes the iteration count meaningful there.
     """
     matrix, _, aux = analytic_operand("pagerank", adj)
-    p = _graph_plan(matrix, PLUS_TIMES, reorder=reorder,
+    p = _graph_plan(matrix, PLUS_TIMES, reorder=reorder, format=format,
                     plan_cache=plan_cache, use_pallas=use_pallas,
                     interpret=interpret)
     st = PageRankStepper(p, aux, damping=damping, tol=tol, r0=r0)
@@ -429,7 +430,8 @@ def pagerank(adj: CSR, damping: float = 0.85, tol: float = 1e-8,
 
 
 def bfs(adj: CSR, source: Union[int, Sequence[int]],
-        max_iters: Optional[int] = None, *, reorder="none", plan_cache=None,
+        max_iters: Optional[int] = None, *, reorder="none",
+        format: Optional[str] = None, plan_cache=None,
         use_pallas: bool = True, interpret: Optional[bool] = None
         ) -> GraphResult:
     """Hop depths from `source` by or_and frontier propagation on A^T.
@@ -446,15 +448,17 @@ def bfs(adj: CSR, source: Union[int, Sequence[int]],
     n = _require_square(adj, "bfs")
     multi = np.ndim(source) > 0
     matrix, _, aux = analytic_operand("bfs", adj)
-    p = _graph_plan(matrix, OR_AND, reorder=reorder, plan_cache=plan_cache,
-                    use_pallas=use_pallas, interpret=interpret)
+    p = _graph_plan(matrix, OR_AND, reorder=reorder, format=format,
+                    plan_cache=plan_cache, use_pallas=use_pallas,
+                    interpret=interpret)
     st = BfsStepper(p, aux, sources=np.atleast_1d(
         np.asarray(source, dtype=np.int64)))
     return _drive(st, p, n if max_iters is None else max_iters, multi=multi)
 
 
 def sssp(adj: CSR, source: int, max_iters: Optional[int] = None, *,
-         reorder="none", plan_cache=None, use_pallas: bool = True,
+         reorder="none", format: Optional[str] = None, plan_cache=None,
+         use_pallas: bool = True,
          interpret: Optional[bool] = None) -> GraphResult:
     """Single-source shortest paths by Bellman-Ford relaxation:
     d' = d ⊕ (A^T (⊕=min, ⊗=+) d), iterated to fixpoint.
@@ -466,15 +470,16 @@ def sssp(adj: CSR, source: int, max_iters: Optional[int] = None, *,
     """
     n = _require_square(adj, "sssp")
     matrix, _, aux = analytic_operand("sssp", adj)
-    p = _graph_plan(matrix, MIN_PLUS, reorder=reorder, plan_cache=plan_cache,
-                    use_pallas=use_pallas, interpret=interpret)
+    p = _graph_plan(matrix, MIN_PLUS, reorder=reorder, format=format,
+                    plan_cache=plan_cache, use_pallas=use_pallas,
+                    interpret=interpret)
     st = SsspStepper(p, aux, sources=[source])
     return _drive(st, p, n if max_iters is None else max_iters, multi=False)
 
 
 def connected_components(adj: CSR, max_iters: Optional[int] = None, *,
-                         reorder="none", plan_cache=None,
-                         use_pallas: bool = True,
+                         reorder="none", format: Optional[str] = None,
+                         plan_cache=None, use_pallas: bool = True,
                          interpret: Optional[bool] = None) -> GraphResult:
     """Component labels by min-label propagation over the symmetrized
     pattern: with zero edge weights, min_plus SpMV computes each vertex's
@@ -488,8 +493,9 @@ def connected_components(adj: CSR, max_iters: Optional[int] = None, *,
     silently merging components whose seed ids collide in f32."""
     n = _require_square(adj, "connected_components")
     matrix, _, aux = analytic_operand("connected_components", adj)
-    p = _graph_plan(matrix, MIN_PLUS, reorder=reorder, plan_cache=plan_cache,
-                    use_pallas=use_pallas, interpret=interpret)
+    p = _graph_plan(matrix, MIN_PLUS, reorder=reorder, format=format,
+                    plan_cache=plan_cache, use_pallas=use_pallas,
+                    interpret=interpret)
     st = CcStepper(p, aux)
     return _drive(st, p, n if max_iters is None else max_iters, multi=False)
 

@@ -42,7 +42,7 @@ from typing import Callable, Optional, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import CSR, ELL
+from repro.core.formats import CSR, ELL, HYB
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,19 +128,43 @@ def spmv_csr_semiring_jnp(csr: CSR, x: jax.Array, sr: Semiring) -> jax.Array:
                      jnp.asarray(sr.identity, y.dtype))
 
 
+def spmv_hyb_semiring_jnp(hyb: HYB, x: jax.Array, sr: Semiring) -> jax.Array:
+    """Light ELL partial ⊕ heavy segment-⊕.  Heavy rows are all-padding
+    in the light slab (absorbing fill -> ⊕-identity there) and light rows
+    are absent from the heavy stream (masked to the ⊕-identity here), so
+    the join is exact.  Requires `HYB.from_csr(..., fill=sr.pad_value)`.
+    """
+    light = ELL(data=hyb.data, indices=hyb.indices, n_rows=hyb.n_rows,
+                n_cols=hyb.n_cols, max_nnz=hyb.light_width)
+    y = spmv_ell_semiring_jnp(light, x, sr)
+    if hyb.hvals.shape[0] == 0:
+        return y
+    prods = sr.mul(hyb.hvals, jnp.take(x, hyb.hcols, axis=0))
+    h = sr.segment(prods, hyb.hrows, num_segments=hyb.n_rows)
+    counts = jax.ops.segment_sum(jnp.ones_like(prods), hyb.hrows,
+                                 num_segments=hyb.n_rows)
+    h = jnp.where(counts > 0, h, jnp.asarray(sr.identity, h.dtype))
+    return sr.add(y, h)
+
+
 def spmv_semiring_jnp(container, x: jax.Array, sr: Semiring) -> jax.Array:
-    """Dispatch on container type (ELL and CSR only -- see the padding
-    contract in the module docstring for why DIA/BELL are excluded)."""
+    """Dispatch on container type (ELL, CSR and HYB only -- see the
+    padding contract in the module docstring for why DIA/BELL are
+    excluded)."""
+    if isinstance(container, HYB):
+        return spmv_hyb_semiring_jnp(container, x, sr)
     if isinstance(container, ELL):
         return spmv_ell_semiring_jnp(container, x, sr)
     if isinstance(container, CSR):
         return spmv_csr_semiring_jnp(container, x, sr)
     raise TypeError(
-        f"semiring SpMV supports ELL and CSR, got {type(container).__name__}"
+        f"semiring SpMV supports ELL, CSR and HYB, got "
+        f"{type(container).__name__}"
         " (dense-footprint formats store absent entries as 0.0, which is "
         "only absorbing under plus_times)")
 
 
 __all__ = ["Semiring", "PLUS_TIMES", "MIN_PLUS", "OR_AND", "MAX_TIMES",
            "SEMIRINGS", "resolve", "spmv_ell_semiring_jnp",
-           "spmv_csr_semiring_jnp", "spmv_semiring_jnp"]
+           "spmv_csr_semiring_jnp", "spmv_hyb_semiring_jnp",
+           "spmv_semiring_jnp"]

@@ -19,10 +19,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import BELL, CSR, DIA, ELL
+from repro.core.formats import BELL, CSR, DIA, ELL, HYB
 
 from . import spmv_bell as _bell
 from . import spmv_csr as _csr
+from . import spmv_csr_seg as _seg
 from . import spmv_dia as _dia
 from . import spmv_ell as _ell
 
@@ -121,7 +122,9 @@ def prepare_ell(ell: ELL, bm: int = 128, pad_mult: int = 128,
     The container itself must already use the same fill
     (`ELL.from_csr(..., fill=...)`) for its own short-row padding."""
     n, w = ell.data.shape
-    n_pad = round_up(n, bm)
+    # max(n, 1): a 0-row container still needs one (all-padding) row
+    # block -- a zero-length Pallas grid is not representable.
+    n_pad = round_up(max(n, 1), bm)
     w_pad = round_up(max(w, 1), pad_mult)
     data = jnp.pad(ell.data, ((0, n_pad - n), (0, w_pad - w)),
                    constant_values=pad_value)
@@ -260,6 +263,149 @@ def spmv_csr_prepared(prep: PaddedCSR, x: jax.Array,
     return y[: prep.n_rows]
 
 
+# ---------------------------------------------------------------------------
+# Segmented CSR (nnz-balanced flat stream; the merge-CSR layout)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PreparedSegCSR:
+    """Flat nonzero stream cut into equal-nnz segments for spmv_csr_seg.
+
+    `rid` holds the per-segment-dense row rank of each nonzero and
+    `row_ids[s, r]` maps rank r of segment s back to its global row (pad
+    ranks park on the dummy row n_rows, sliced off after the carry
+    merge).  `nonempty` marks rows with at least one nonzero so the
+    non-plus-times combine can restore the ⊕-identity on empty rows."""
+    vals: jax.Array      # (S, L)
+    cols: jax.Array      # (S, L) int32
+    rid: jax.Array       # (S, L) int32 rank within segment
+    row_ids: jax.Array   # (S, R) int32 global row per rank; pad -> n_rows
+    nonempty: jax.Array  # (n_rows,) bool
+    n_rows: int
+    n_cols: int
+    rwin: int            # R: static rank-window width
+    seg_len: int         # L: padded nonzeros per segment
+    x_pad: int
+
+
+def _seg_arrays(rows, cols, vals, n_rows: int, seg_len: int, pad_mult: int,
+                pad_value: float):
+    """Cut a (rows, cols, vals) nonzero stream -- in whatever order the
+    caller chose (row-major for merge-CSR, column-sorted for the HYB
+    heavy partition) -- into S equal segments of L slots, ranking rows
+    densely within each segment."""
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals = np.asarray(vals)
+    seg = round_up(max(int(seg_len), 1), pad_mult)
+    nnz = len(vals)
+    n_segs = max(ceil_div(nnz, seg), 1)
+    total = n_segs * seg
+    v = np.full(total, pad_value, dtype=vals.dtype)
+    c = np.zeros(total, dtype=np.int32)
+    r = np.full(total, n_rows, dtype=np.int64)   # pads on the dummy row
+    v[:nnz], c[:nnz], r[:nnz] = vals, cols.astype(np.int32), rows
+    v2, c2, r2 = v.reshape(n_segs, seg), c.reshape(n_segs, seg), \
+        r.reshape(n_segs, seg)
+    rid = np.zeros((n_segs, seg), dtype=np.int32)
+    uniques = []
+    for s in range(n_segs):
+        uniq, inv = np.unique(r2[s], return_inverse=True)
+        rid[s] = inv.astype(np.int32)
+        uniques.append(uniq)
+    rwin = round_up(max(len(u) for u in uniques), pad_mult)
+    row_ids = np.full((n_segs, rwin), n_rows, dtype=np.int32)
+    for s, uniq in enumerate(uniques):
+        row_ids[s, : len(uniq)] = uniq
+    return v2, c2, rid, row_ids, rwin, seg
+
+
+def prepare_csr_seg(csr: CSR, seg_len: int = 512, pad_mult: int = 128,
+                    pad_value: float = 0.0) -> PreparedSegCSR:
+    """Flatten the CSR nonzero stream row-major and cut it into
+    equal-nnz segments.  `pad_value` fills the tail slots: 0.0 for
+    plus-times, the semiring's absorbing element otherwise."""
+    indptr = np.asarray(csr.indptr, dtype=np.int64)
+    lengths = np.diff(indptr)
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), lengths)
+    v2, c2, rid, row_ids, rwin, seg = _seg_arrays(
+        rows, np.asarray(csr.indices), np.asarray(csr.data), csr.n_rows,
+        seg_len, pad_mult, pad_value)
+    return PreparedSegCSR(
+        vals=jnp.asarray(v2), cols=jnp.asarray(c2), rid=jnp.asarray(rid),
+        row_ids=jnp.asarray(row_ids), nonempty=jnp.asarray(lengths > 0),
+        n_rows=csr.n_rows, n_cols=csr.n_cols, rwin=rwin, seg_len=seg,
+        x_pad=round_up(max(csr.n_cols, 1), pad_mult))
+
+
+def spmv_csr_seg_prepared(prep: PreparedSegCSR, x: jax.Array,
+                          interpret: bool = True, semiring=None) -> jax.Array:
+    xp = jnp.pad(x, (0, prep.x_pad - prep.n_cols))
+    partials = _seg.spmv_csr_seg_pallas(prep.vals, prep.cols, prep.rid, xp,
+                                        rwin=prep.rwin, interpret=interpret,
+                                        semiring=semiring)
+    flat, ids = partials.reshape(-1), prep.row_ids.reshape(-1)
+    if semiring is None or semiring.name == "plus_times":
+        # carry-out merge: rows straddling a segment boundary have one
+        # rank in each segment; the segment sum stitches them together.
+        return jax.ops.segment_sum(flat, ids,
+                                   num_segments=prep.n_rows + 1)[: prep.n_rows]
+    y = semiring.segment(flat, ids,
+                         num_segments=prep.n_rows + 1)[: prep.n_rows]
+    # jax's segment_min/max fill empty segments with +/-inf, which is only
+    # the ⊕-identity for min_plus -- restore it for the rest.
+    return jnp.where(prep.nonempty, y, jnp.asarray(semiring.identity,
+                                                   y.dtype))
+
+
+# ---------------------------------------------------------------------------
+# HYB (ELL light partition + column-sorted COO heavy tail)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PreparedHYB:
+    """Two fused launches per SpMV: the ELL kernel over the light rows
+    and the segmented kernel over the column-sorted heavy stream, joined
+    by one ⊕.  Heavy rows are all-padding in the light slab (identity)
+    and light rows never appear in the heavy stream (identity via
+    `heavy.nonempty`), so the join is exact for every semiring."""
+    light: PreparedELL
+    heavy: PreparedSegCSR
+    n_rows: int
+    n_cols: int
+
+
+def prepare_hyb(hyb: HYB, seg_len: int = 512, bm: int = 128,
+                pad_mult: int = 128, pad_value: float = 0.0) -> PreparedHYB:
+    light_ell = ELL(data=hyb.data, indices=hyb.indices, n_rows=hyb.n_rows,
+                    n_cols=hyb.n_cols, max_nnz=hyb.light_width)
+    light = prepare_ell(light_ell, bm=bm, pad_mult=pad_mult,
+                        pad_value=pad_value)
+    v2, c2, rid, row_ids, rwin, seg = _seg_arrays(
+        np.asarray(hyb.hrows), np.asarray(hyb.hcols), np.asarray(hyb.hvals),
+        hyb.n_rows, seg_len, pad_mult, pad_value)
+    heavy_mask = np.zeros(hyb.n_rows, dtype=bool)
+    heavy_mask[hyb.heavy_row_ids()] = True
+    heavy = PreparedSegCSR(
+        vals=jnp.asarray(v2), cols=jnp.asarray(c2), rid=jnp.asarray(rid),
+        row_ids=jnp.asarray(row_ids), nonempty=jnp.asarray(heavy_mask),
+        n_rows=hyb.n_rows, n_cols=hyb.n_cols, rwin=rwin, seg_len=seg,
+        x_pad=round_up(max(hyb.n_cols, 1), pad_mult))
+    return PreparedHYB(light=light, heavy=heavy, n_rows=hyb.n_rows,
+                       n_cols=hyb.n_cols)
+
+
+def spmv_hyb_prepared(prep: PreparedHYB, x: jax.Array,
+                      interpret: bool = True, semiring=None) -> jax.Array:
+    y_light = spmv_ell_prepared(prep.light, x, interpret=interpret,
+                                semiring=semiring)
+    y_heavy = spmv_csr_seg_prepared(prep.heavy, x, interpret=interpret,
+                                    semiring=semiring)
+    if semiring is None or semiring.name == "plus_times":
+        return y_light + y_heavy
+    return semiring.add(y_light, y_heavy)
+
+
 __all__ = [
     "ceil_div", "round_up",
     "PreparedDIA", "prepare_dia", "spmv_dia_prepared",
@@ -267,4 +413,6 @@ __all__ = [
     "PreparedELL", "prepare_ell", "spmv_ell_prepared",
     "ShardedELL", "prepare_ell_shards",
     "PaddedCSR", "prepare_csr", "spmv_csr_prepared",
+    "PreparedSegCSR", "prepare_csr_seg", "spmv_csr_seg_prepared",
+    "PreparedHYB", "prepare_hyb", "spmv_hyb_prepared",
 ]

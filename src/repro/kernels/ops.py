@@ -23,13 +23,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import BELL, CSR, DIA, ELL
+from repro.core.formats import BELL, CSR, DIA, ELL, HYB
 from . import flash_attention as _fa
 from ._layout import (PaddedCSR, PreparedBELL, PreparedDIA, PreparedELL,
-                      ShardedELL, prepare_bell, prepare_csr, prepare_dia,
-                      prepare_ell, prepare_ell_shards, round_up,
+                      PreparedHYB, PreparedSegCSR, ShardedELL, prepare_bell,
+                      prepare_csr, prepare_csr_seg, prepare_dia, prepare_ell,
+                      prepare_ell_shards, prepare_hyb, round_up,
                       spmv_bell_prepared, spmv_csr_prepared,
-                      spmv_dia_prepared, spmv_ell_prepared)
+                      spmv_csr_seg_prepared, spmv_dia_prepared,
+                      spmv_ell_prepared, spmv_hyb_prepared)
 
 # Backwards-compatible alias; new code should use `_layout.round_up`.
 _round_up = round_up
@@ -118,6 +120,54 @@ def spmv_csr(csr: CSR, x: jax.Array, n_stripes: int = 1,
         interpret=interpret, semiring=semiring)
 
 
+@_reordered
+def spmv_csr_seg(csr: CSR, x: jax.Array, seg_len: int = 512,
+                 interpret: bool = True, semiring=None) -> jax.Array:
+    """nnz-balanced segmented (merge) CSR: equal-nonzero segments over a
+    static grid with a carry-out merge across segment boundaries.
+    Convenience wrapper; compile a `repro.plan.SpmvPlan` with
+    `format="csr-seg"` to cache the `PreparedSegCSR` layout."""
+    pad = 0.0 if semiring is None else semiring.pad_value
+    return spmv_csr_seg_prepared(
+        prepare_csr_seg(csr, seg_len=seg_len, pad_value=pad), x,
+        interpret=interpret, semiring=semiring)
+
+
+def _check_hyb_padding_absorbing(hyb: HYB, semiring) -> None:
+    """Same contract as `_check_ell_padding_absorbing`, applied to the
+    HYB light partition: `fill=0.0` padding reads as real weight-0 edges
+    to vertex 0 under semirings whose absorbing element is not 0.0."""
+    if isinstance(hyb.data, jax.core.Tracer) or \
+            isinstance(hyb.indices, jax.core.Tracer):
+        return                         # can't inspect under tracing
+    import numpy as np
+
+    data, idx = np.asarray(hyb.data), np.asarray(hyb.indices)
+    if data.size and bool(np.any((data == 0.0) & (idx == 0))):
+        raise ValueError(
+            f"HYB light partition has (value 0.0, col 0) slots, which the "
+            f"{semiring.name!r} semiring (pad_value="
+            f"{semiring.pad_value!r}) would treat as real edges; build it "
+            f"with HYB.from_csr(csr, fill=semiring.pad_value) so padding "
+            "is absorbing")
+
+
+@_reordered
+def spmv_hyb(hyb: HYB, x: jax.Array, seg_len: int = 512,
+             interpret: bool = True, semiring=None) -> jax.Array:
+    """Hybrid row split: one ELL launch over the light rows, one
+    segmented launch over the column-sorted heavy stream, joined by ⊕.
+    Non-plus-times semirings require the container's light padding to be
+    absorbing: build it with `HYB.from_csr(csr, fill=semiring.pad_value)`
+    (checked when the pad value is not 0.0)."""
+    pad = 0.0 if semiring is None else semiring.pad_value
+    if semiring is not None and semiring.pad_value != 0.0:
+        _check_hyb_padding_absorbing(hyb, semiring)
+    return spmv_hyb_prepared(
+        prepare_hyb(hyb, seg_len=seg_len, pad_value=pad), x,
+        interpret=interpret, semiring=semiring)
+
+
 # ---------------------------------------------------------------------------
 # Paged attention (decode over block-table KV, GQA broadcast here)
 # ---------------------------------------------------------------------------
@@ -158,7 +208,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 __all__ = [
-    "spmv_dia", "spmv_bell", "spmv_ell", "spmv_csr",
+    "spmv_dia", "spmv_bell", "spmv_ell", "spmv_csr", "spmv_csr_seg",
+    "spmv_hyb",
     "paged_attention", "flash_attention",
     # prepared-layout API (lives in _layout; re-exported for compatibility)
     "PaddedCSR", "prepare_csr", "spmv_csr_prepared",
@@ -166,4 +217,6 @@ __all__ = [
     "PreparedBELL", "prepare_bell", "spmv_bell_prepared",
     "PreparedELL", "prepare_ell", "spmv_ell_prepared",
     "ShardedELL", "prepare_ell_shards",
+    "PreparedSegCSR", "prepare_csr_seg", "spmv_csr_seg_prepared",
+    "PreparedHYB", "prepare_hyb", "spmv_hyb_prepared",
 ]

@@ -1,0 +1,103 @@
+"""Segmented (merge-style) CSR SpMV Pallas kernel -- nnz-balanced grid.
+
+The row-blocked kernels (`spmv_csr`, `spmv_ell`) partition work by ROWS,
+so a power-law matrix hands one grid step a 4000-nonzero hub row and its
+neighbor eight -- the load-imbalance half of the paper's R-MAT penalty.
+This kernel partitions the FLAT nonzero stream instead (Bergmans et al.'s
+merge-based CSR, PAPERS.md): every grid step owns exactly `seg_len`
+nonzeros regardless of how rows fall, and rows that straddle a segment
+boundary are finished by a carry-out merge after the grid.
+
+Layout (host prep in `_layout.prepare_csr_seg`):
+
+  vals : (S, L)  f32   flat row-major nonzero stream cut into S segments,
+                       padded with the semiring's absorbing element
+  cols : (S, L)  int32 column per nonzero, padding 0
+  rid  : (S, L)  int32 LOCAL row rank within the segment (dense: 0..R-1 in
+                       stream order), padding R-1
+  x    : (1, n_pad)    whole operand vector, block-constant -> pinned
+
+Ranks are per-segment-dense rather than row offsets so the partial window
+R is bounded by L even when empty rows interleave; `row_ids[s, r]` (host
+side) maps rank r back to the global row, with pad ranks parked on a
+dummy row n_rows.  A row crossing segments s and s+1 appears as the last
+rank of s and rank 0 of s+1; the host-side segment-⊕ over `row_ids` is
+the merge that stitches those partials back together.
+
+In-segment accumulation reuses the one-hot matmul trick of `spmv_csr`
+(segment sum on the MXU; TPU has no scatter), or a masked ⊕-reduce on the
+VPU for non-plus-times semirings.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .compat import CompilerParams
+
+
+def _kernel(vals_ref, cols_ref, rid_ref, x_ref, part_ref, *, rwin,
+            semiring=None):
+    xg = jnp.take(x_ref[0, :], cols_ref[0, :], axis=0)         # VMEM gather
+    ranks = rid_ref[0, :]                                      # (L,)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (rwin, ranks.shape[0]), 0)
+              == ranks[None, :])
+    if semiring is None:                                       # plus-times
+        prods = vals_ref[0, :] * xg                            # (L,)
+        part_ref[0, :] = jax.lax.dot_general(
+            onehot.astype(prods.dtype), prods[:, None],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )[:, 0].astype(part_ref.dtype)
+    else:
+        # generalized segment-⊕: mask each rank's slots (identity
+        # elsewhere) and ⊕-reduce on the VPU; absorbing pad slots
+        # contribute the identity wherever their rank lands.
+        prods = semiring.mul(vals_ref[0, :], xg)               # (L,)
+        masked = jnp.where(onehot, prods[None, :],
+                           jnp.asarray(semiring.identity, prods.dtype))
+        part_ref[0, :] = semiring.reduce(masked,
+                                         axis=1).astype(part_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("rwin", "interpret", "semiring"))
+def spmv_csr_seg_pallas(vals: jax.Array, cols: jax.Array, rid: jax.Array,
+                        x: jax.Array, rwin: int, interpret: bool = True,
+                        semiring=None) -> jax.Array:
+    """Partial pass: returns (S, rwin) per-segment rank partials.
+
+    vals/cols/rid : (S, L) -- equal-nnz segments of the flat stream
+    x             : (n_pad,) padded so every col index is in range
+    rwin          : static rank-window width (max distinct rows touched by
+                    any one segment, rounded up to a lane multiple)
+    semiring      : None or a `repro.graph.semiring.Semiring`; None (and
+                    plus_times) takes the byte-identical MXU one-hot path
+
+    The caller finishes with a segment-⊕ of the partials at
+    `row_ids[s, r]` -- the carry-out merge across segment boundaries.
+    """
+    if semiring is not None and semiring.name == "plus_times":
+        semiring = None                 # one compiled path, bit-identical
+    s_dim, seg_len = vals.shape
+    xp = x.reshape(1, -1)
+    partials = pl.pallas_call(
+        functools.partial(_kernel, rwin=rwin, semiring=semiring),
+        grid=(s_dim,),
+        in_specs=[
+            pl.BlockSpec((1, seg_len), lambda s: (s, 0)),
+            pl.BlockSpec((1, seg_len), lambda s: (s, 0)),
+            pl.BlockSpec((1, seg_len), lambda s: (s, 0)),
+            # whole x pinned: block index constant across the grid
+            pl.BlockSpec((1, xp.shape[1]), lambda s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rwin), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_dim, rwin), vals.dtype),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+    )(vals, cols, rid, xp)
+    return partials

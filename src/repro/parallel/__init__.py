@@ -16,12 +16,14 @@ The sweep harness with the thread axis lives in `repro.telemetry.sweep`
 (`scaling_report`, `scaling_gap_report`); the hardware-side sharded
 execution path is `repro.distributed.spmv`.
 """
-from .engine import ParallelRun, ParallelSpec, partitioned_traces, replay_parallel
+from .engine import (ParallelRun, ParallelSpec, nnz_partitioned_traces,
+                     partitioned_traces, replay_parallel)
 from .scaling import (ParallelMetrics, parallel_metrics, simulate_parallel,
                       thread_cycles)
 
 __all__ = [
-    "ParallelRun", "ParallelSpec", "partitioned_traces", "replay_parallel",
+    "ParallelRun", "ParallelSpec", "partitioned_traces",
+    "nnz_partitioned_traces", "replay_parallel",
     "ParallelMetrics", "parallel_metrics", "simulate_parallel",
     "thread_cycles",
 ]

@@ -119,6 +119,31 @@ def partitioned_traces(csr, partition, machine,
     return [trace[cuts[t]:cuts[t + 1]] for t in range(len(starts) - 1)]
 
 
+def nnz_partitioned_traces(csr, partition, machine,
+                           trace: Optional[np.ndarray] = None
+                           ) -> List[np.ndarray]:
+    """Per-thread slices of the global SpMV trace at *nonzero* cuts
+    (`core.partition.NnzPartition`, the merge-CSR execution).
+
+    A cut at nonzero c inside row r starts the slice at c's own trace
+    position 2*(r+1) + 3*c (the carry-out merge reconciles the shared
+    row); a cut on a row boundary starts at that row's header 2*r + 3*c,
+    so trailing empty rows stay with the preceding thread.  Concatenating
+    the slices in part order reproduces the single-stream trace exactly.
+    """
+    if trace is None:
+        trace = spmv_address_trace(csr, machine)
+    indptr = np.asarray(csr.indptr, dtype=np.int64)
+    cuts = np.asarray(partition.cuts, dtype=np.int64)
+    # row containing each cut: last r with indptr[r] <= cut
+    r = np.searchsorted(indptr, cuts, side="right") - 1
+    on_boundary = indptr[r] == cuts
+    pos = np.where(on_boundary, 2 * r + 3 * cuts, 2 * (r + 1) + 3 * cuts)
+    # leading empty rows sit before the first cut's row: thread 0 owns them
+    pos[0] = 0
+    return [trace[pos[t]:pos[t + 1]] for t in range(len(cuts) - 1)]
+
+
 def _socket_of(thread: int, machine) -> int:
     """Compact affinity with SMT-style wraparound: threads fill socket 0's
     cores first, then socket 1's, then oversubscribe from socket 0 again."""

@@ -8,14 +8,14 @@ decision chain the per-call stack used to repeat on every multiply:
   structure.analyze -> format -> conversion -> pre-padded kernel
   layout -> SpmvPlan.
 
-Candidate selection is predictor-driven, not structure-heuristic-driven:
-each candidate's *permuted access stream* is scored by the same models
-the telemetry/parallel subsystems report with, and the ordering with the
-best predicted throughput wins.  The format is then read off the
-winner's permuted structure (DIA for recovered bands, BELL for block
-density, CSR otherwise) — so what the predictor scored is exactly the
-stream that format will exploit.  Forcing `format=` skips the O(nnz)
-structure analysis altogether.
+Candidates are (format, reordering) pairs, enumerated in sorted name
+order so plan choice is deterministic across runs.  Each reordering
+candidate's *permuted access stream* is scored by the same models the
+telemetry/parallel subsystems report with, and its format is read off
+its permuted structure (DIA for recovered bands, BELL for block density,
+HYB/segmented-CSR for power-law nnz dispersion, CSR otherwise) — so what
+the predictor scored is exactly the stream that format will exploit.
+Forcing `format=` skips the O(nnz) structure analysis altogether.
 
 Predictors (`predictor=`):
 
@@ -40,7 +40,7 @@ from typing import Dict, Optional
 
 from repro.core import structure
 from repro.core.cache_model import SANDY_BRIDGE, MachineModel
-from repro.core.formats import BELL, CSR, DIA, ELL
+from repro.core.formats import BELL, CSR, DIA, ELL, HYB
 from repro.kernels import _layout as kl
 
 from .fingerprint import matrix_fingerprint
@@ -57,33 +57,64 @@ REPLAY_NNZ_MAX = 16384
 REORDER_MARGIN = 0.02
 
 
-def choose_format(report) -> str:
+# Power-law detection for the nnz-balanced formats: above this nnz/row
+# coefficient of variation an unstructured matrix routes to the hybrid
+# row split (R-MAT sits at 1.7-3.2 across 2^8..2^12; uniform random at
+# ~0.37, FD at 0.0).  Between SEG_MIN_CV and HYB_MIN_CV, a multithreaded
+# plan takes the segmented (merge) CSR layout: rows are dispersed enough
+# that row partitions imbalance but not enough to justify a row split.
+HYB_MIN_CV = 1.0
+SEG_MIN_CV = 0.5
+
+# Semiring plans need absorbing padding, which the dense-footprint
+# formats (DIA bands, BELL tiles) cannot express -- see graph.semiring.
+SEMIRING_FORMATS = ("csr", "csr-seg", "ell", "hyb")
+
+
+def choose_format(report, threads: int = 1,
+                  semiring_safe: bool = False) -> str:
     """Format name for a structure report (the dispatch rule that used to
-    live inline in `core.spmv.auto_format`)."""
-    if report.kind == "banded" and report.n_distinct_offsets <= 64:
-        return "dia"
-    if report.kind == "blocked":
-        return "bell"
-    return "csr"
+    live inline in `core.spmv.auto_format`).
+
+    `threads` biases unstructured dispersion toward the nnz-balanced
+    segmented layout (row partitions imbalance at scale);
+    `semiring_safe` restricts the choice to absorbing-pad formats
+    (`SEMIRING_FORMATS`), with ELL replacing the dense-footprint picks.
+    """
+    if not semiring_safe:
+        if report.kind == "banded" and report.n_distinct_offsets <= 64:
+            return "dia"
+        if report.kind == "blocked":
+            return "bell"
+    if report.kind == "unstructured":
+        if report.row_nnz_cv >= HYB_MIN_CV:
+            return "hyb"                # power-law: split the hub rows off
+        if threads > 1 and report.row_nnz_cv >= SEG_MIN_CV:
+            return "csr-seg"            # dispersed: balance by nonzeros
+    return "ell" if semiring_safe else "csr"
 
 
 def convert(csr: CSR, format_name: str, fill: float = 0.0):
     """Convert a CSR to the named storage format.  `fill` is the padding
-    value for layouts that materialize padding slots (ELL): 0.0 for
-    plus-times, the semiring's absorbing element otherwise."""
+    value for layouts that materialize padding slots (ELL, the HYB light
+    partition): 0.0 for plus-times, the semiring's absorbing element
+    otherwise.  'csr-seg' is a kernel layout over the CSR container, not
+    a distinct storage format, so it converts to the CSR itself."""
     if format_name == "dia":
         return DIA.from_csr(csr)
     if format_name == "bell":
         return BELL.from_csr(csr)
     if format_name == "ell":
         return ELL.from_csr(csr, fill=fill)
-    if format_name == "csr":
+    if format_name == "hyb":
+        return HYB.from_csr(csr, fill=fill)
+    if format_name in ("csr", "csr-seg"):
         return csr
     raise ValueError(f"unknown format {format_name!r}")
 
 
 def _prepare(container, format_name: str, *, bn: int, bm: int,
-             n_stripes: int, pad_value: float = 0.0):
+             n_stripes: int, seg_len: int = 512, pad_value: float = 0.0):
     """Pre-padded kernel layout for the chosen container (plan-build time;
     `SpmvPlan.execute` replays it with zero matrix-side work)."""
     if format_name == "dia":
@@ -94,6 +125,12 @@ def _prepare(container, format_name: str, *, bn: int, bm: int,
         return kl.prepare_ell(container, bm=bm, pad_value=pad_value)
     if format_name == "csr":
         return kl.prepare_csr(container, n_stripes=n_stripes, bm=bm,
+                              pad_value=pad_value)
+    if format_name == "csr-seg":
+        return kl.prepare_csr_seg(container, seg_len=seg_len,
+                                  pad_value=pad_value)
+    if format_name == "hyb":
+        return kl.prepare_hyb(container, seg_len=seg_len, bm=bm,
                               pad_value=pad_value)
     raise ValueError(f"unknown format {format_name!r}")
 
@@ -156,6 +193,7 @@ def compile(matrix: CSR, *,                       # noqa: A001 (plan.compile)
             interpret: Optional[bool] = None,
             semiring: str = "plus_times",
             bn: int = 512, bm: int = 128, n_stripes: int = 1,
+            seg_len: int = 512,
             keep_csr: bool = True,
             sample_rows: Optional[int] = 65536) -> SpmvPlan:
     """Compile a CSR matrix into a frozen `SpmvPlan`.
@@ -165,13 +203,17 @@ def compile(matrix: CSR, *,                       # noqa: A001 (plan.compile)
                path) over `partition` (default `rowblock_equal`)
     reorder    'auto' (predictor picks none-vs-RCM) | 'none'/None | a
                strategy name/callable | a concrete Reordering
-    format     force a storage format ('dia'|'bell'|'ell'|'csr');
-               default reads it off each candidate's permuted structure
+    format     force a storage format
+               ('dia'|'bell'|'ell'|'csr'|'csr-seg'|'hyb'); default reads
+               it off each candidate's permuted structure -- power-law
+               dispersion (row_nnz_cv) routes to the nnz-balanced 'hyb'
+               and 'csr-seg' layouts, see `choose_format`
+    seg_len    nonzeros per segment for the 'csr-seg'/'hyb' layouts
     semiring   name (or `Semiring`) of the (⊕, ⊗) pair the plan executes
-               under ('plus_times' default).  Non-plus-times plans use
-               absorbing-padded ELL/CSR layouts (default ELL: fixed
-               width suits iterated analytics); the reordering/predictor
-               machinery is semiring-independent (same access stream)
+               under ('plus_times' default).  Non-plus-times plans are
+               restricted to the absorbing-pad formats
+               (`SEMIRING_FORMATS`); the reordering/predictor machinery
+               is semiring-independent (same access stream)
     keep_csr   retain the permuted CSR on the plan (needed for
                `execute_many`'s SpMM path and telemetry trace replay)
     """
@@ -197,13 +239,12 @@ def compile(matrix: CSR, *,                       # noqa: A001 (plan.compile)
     if sr is not None:
         if mesh is not None:
             raise ValueError("sharded plans are plus-times only")
-        if format is None:
-            format = "ell"              # fixed-width: the analytics default
-        elif format not in ("ell", "csr"):
+        if format is not None and format not in SEMIRING_FORMATS:
             raise ValueError(
-                f"semiring {semiring!r} requires format 'ell' or 'csr' "
-                f"(dense-footprint {format!r} stores absent entries as "
-                "0.0, which is only absorbing under plus_times)")
+                f"semiring {semiring!r} requires a format in "
+                f"{SEMIRING_FORMATS} (dense-footprint {format!r} stores "
+                "absent entries as 0.0, which is only absorbing under "
+                "plus_times)")
 
     if predictor == "none" and reorder == "auto":
         # no scoring requested, so don't build candidates that could only
@@ -216,15 +257,40 @@ def compile(matrix: CSR, *,                       # noqa: A001 (plan.compile)
                    for label, r in cands.items()}
     stats["reorder_s"] = time.perf_counter() - t0
 
+    # Candidate enumeration: one (format, reordering) pair per reordering
+    # candidate, the format read off that candidate's permuted structure
+    # (forcing `format=` skips the O(nnz) analysis and pins the pair's
+    # format).  The list is sorted by (format, reordering) name so the
+    # enumeration -- and every tie-break below -- is deterministic across
+    # runs and processes, keeping fingerprint-salted cache entries stable.
+    fmt_by: Dict[str, str] = {}
+    report_by: Dict[str, object] = {}
+    t0 = time.perf_counter()
+    for label in sorted(cands):
+        if format is not None:
+            fmt_by[label], report_by[label] = format, None
+        else:
+            rep = structure.analyze(permuted_by[label],
+                                    sample_rows=sample_rows)
+            report_by[label] = rep
+            fmt_by[label] = choose_format(rep, threads=threads,
+                                          semiring_safe=sr is not None)
+    if format is None:
+        stats["analyze_s"] = time.perf_counter() - t0
+    ordered = sorted(cands, key=lambda lab: (fmt_by[lab], lab))
+
     t0 = time.perf_counter()
     predicted: Dict[str, Dict] = {}
-    if predictor == "none" or len(cands) == 1:
-        chosen = next(iter(cands))
+    if predictor == "none" or len(ordered) == 1:
+        chosen = ordered[0]
     else:
-        for label, permuted in permuted_by.items():
-            predicted[label] = _predict(permuted, threads, machine,
+        for label in ordered:
+            predicted[label] = _predict(permuted_by[label], threads, machine,
                                         parallel_spec, predictor)
-        chosen = max(predicted, key=lambda k: predicted[k]["gflops"])
+        chosen = ordered[0]
+        for label in ordered[1:]:       # strict >: ties keep sorted order
+            if predicted[label]["gflops"] > predicted[chosen]["gflops"]:
+                chosen = label
         if chosen != "none" and "none" in predicted:
             # reordered winners must clear the transport margin
             bar = predicted["none"]["gflops"] * (1.0 + REORDER_MARGIN)
@@ -233,16 +299,7 @@ def compile(matrix: CSR, *,                       # noqa: A001 (plan.compile)
     stats["predict_s"] = time.perf_counter() - t0
 
     reordering, permuted = cands[chosen], permuted_by[chosen]
-    # the structure report only exists to pick a format; a forced format
-    # skips the O(nnz) analysis entirely (plan.report stays None)
-    if format is not None:
-        report = None
-        format_name = format
-    else:
-        t0 = time.perf_counter()
-        report = structure.analyze(permuted, sample_rows=sample_rows)
-        stats["analyze_s"] = time.perf_counter() - t0
-        format_name = choose_format(report)
+    report, format_name = report_by[chosen], fmt_by[chosen]
 
     if mesh is not None:
         return _compile_sharded(fp, permuted, reordering, report, mesh,
@@ -257,7 +314,7 @@ def compile(matrix: CSR, *,                       # noqa: A001 (plan.compile)
 
     t0 = time.perf_counter()
     prep = _prepare(container, format_name, bn=bn, bm=bm,
-                    n_stripes=n_stripes,
+                    n_stripes=n_stripes, seg_len=seg_len,
                     pad_value=pad_value) if use_pallas else None
     stats["prepare_s"] = time.perf_counter() - t0
 
@@ -294,7 +351,7 @@ def plan_for_container(matrix, interpret: Optional[bool] = None) -> SpmvPlan:
     reordering decision — the caller chose the format): just the one-time
     kernel layout prep.  This is what `core.spmv.spmv` caches so repeated
     per-call dispatch stops re-padding the matrix."""
-    names = {DIA: "dia", BELL: "bell", ELL: "ell", CSR: "csr"}
+    names = {DIA: "dia", BELL: "bell", ELL: "ell", CSR: "csr", HYB: "hyb"}
     format_name = names[type(matrix)]
     prep = _prepare(matrix, format_name, bn=512, bm=128, n_stripes=1)
     return SpmvPlan(

@@ -33,7 +33,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import BELL, CSR, DIA, ELL
+from repro.core.formats import BELL, CSR, DIA, ELL, HYB
 from repro.kernels import _layout as kl
 
 
@@ -45,10 +45,10 @@ def _jnp_kernels():
     """Container type -> vectorized jnp reference kernel (late import:
     `core.spmv` is a thin client of this package)."""
     from repro.core.spmv import (spmv_bell_jnp, spmv_csr_jnp, spmv_dia_jnp,
-                                 spmv_ell_jnp)
+                                 spmv_ell_jnp, spmv_hyb_jnp)
 
     return {CSR: spmv_csr_jnp, ELL: spmv_ell_jnp,
-            BELL: spmv_bell_jnp, DIA: spmv_dia_jnp}
+            BELL: spmv_bell_jnp, DIA: spmv_dia_jnp, HYB: spmv_hyb_jnp}
 
 
 @dataclasses.dataclass
@@ -60,7 +60,7 @@ class SpmvPlan:
     """
 
     fingerprint: str                 # digest of the ORIGINAL matrix
-    format_name: str                 # 'dia' | 'bell' | 'ell' | 'csr' | 'ell-sharded'
+    format_name: str                 # 'dia'|'bell'|'ell'|'csr'|'csr-seg'|'hyb'|'ell-sharded'
     container: Any                   # converted format container (post-reorder)
     prep: Any                        # Prepared* / PaddedCSR / ShardedELL layout
     reordering: Any = None           # repro.reorder.Reordering or None
@@ -127,12 +127,14 @@ class SpmvPlan:
             return spmv_row_sharded_prepared(self.prep, x, self.mesh,
                                              interpret=interpret)
         if sr is not None:
-            if self.format_name not in ("ell", "csr"):
+            if self.format_name not in ("ell", "csr", "csr-seg", "hyb"):
                 raise ValueError(
-                    f"semiring {self.semiring!r} plans support ell/csr, "
-                    f"not {self.format_name!r}")
+                    f"semiring {self.semiring!r} plans support "
+                    f"ell/csr/csr-seg/hyb, not {self.format_name!r}")
             runners = {"ell": kl.spmv_ell_prepared,
-                       "csr": kl.spmv_csr_prepared}
+                       "csr": kl.spmv_csr_prepared,
+                       "csr-seg": kl.spmv_csr_seg_prepared,
+                       "hyb": kl.spmv_hyb_prepared}
             return runners[self.format_name](self.prep, x,
                                              interpret=interpret, semiring=sr)
         runners = {
@@ -140,6 +142,8 @@ class SpmvPlan:
             "bell": kl.spmv_bell_prepared,
             "ell": kl.spmv_ell_prepared,
             "csr": kl.spmv_csr_prepared,
+            "csr-seg": kl.spmv_csr_seg_prepared,
+            "hyb": kl.spmv_hyb_prepared,
         }
         return runners[self.format_name](self.prep, x, interpret=interpret)
 
@@ -207,13 +211,20 @@ class SpmvPlan:
     def address_trace(self, machine):
         """The SpMV demand-address trace of the planned (permuted) matrix,
         computed once per machine and cached — telemetry sweeps replay this
-        one trace across the whole mechanism/thread grid."""
+        one trace across the whole mechanism/thread grid.
+
+        The trace is FORMAT-AWARE: a 'hyb' plan's trace interleaves the
+        light row-major stream with the column-sorted heavy stream (the
+        locality the hybrid split buys), a 'csr-seg' plan reuses the flat
+        CSR stream (its win is thread balance, not stream shape)."""
         if self.csr is None:
             raise ValueError("plan was compiled with keep_csr=False; "
                              "no CSR retained for trace replay")
         if machine not in self._traces:
-            from repro.telemetry.hierarchy import spmv_address_trace
-            self._traces[machine] = spmv_address_trace(self.csr, machine)
+            from repro.telemetry.hierarchy import format_address_trace
+            self._traces[machine] = format_address_trace(
+                self.csr, self.format_name, machine,
+                container=self.container)
         return self._traces[machine]
 
     # -- reporting ----------------------------------------------------------

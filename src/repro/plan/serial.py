@@ -24,7 +24,7 @@ import msgpack
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.core.formats import BELL, CSR, DIA, ELL
+from repro.core.formats import BELL, CSR, DIA, ELL, HYB
 from repro.core.structure import StructureReport
 from repro.kernels import _layout as kl
 
@@ -61,6 +61,11 @@ def _prep_knobs(plan: SpmvPlan) -> Dict:
         return {"bm": int(p.data.shape[1])}
     if isinstance(p, kl.PaddedCSR):
         return {"bm": p.bm, "n_stripes": int(p.vals.shape[0])}
+    if isinstance(p, kl.PreparedSegCSR):
+        return {"seg_len": p.seg_len}
+    if isinstance(p, kl.PreparedHYB):
+        return {"seg_len": p.heavy.seg_len,
+                "bm": int(p.light.data.shape[1])}
     return {}
 
 
@@ -98,6 +103,13 @@ def plan_state(plan: SpmvPlan) -> Dict:
         meta["container"] = {"type": "ell", "n_rows": c.n_rows,
                              "n_cols": c.n_cols, "max_nnz": c.max_nnz}
         state["container"] = {"data": c.data, "indices": c.indices}
+    elif isinstance(c, HYB):
+        meta["container"] = {"type": "hyb", "n_rows": c.n_rows,
+                             "n_cols": c.n_cols, "threshold": c.threshold,
+                             "light_width": c.light_width}
+        state["container"] = {"data": c.data, "indices": c.indices,
+                              "hvals": c.hvals, "hrows": c.hrows,
+                              "hcols": c.hcols}
     elif isinstance(c, CSR) or c is None:
         # CSR containers are stored once, under "csr" (below)
         meta["container"] = {"type": "csr" if isinstance(c, CSR) else None}
@@ -167,6 +179,14 @@ def plan_from_state(state: Dict, mesh=None) -> SpmvPlan:
                         n_rows=int(cmeta["n_rows"]),
                         n_cols=int(cmeta["n_cols"]),
                         max_nnz=int(cmeta["max_nnz"]))
+    elif ctype == "hyb":
+        g = state["container"]
+        container = HYB(data=g["data"], indices=g["indices"],
+                        hvals=g["hvals"], hrows=g["hrows"],
+                        hcols=g["hcols"], n_rows=int(cmeta["n_rows"]),
+                        n_cols=int(cmeta["n_cols"]),
+                        threshold=int(cmeta["threshold"]),
+                        light_width=int(cmeta["light_width"]))
     elif ctype == "csr":
         container = csr
     else:
@@ -203,6 +223,7 @@ def plan_from_state(state: Dict, mesh=None) -> SpmvPlan:
                         bn=int(knobs.get("bn", 512)),
                         bm=int(knobs.get("bm", 128)),
                         n_stripes=int(knobs.get("n_stripes", 1)),
+                        seg_len=int(knobs.get("seg_len", 512)),
                         pad_value=pad_value)
     else:
         prep = None

@@ -23,7 +23,8 @@ from . import events, hierarchy, report, sweep, topdown
 from .events import EventCounters, known_events, register_event
 from .hierarchy import (CacheLevel, Hierarchy, HierarchySpec, MissCache,
                         SequentialPrefetcher, SetAssocCache, StreamBuffers,
-                        VictimCache, spmv_address_trace)
+                        VictimCache, format_address_trace, hyb_address_trace,
+                        spmv_address_trace)
 from .report import (graph_gap_report, graph_report, plan_cache_report,
                      scaling_gap_report, scaling_report)
 from .sweep import GraphPoint, ScalingPoint, graph_sweep, scaling_sweep
@@ -34,7 +35,8 @@ __all__ = [
     "EventCounters", "known_events", "register_event",
     "CacheLevel", "Hierarchy", "HierarchySpec", "MissCache",
     "SequentialPrefetcher", "SetAssocCache", "StreamBuffers", "VictimCache",
-    "spmv_address_trace", "MetricNode", "topdown_tree", "topdown_summary",
+    "spmv_address_trace", "format_address_trace", "hyb_address_trace",
+    "MetricNode", "topdown_tree", "topdown_summary",
     "ScalingPoint", "scaling_sweep", "scaling_report", "scaling_gap_report",
     "GraphPoint", "graph_sweep", "graph_report", "graph_gap_report",
     "plan_cache_report",

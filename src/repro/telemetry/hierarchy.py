@@ -395,6 +395,100 @@ def spmv_address_trace(csr, machine) -> np.ndarray:
     return trace
 
 
+def hyb_address_trace(hyb, machine, light_counts=None) -> np.ndarray:
+    """The demand stream of the hybrid row-split execution: the light ELL
+    launch (row-major over the (n_rows, light_width) slab) followed by
+    the heavy launch over the column-sorted COO stream.  Because the
+    heavy stream is column-sorted, its x gathers ascend -- hub-row
+    gathers turn from a random walk into one streaming pass, which is
+    the locality the hybrid split buys.  Regions are disjoint with the
+    same 16-line guard layout as `spmv_address_trace`.
+
+    `light_counts` (per-row count of *real* light entries, 0 for heavy
+    rows) restricts the light stream to demand accesses at slab
+    addresses -- the accounting `spmv_address_trace` uses for every
+    other format, where padding is lane fill the vector unit streams
+    for free, not a gathered demand miss.  Without it the full slab is
+    streamed, padding slots priced like real ones (the conservative raw
+    kernel stream).  `format_address_trace` always passes the counts,
+    so planned traces are comparable across formats."""
+    lb = machine.line_bytes
+    ebytes, ibytes = machine.elem_bytes, machine.idx_bytes
+    n, w = hyb.n_rows, hyb.light_width
+    hnnz = int(hyb.hvals.shape[0])
+    lidx = np.asarray(hyb.indices, dtype=np.int64).reshape(-1)
+    hcols = np.asarray(hyb.hcols, dtype=np.int64)
+    hrows = np.asarray(hyb.hrows, dtype=np.int64)
+
+    x_base = 0
+    x_lines = -(-hyb.n_cols * ebytes // lb)
+    lval_base = x_base + x_lines + 16
+    lval_lines = -(-n * w * ebytes // lb)
+    lidx_base = lval_base + lval_lines + 16
+    lidx_lines = -(-n * w * ibytes // lb)
+    y_base = lidx_base + lidx_lines + 16
+    y_lines = -(-n * ebytes // lb)
+    hval_base = y_base + y_lines + 16
+    hval_lines = -(-hnnz * ebytes // lb)
+    hrow_base = hval_base + hval_lines + 16
+    hrow_lines = -(-hnnz * ibytes // lb)
+    hcol_base = hrow_base + hrow_lines + 16
+
+    # light launch: per row: y, then per real slot: value, index, x[index]
+    rows = np.arange(n, dtype=np.int64)
+    if light_counts is None:
+        counts = np.full(n, w, dtype=np.int64)
+    else:
+        counts = np.minimum(np.asarray(light_counts, dtype=np.int64), w)
+    total = int(counts.sum())
+    cum0 = np.concatenate([[0], np.cumsum(counts)[:-1]]) if n else \
+        np.zeros(0, dtype=np.int64)
+    row_of = np.repeat(rows, counts)                 # row of light entry j
+    inner = np.arange(total, dtype=np.int64) - cum0[row_of] \
+        if total else np.zeros(0, dtype=np.int64)
+    slot = row_of * w + inner                        # row-major slab slot
+    light = np.empty(n + 3 * total, dtype=np.int64)
+    light[rows + 3 * cum0] = y_base + (rows * ebytes) // lb
+    body = row_of + 1 + 3 * np.arange(total, dtype=np.int64)
+    light[body] = lval_base + (slot * ebytes) // lb
+    light[body + 1] = lidx_base + (slot * ibytes) // lb
+    light[body + 2] = x_base + (lidx[slot] * ebytes) // lb
+
+    # heavy launch: per nonzero: value, row id, col id, x[col] (ascending)
+    p = np.arange(hnnz, dtype=np.int64)
+    heavy = np.empty(4 * hnnz, dtype=np.int64)
+    heavy[0::4] = hval_base + (p * ebytes) // lb
+    heavy[1::4] = hrow_base + (p * ibytes) // lb
+    heavy[2::4] = hcol_base + (p * ibytes) // lb
+    heavy[3::4] = x_base + (hcols * ebytes) // lb
+    # carry merge: one y combine per distinct heavy row
+    hr = np.unique(hrows)
+    tail = y_base + (hr * ebytes) // lb
+    return np.concatenate([light, heavy, tail])
+
+
+def format_address_trace(csr, format_name: str, machine,
+                         container=None) -> np.ndarray:
+    """Format-aware demand trace for a planned matrix.
+
+    'hyb' plans get the split light/heavy stream (`hyb_address_trace` of
+    the plan's container, rebuilt from the CSR if absent); every other
+    format -- including 'csr-seg', whose win is thread balance, not
+    stream shape -- replays the flat CSR stream of `spmv_address_trace`.
+    """
+    if format_name == "hyb":
+        from repro.core.formats import HYB
+
+        if not isinstance(container, HYB):
+            container = HYB.from_csr(csr)
+        lengths = csr.row_lengths()
+        light_counts = np.where(lengths > container.threshold, 0, lengths) \
+            if len(lengths) else lengths
+        return hyb_address_trace(container, machine,
+                                 light_counts=light_counts)
+    return spmv_address_trace(csr, machine)
+
+
 @dataclasses.dataclass(frozen=True)
 class HierarchySpec:
     """Declarative description of a hierarchy (what sweeps iterate over)."""

@@ -204,6 +204,45 @@ def scaling_gap_report(points: Sequence[ScalingPoint]) -> str:
     return "\n".join(lines)
 
 
+def partition_gap_report(points: Sequence[ScalingPoint]) -> str:
+    """What nnz-balanced (merge) partitioning buys over row-granular
+    splits, per (kind, size, reorder, thread count).
+
+    Feed it points from two `scaling_sweep` runs over the same grid --
+    one with `partition='balanced'` (row blocks split on the nnz CDF:
+    the best a row-granular split can do) and one with
+    `partition='merge'` (equal nonzero segments that may cut mid-row:
+    the segmented/merge-CSR execution).  Per cell:
+
+        time_ratio = balanced.time / merge.time   (> 1: merge wins)
+        imbalance columns show *why*: row-granular splits cannot
+        balance hub rows, merge is within one nonzero of perfect.
+
+    FD rows are the control: near-uniform row lengths mean balanced is
+    already near-perfect and the ratio should sit at ~1.0; the win
+    concentrates on R-MAT, whose hub rows defeat any row-granular cut.
+    """
+    by = {(p.kind, p.log2n, p.reorder, p.threads, p.partition): p
+          for p in points}
+    keys = sorted({(p.kind, p.log2n, p.reorder, p.threads)
+                   for p in points if p.threads > 1})
+    lines = ["# nnz-balanced (merge) vs row-granular (balanced) partitioning",
+             "kind,log2n,reorder,threads,bal_imbalance,merge_imbalance,"
+             "bal_time_us,merge_time_us,time_ratio"]
+    for (kind, log2n, rlabel, threads) in keys:
+        bal = by.get((kind, log2n, rlabel, threads, "balanced"))
+        mrg = by.get((kind, log2n, rlabel, threads, "merge"))
+        if bal is None or mrg is None:
+            continue
+        ratio = bal.metrics.time_s / max(mrg.metrics.time_s, 1e-30)
+        lines.append(",".join([
+            kind, str(log2n), rlabel, str(threads),
+            f"{bal.imbalance:.3f}", f"{mrg.imbalance:.3f}",
+            f"{bal.metrics.time_s * 1e6:.2f}",
+            f"{mrg.metrics.time_s * 1e6:.2f}", f"{ratio:.3f}"]))
+    return "\n".join(lines)
+
+
 def graph_report(points: Sequence[GraphPoint]) -> str:
     """One CSV row per (matrix, analytic) from a `sweep.graph_sweep`:
     iteration count, cold/warm/total cycles-per-nnz, cold vs warm L2

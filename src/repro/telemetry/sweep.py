@@ -262,9 +262,16 @@ def scaling_sweep(log2ns: Sequence[int] = (12,),
     (computed even when 1 is not in `threads_list`).  `reorderings` has
     `run_sweep` semantics, so "how much of the scaling gap does RCM
     close?" is one sweep: `reorderings={"none": None, "rcm": reorder.rcm}`.
+
+    `partition` is 'equal' (row counts), 'balanced' (row blocks split on
+    the nnz CDF) or 'merge' (the segmented/merge-CSR execution: equal
+    *nonzero* segments that may cut mid-row, sliced from the same global
+    trace by `parallel.nnz_partitioned_traces`).
     """
-    from repro.core.partition import rowblock_balanced, rowblock_equal
-    from repro.parallel import ParallelSpec, simulate_parallel
+    from repro.core.partition import (nnz_split, rowblock_balanced,
+                                      rowblock_equal)
+    from repro.parallel import (ParallelSpec, nnz_partitioned_traces,
+                                simulate_parallel)
 
     spec = spec if spec is not None else ParallelSpec()
     part_fn = rowblock_balanced if partition == "balanced" else rowblock_equal
@@ -283,9 +290,16 @@ def scaling_sweep(log2ns: Sequence[int] = (12,),
                 tl = sorted(set(threads_list) | {1})
                 t1_time = None
                 for threads in tl:
-                    part = part_fn(csr, threads)
-                    _, m = simulate_parallel(csr, part, machine, spec,
-                                             sweeps=sweeps, trace=trace)
+                    if partition == "merge":
+                        part = nnz_split(csr, threads)
+                        slices = nnz_partitioned_traces(csr, part, machine,
+                                                        trace=trace)
+                        _, m = simulate_parallel(csr, part, machine, spec,
+                                                 sweeps=sweeps, traces=slices)
+                    else:
+                        part = part_fn(csr, threads)
+                        _, m = simulate_parallel(csr, part, machine, spec,
+                                                 sweeps=sweeps, trace=trace)
                     if threads == 1:
                         t1_time = m.time_s
                     if threads not in threads_list:
@@ -316,6 +330,7 @@ class GraphPoint:
     n_iters: int
     converged: bool
     iters: Tuple              # TopdownSummary per iteration
+    format_name: str = "csr"  # the plan's chosen container format
 
     @property
     def cold_cycles_per_nnz(self) -> float:
@@ -334,16 +349,17 @@ class GraphPoint:
 
     def row(self) -> List:
         return [self.kind, self.log2n, self.nnz, self.analytic,
-                self.semiring, self.n_iters, int(self.converged),
+                self.semiring, self.format_name, self.n_iters,
+                int(self.converged),
                 self.cold_cycles_per_nnz, self.warm_cycles_per_nnz,
                 self.total_cycles_per_nnz,
                 self.iters[0].l2_mpki, self.iters[-1].l2_mpki]
 
     @staticmethod
     def header() -> List[str]:
-        return ["kind", "log2n", "nnz", "analytic", "semiring", "n_iters",
-                "converged", "cold_cyc_nnz", "warm_cyc_nnz", "total_cyc_nnz",
-                "l2_mpki_cold", "l2_mpki_warm"]
+        return ["kind", "log2n", "nnz", "analytic", "semiring", "format",
+                "n_iters", "converged", "cold_cyc_nnz", "warm_cyc_nnz",
+                "total_cyc_nnz", "l2_mpki_cold", "l2_mpki_warm"]
 
 
 def graph_sweep(log2ns: Sequence[int] = (10,),
@@ -351,7 +367,8 @@ def graph_sweep(log2ns: Sequence[int] = (10,),
                 analytics: Sequence[str] = ("pagerank", "bfs", "sssp"),
                 spec: Optional[HierarchySpec] = None,
                 machine: MachineModel = SANDY_BRIDGE,
-                seed: int = 0, max_iters: int = 64) -> List[GraphPoint]:
+                seed: int = 0, max_iters: int = 64,
+                format: Optional[str] = None) -> List[GraphPoint]:
     """Whole-analytic axis: run each `repro.graph` driver to convergence,
     then replay its plan's memoized address trace once per executed
     iteration through a warm hierarchy.  The per-iteration summaries show
@@ -362,6 +379,12 @@ def graph_sweep(log2ns: Sequence[int] = (10,),
     vertex (a hub -- vertex 0 can be edgeless on sparse R-MAT draws);
     pagerank starts from a seeded random restart vector so near-regular
     FD grids don't begin at their own fixpoint.
+
+    `format=None` (default) lets each plan's structure analysis pick the
+    container -- power-law R-MAT auto-routes to the hybrid row split
+    (hyb) -- while an explicit name (e.g. "csr") pins every plan to that
+    format, giving benches a fixed-format baseline to quantify what the
+    nnz-balanced candidates recover.
     """
     from repro.graph import DRIVERS
     from repro.graph.telemetry import iteration_summaries
@@ -376,18 +399,20 @@ def graph_sweep(log2ns: Sequence[int] = (10,),
             for name in analytics:
                 driver = DRIVERS[name]
                 if name in ("bfs", "sssp"):
-                    res = driver(base, source, max_iters=max_iters)
+                    res = driver(base, source, max_iters=max_iters,
+                                 format=format)
                 elif name == "pagerank":
-                    res = driver(base, r0=r0, max_iters=max_iters)
+                    res = driver(base, r0=r0, max_iters=max_iters,
+                                 format=format)
                 else:
-                    res = driver(base, max_iters=max_iters)
+                    res = driver(base, max_iters=max_iters, format=format)
                 iters = tuple(iteration_summaries(
                     res.plan, res.n_iters, machine=machine, spec=spec))
                 points.append(GraphPoint(
                     kind=kind, log2n=log2n, nnz=res.plan.csr.nnz,
                     analytic=name, semiring=res.plan.semiring,
                     n_iters=res.n_iters, converged=res.converged,
-                    iters=iters))
+                    iters=iters, format_name=res.plan.format_name))
     return points
 
 

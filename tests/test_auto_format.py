@@ -7,8 +7,9 @@ import numpy as np
 import pytest
 
 from repro.core import structure
-from repro.core.formats import BELL, CSR, DIA
-from repro.core.generators import banded_matrix, fd_matrix, rmat_matrix
+from repro.core.formats import BELL, CSR, DIA, HYB
+from repro.core.generators import (banded_matrix, fd_matrix, rmat_matrix,
+                                   uniform_random_matrix)
 from repro.core.spmv import auto_format, spmv
 
 
@@ -61,10 +62,25 @@ def test_blocked_dispatches_to_bell():
     _assert_matches_dense(fmt, csr)
 
 
-def test_unstructured_stays_csr():
+def test_power_law_dispatches_to_hyb():
+    """Power-law row lengths (high nnz CV) route to the hybrid row split:
+    hub rows go to the column-sorted heavy stream, the rest stay ELL."""
     csr = rmat_matrix(2048, seed=5)
     rep = structure.analyze(csr)
     assert rep.kind == "unstructured"
+    assert rep.row_nnz_cv >= 1.0        # what triggers the hyb pick
+    fmt = auto_format(csr, rep)
+    assert isinstance(fmt, HYB)
+    _assert_matches_dense(fmt, csr)
+
+
+def test_flat_unstructured_stays_csr():
+    """Unstructured but near-uniform row lengths (low CV): no hub rows to
+    split off, so the dispatcher keeps CSR."""
+    csr = uniform_random_matrix(2048, nnz_per_row=8, seed=5)
+    rep = structure.analyze(csr)
+    assert rep.kind == "unstructured"
+    assert rep.row_nnz_cv < 1.0
     fmt = auto_format(csr, rep)
     assert fmt is csr
     _assert_matches_dense(fmt, csr)
@@ -84,7 +100,8 @@ def test_banded_with_many_offsets_falls_back_to_csr():
 @pytest.mark.parametrize("gen,expected", [
     (lambda: fd_matrix(1024), DIA),
     (lambda: _blocked_matrix(), BELL),
-    (lambda: rmat_matrix(2048, seed=5), CSR),
+    (lambda: rmat_matrix(2048, seed=5), HYB),
+    (lambda: uniform_random_matrix(2048, nnz_per_row=8, seed=5), CSR),
 ])
 def test_all_dispatch_paths_agree_with_dense(gen, expected):
     csr = gen()

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro import plan
-from repro.core.formats import BELL, CSR, DIA, ELL
+from repro.core.formats import BELL, CSR, DIA, ELL, HYB
 from repro.core.generators import banded_matrix, fd_matrix, rmat_matrix
 from repro.core.spmv import spmv
 from repro.kernels import _layout as kl
@@ -106,10 +106,10 @@ def _install_work_counters(monkeypatch, counts):
 
     wrap(_structure, "analyze")
     wrap(CSR, "permute")
-    for cls in (DIA, BELL, ELL):
+    for cls in (DIA, BELL, ELL, HYB):
         wrap(cls, "from_csr")
     for fn in ("prepare_csr", "prepare_dia", "prepare_ell", "prepare_bell",
-               "prepare_ell_shards"):
+               "prepare_ell_shards", "prepare_csr_seg", "prepare_hyb"):
         wrap(kl, fn)
 
 
@@ -122,7 +122,11 @@ def test_cached_execute_zero_work_bit_identical_rmat_4k(monkeypatch):
     y_percall = spmv(csr, x, use_pallas=True, interpret=True)
 
     cache = plan.PlanCache()
-    opts = dict(reorder="none", predictor="analytic", threads=4)
+    # format pinned to csr: bit-identity against the per-call CSR path is
+    # the point here (auto would pick hyb for this matrix; csr-seg/hyb
+    # bit-identity to the CSR kernel is pinned by the property suite)
+    opts = dict(reorder="none", predictor="analytic", threads=4,
+                format="csr")
     p_cold = cache.get_or_compile(csr, **opts)
     p = cache.get_or_compile(csr, **opts)       # warm: cache hit
     assert p is p_cold and cache.hits == 1
@@ -245,7 +249,8 @@ def test_spmv_still_works_under_jit_tracing():
 # serialization through checkpoint
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("kind", ["dia", "csr-reordered", "bell"])
+@pytest.mark.parametrize("kind",
+                         ["dia", "csr-reordered", "bell", "csr-seg", "hyb"])
 def test_plan_checkpoint_roundtrip(tmp_path, kind):
     if kind == "dia":
         p = plan.compile(fd_matrix(256), reorder="none", predictor="none")
@@ -253,9 +258,13 @@ def test_plan_checkpoint_roundtrip(tmp_path, kind):
     elif kind == "bell":
         p = plan.compile(fd_matrix(256), reorder="none", predictor="none",
                          format="bell")
+    elif kind in ("csr-seg", "hyb"):
+        p = plan.compile(rmat_matrix(256, seed=2), reorder="none",
+                         predictor="none", format=kind)
+        assert p.format_name == kind
     else:
         p = plan.compile(rmat_matrix(256, seed=2), reorder="rcm",
-                         predictor="none")
+                         predictor="none", format="csr")
         assert p.format_name == "csr" and p.reordering is not None
 
     d = str(tmp_path / kind)

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import BELL, CSR, DIA
+from repro.core.formats import BELL, CSR, DIA, HYB
 from repro.core.generators import banded_matrix, fd_matrix, rmat_matrix
 from repro.core.spmv import auto_format, pagerank, power_iteration, spmv
 
@@ -11,9 +11,9 @@ def test_auto_format_banded_goes_dia():
     assert isinstance(auto_format(fd_matrix(1024)), DIA)
 
 
-def test_auto_format_unstructured_stays_csr_or_bell():
+def test_auto_format_unstructured_goes_csr_bell_or_hyb():
     fmt = auto_format(rmat_matrix(1024))
-    assert isinstance(fmt, (CSR, BELL))
+    assert isinstance(fmt, (CSR, BELL, HYB))
 
 
 def test_spmv_pallas_path_matches_jnp():
