@@ -13,6 +13,11 @@ EMPIRICAL_MAX_LOG2 = 20        # keep CI fast; paper sweep goes to 26
 PAPER_MIN_LOG2, PAPER_MAX_LOG2 = 11, 26
 THREADS = (1, 2, 4, 8, 16)
 SMOKE = False                  # run.py --smoke: tiny geometry, threads {1,2}
+# Sweep execution knobs (run.py --workers / --resume): sweeps backed by
+# telemetry.runner shard their grids across WORKERS processes and
+# checkpoint/resume completed cells under SWEEP_CKPT when set.
+WORKERS = 1
+SWEEP_CKPT = None
 
 
 def emit(rows: Iterable[Iterable], header: List[str], title: str) -> str:

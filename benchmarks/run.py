@@ -27,6 +27,11 @@ def main(argv=None) -> None:
                     help="reorder+scaling+plan only, tiny geometry, "
                          "threads {1,2}")
     ap.add_argument("--only", default=None, help=f"comma list: {ALL}")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="shard runner-backed sweeps across N processes")
+    ap.add_argument("--resume", default=None, metavar="CKPT_DIR",
+                    help="checkpoint sweep cells under this directory and "
+                         "resume from whatever is already committed there")
     args = ap.parse_args(argv)
 
     from . import common
@@ -35,6 +40,8 @@ def main(argv=None) -> None:
     if args.smoke:
         common.SMOKE = True
         common.EMPIRICAL_MAX_LOG2 = 12
+    common.WORKERS = max(args.workers, 1)
+    common.SWEEP_CKPT = args.resume
 
     default = "reorder,scaling,plan,graph,serve_graph" if args.smoke else ALL
     want = set((args.only or default).split(","))

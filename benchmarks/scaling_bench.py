@@ -74,10 +74,13 @@ def main() -> None:
     log2ns, threads = _config()
     pts = []
     for partition in ("balanced", "merge"):
+        ckpt = (f"{common.SWEEP_CKPT}/scaling-{partition}"
+                if common.SWEEP_CKPT else None)
         pts += scaling_sweep(
             log2ns=log2ns, threads_list=threads, spec=SCALED_PARALLEL,
             partition=partition, sweeps=2,
-            reorderings={"none": None, "rcm": reorder.rcm})
+            reorderings={"none": None, "rcm": reorder.rcm},
+            workers=common.WORKERS, ckpt_dir=ckpt)
     print(scaling_report(pts))
     print()
     # speedup-gap view keyed by (kind, size, reorder, threads): keep it on

@@ -89,7 +89,9 @@ def _request(rng, req_id: int, gid: str, n: int) -> AnalyticRequest:
 
 def _modelled_ms(eng: GraphEngine, results, memo: Dict) -> Dict[int, float]:
     """Per-request modelled service time: nnz x (cold + warm x (iters-1))
-    cycles on the scaled cell, at the machine clock."""
+    cycles on the scaled cell, at the machine clock.  The memo also keeps
+    each plan's warm-iteration bound category (staged topdown label) so
+    the latency table can say *why* a family's tail is slow."""
     out = {}
     for rid, res in results.items():
         ck = (res.graph_id, res.analytic)
@@ -98,12 +100,21 @@ def _modelled_ms(eng: GraphEngine, results, memo: Dict) -> Dict[int, float]:
             plan = eng.plan_cache.get_or_compile(matrix, **opts)
             s = iteration_summaries(plan, 2, spec=SCALED_CELL)
             nnz = plan.csr.nnz if plan.csr is not None else plan.n_rows
-            memo[ck] = (nnz, s[0].cycles_per_nnz, s[1].cycles_per_nnz)
-        nnz, cold, warm = memo[ck]
+            memo[ck] = (nnz, s[0].cycles_per_nnz, s[1].cycles_per_nnz,
+                        s[1].bound())
+        nnz, cold, warm, _ = memo[ck]
         cycles = nnz * (cold + warm * max(res.n_iters - 1, 0)) \
             if res.n_iters else 0.0
         out[rid] = cycles / (SANDY_BRIDGE.freq_ghz * 1e9) * 1e3
     return out
+
+
+def _family_bound(memo: Dict, fam: str) -> str:
+    """Most common warm-iteration bound label among a family's plans."""
+    labels = [v[3] for (gid, _), v in memo.items() if gid.startswith(fam)]
+    if not labels:
+        return ""
+    return max(sorted(set(labels)), key=labels.count)
 
 
 def _pcts(xs: List[float]):
@@ -168,11 +179,11 @@ def main() -> None:
         stp = [float(r.latency_steps) for r in rs]
         iters = [r.n_iters for r in rs]
         rows.append([fam, len(rs), float(np.mean(iters))]
-                    + _pcts(stp) + _pcts(lat))
+                    + _pcts(stp) + _pcts(lat) + [_family_bound(memo, fam)])
     common.emit(rows,
                 ["family", "requests", "mean_iters", "p50_steps",
                  "p95_steps", "p99_steps", "p50_model_ms", "p95_model_ms",
-                 "p99_model_ms"],
+                 "p99_model_ms", "warm_bound"],
                 f"serving latency by matrix family (n=2^{cfg['log2n']}, "
                 f"{len(warm) + len(cold)} graphs)")
 

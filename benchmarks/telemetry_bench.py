@@ -51,7 +51,10 @@ def _sizes(shift: int = 0):
 def headline(log2ns=None) -> str:
     pts = run_sweep(
         log2ns=log2ns or _sizes(),
-        mechanisms={"baseline": HierarchySpec()}, sweeps=2)
+        mechanisms={"baseline": HierarchySpec()}, sweeps=2,
+        workers=common.WORKERS,
+        ckpt_dir=(f"{common.SWEEP_CKPT}/telemetry-headline"
+                  if common.SWEEP_CKPT else None))
     return to_csv(pts, title="telemetry headline: default hierarchy "
                              "(machine geometry), trace-driven")
 
@@ -60,7 +63,10 @@ def mechanisms(log2ns=None) -> str:
     # the scaled geometry reaches the paper's >L2/>L3 regime two sizes
     # earlier, so the 5x-mechanism grid can stop at 2^14
     pts = run_sweep(log2ns=log2ns or _sizes(shift=2),
-                    mechanisms=SCALED_MECHANISMS, sweeps=2)
+                    mechanisms=SCALED_MECHANISMS, sweeps=2,
+                    workers=common.WORKERS,
+                    ckpt_dir=(f"{common.SWEEP_CKPT}/telemetry-mechanisms"
+                              if common.SWEEP_CKPT else None))
     out = [to_csv(pts, title="telemetry mechanisms: paper §V candidates "
                              "(scaled geometry L2=32K L3=256K)"),
            "", "## topdown summary (markdown)", to_markdown(pts),

@@ -1,0 +1,17 @@
+"""repro.checkpoint — fault-tolerant sharded checkpointing.
+
+  manager   CheckpointManager: async committed-step save/restore
+            (msgpack manifest + zstd/zlib shards), schema-free
+            `restore_any` for string-keyed dict trees
+
+Consumed by `repro.telemetry.runner` (incremental sweep-cell
+checkpoints behind `--workers/--resume`) and by training/serving state
+elsewhere in the repo.
+"""
+from .manager import (DEFAULT_CODEC, CheckpointManager, compress_payload,
+                      decompress_payload, shard_filename)
+
+__all__ = [
+    "CheckpointManager", "DEFAULT_CODEC", "compress_payload",
+    "decompress_payload", "shard_filename",
+]

@@ -45,4 +45,16 @@ def iteration_summaries(plan, n_iters: int,
             for c in iteration_counters(plan, n_iters, machine, spec)]
 
 
-__all__ = ["iteration_counters", "iteration_summaries"]
+def iteration_bounds(plan, n_iters: int,
+                     machine: MachineModel = SANDY_BRIDGE,
+                     spec: Optional[HierarchySpec] = None) -> List[str]:
+    """Per-iteration dominant bound category (staged topdown label, e.g.
+    'retiring' or 'backend_dram') -- the serving path's one-word answer
+    to *why* a plan's iterations cost what they cost.  Iteration 1 is
+    cold; a label that changes across the list is a working set settling
+    into cache."""
+    return [s.bound() for s in iteration_summaries(plan, n_iters,
+                                                   machine, spec)]
+
+
+__all__ = ["iteration_counters", "iteration_summaries", "iteration_bounds"]

@@ -1,16 +1,22 @@
 """Time model over a `ParallelRun`: latency, bandwidth, queueing, shutoff.
 
 Turns per-thread event counters into one wall-time estimate per thread
-count so speedup curves can be drawn.  The model reuses the single-core
-constants (`telemetry.topdown.COMPUTE_CPN`, `MECH_HIT_CYCLES`,
-`MachineModel.l3_hit_cycles/dram_cycles/mlp`) and adds the two
-multithreaded effects the paper measures:
+count so speedup curves can be drawn.  The model is built on the staged
+topdown attribution (`telemetry.topdown.stage_cycles`): every thread's
+counters become a `TopdownStages` record, the machine-level roll-up
+(`machine_stages`) adds the per-socket DRAM **bandwidth floor** as its
+own stage, and the run's total cycle count is *defined* as the staged
+sum — so stage cycles always sum bit-exactly to the reported total
+(the contract `tests/test_topdown_invariants.py` pins).
+
+The two multithreaded effects the paper measures:
 
   * a per-socket DRAM **bandwidth floor** — all threads on a socket share
     one memory link, so execution time is at least the socket's DRAM
     line traffic divided by `dram_bw_gbs`; near saturation a queueing
     term inflates miss latency (same form as
-    `cache_model.analytic_metrics_from_profile`);
+    `cache_model.analytic_metrics_from_profile`) and lands in the
+    `backend_contention` stage;
   * the §IV-C **prefetcher shutoff** — when a socket's *demand* DRAM
     utilization exceeds `machine.pf_shutoff_util`, its threads' stream
     prefetchers turn off and the replay is repeated once with them
@@ -29,7 +35,9 @@ from repro.telemetry import events as ev
 # The single-core topdown model owns the calibration constants; sharing
 # them (rather than re-stating the literals) keeps single-stream and
 # multithreaded report rows comparable when either is re-tuned.
-from repro.telemetry.topdown import COMPUTE_CPN, MECH_HIT_CYCLES
+from repro.telemetry.topdown import (COMPUTE_CPN, MECH_HIT_CYCLES,
+                                     TopdownStages, machine_stages,
+                                     stage_cycles)
 
 from .engine import ParallelRun, ParallelSpec, partitioned_traces, replay_parallel
 
@@ -40,12 +48,12 @@ QUEUE_UTIL_CAP = 1.0
 
 
 def thread_cycles(c, machine, nnz: int) -> Tuple[float, float]:
-    """(compute_cycles, stall_cycles) for one thread's counters."""
-    mech_hits = c[ev.VICTIM_HIT] + c[ev.MISS_CACHE_HIT] + c[ev.STREAM_HIT]
-    stall = (c[ev.L3_DEMAND_HIT] * machine.l3_hit_cycles
-             + c[ev.L3_DEMAND_MISS] * machine.dram_cycles
-             + mech_hits * MECH_HIT_CYCLES) / machine.mlp
-    return nnz * COMPUTE_CPN, stall
+    """(compute_cycles, stall_cycles) for one thread's counters.
+
+    Compatibility wrapper over `stage_cycles`; the staged record is the
+    primary representation."""
+    s = stage_cycles(c, machine, nnz)
+    return s.retiring, s.backend_l2 + s.backend_llc + s.backend_dram
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,7 +61,7 @@ class ParallelMetrics:
     """Headline numbers for one (matrix, partition, spec) replay."""
 
     threads: int
-    time_s: float                 # max(latency, bandwidth) after queueing
+    time_s: float                 # total_cycles / freq (staged sum)
     lat_time_s: float             # slowest thread's cycle estimate
     bw_time_s: float              # slowest socket's DRAM-traffic floor
     dram_util: float              # bw_time / time (pre-queueing)
@@ -64,6 +72,13 @@ class ParallelMetrics:
     cycles_per_thread: Tuple[float, ...]
     l2_mpki: Tuple[float, ...]    # per-thread private-L2 demand MPKI
     llc_mpki: Tuple[float, ...]   # per-thread shared-LLC demand MPKI
+    # staged attribution: machine-level roll-up (critical thread +
+    # bandwidth-floor stage) and the per-thread records behind it.
+    # total_cycles == stages.total_cycles() bit-exactly, and
+    # time_s == total_cycles / (freq_ghz * 1e9).
+    stages: TopdownStages = dataclasses.field(default_factory=TopdownStages)
+    thread_stages: Tuple[TopdownStages, ...] = ()
+    total_cycles: float = 0.0
 
     @property
     def l2_mpki_mean(self) -> float:
@@ -77,25 +92,33 @@ class ParallelMetrics:
         nnz = sum(self.nnz_per_thread)
         return 2.0 * nnz / max(self.time_s, 1e-30) / 1e9
 
+    def bound(self) -> str:
+        """Dominant machine-level stage name (e.g. 'backend_dram')."""
+        return self.stages.bound()
 
-def parallel_metrics(run: ParallelRun, machine,
-                     nnz_per_thread) -> ParallelMetrics:
-    """Roll a replay into the time model (deterministic, pure function)."""
+
+def parallel_metrics(run: ParallelRun, machine, nnz_per_thread,
+                     queueing: bool = True) -> ParallelMetrics:
+    """Roll a replay into the time model (deterministic, pure function).
+
+    `queueing=False` drops the saturation queueing term (the
+    `backend_contention` stage stays 0); `simulate_parallel` forwards
+    `ParallelSpec.queueing` here.
+    """
     lb = machine.line_bytes
     nnz_per_thread = tuple(int(v) for v in nnz_per_thread)
     freq = machine.freq_ghz * 1e9
     bw = machine.dram_bw_gbs * 1e9
 
     # SMT oversubscription: more threads than cores on a socket share issue
-    # ports, multiplying compute cycles (stalls still overlap across SMT).
+    # ports; the excess lands in the frontend stage (stalls still overlap
+    # across SMT).
     socket_threads = {s: int(np.sum(run.sockets == s))
                       for s in set(run.sockets.tolist())}
-    compute = np.empty(run.n_threads)
-    stall = np.empty(run.n_threads)
-    for t, c in enumerate(run.counters):
-        compute[t], stall[t] = thread_cycles(c, machine, nnz_per_thread[t])
-        compute[t] *= max(1.0, socket_threads[int(run.sockets[t])]
-                          / machine.cores_per_socket)
+    smt = [max(1.0, socket_threads[int(run.sockets[t])]
+               / machine.cores_per_socket) for t in range(run.n_threads)]
+    base = [stage_cycles(c, machine, nnz_per_thread[t], smt_factor=smt[t])
+            for t, c in enumerate(run.counters)]
 
     # DRAM line traffic per socket: demand fills + prefetcher fills (the
     # prefetcher pulls from memory; lines already LLC-resident are a small
@@ -108,19 +131,32 @@ def parallel_metrics(run: ParallelRun, machine,
         demand_b[s] += c[ev.L3_DEMAND_MISS] * lb
         total_b[s] += (c[ev.L3_DEMAND_MISS] + c[ev.L2_PREFETCH_FILL]) * lb
 
-    lat_time = float(np.max(compute + stall)) / freq
+    totals = [s.total_cycles() for s in base]
+    lat_time = max(totals) / freq if totals else 0.0
     bw_time = max(total_b[s] / bw for s in sockets)
     time0 = max(lat_time, bw_time)
     dram_util = bw_time / max(time0, 1e-30)
 
     # queueing delay: near saturation, misses wait on the memory controller.
     # Normalized so the factor is 1.0 at the knee and grows continuously
-    # (same 1/sqrt(headroom) shape as cache_model's saturated-DRAM term).
-    if dram_util > QUEUE_UTIL_KNEE:
+    # (same 1/sqrt(headroom) shape as cache_model's saturated-DRAM term);
+    # the inflation is attributed to the backend_contention stage.
+    per_thread = base
+    if queueing and dram_util > QUEUE_UTIL_KNEE:
         u = min(dram_util, QUEUE_UTIL_CAP)
-        stall = stall * math.sqrt((1.05 - QUEUE_UTIL_KNEE) / (1.05 - u))
-        lat_time = float(np.max(compute + stall)) / freq
-    time_s = max(lat_time, bw_time)
+        q = math.sqrt((1.05 - QUEUE_UTIL_KNEE) / (1.05 - u))
+        per_thread = [stage_cycles(c, machine, nnz_per_thread[t],
+                                   smt_factor=smt[t], queue_factor=q)
+                      for t, c in enumerate(run.counters)]
+        totals = [s.total_cycles() for s in per_thread]
+        lat_time = max(totals) / freq if totals else 0.0
+
+    # machine roll-up: critical thread + bandwidth-floor excess.  The
+    # staged sum IS the total — time_s is derived from it, never the
+    # other way around, which is what makes the accounting bit-exact.
+    stages = machine_stages(per_thread, bw_time * freq)
+    total_cycles = stages.total_cycles()
+    time_s = total_cycles / freq
     demand_util = max(demand_b[s] / bw for s in sockets) / max(time_s, 1e-30)
 
     kinst = np.maximum(np.array(nnz_per_thread, dtype=np.float64)
@@ -136,8 +172,10 @@ def parallel_metrics(run: ParallelRun, machine,
         dram_bytes=int(sum(total_b.values())),
         pf_on_frac=float(np.mean(run.pf_enabled)) if run.n_threads else 0.0,
         nnz_per_thread=nnz_per_thread,
-        cycles_per_thread=tuple(float(v) for v in compute + stall),
+        cycles_per_thread=tuple(totals),
         l2_mpki=l2_mpki, llc_mpki=llc_mpki,
+        stages=stages, thread_stages=tuple(per_thread),
+        total_cycles=total_cycles,
     )
 
 
@@ -158,7 +196,7 @@ def simulate_parallel(csr, partition, machine, spec: ParallelSpec,
         traces = partitioned_traces(csr, partition, machine, trace=trace)
     nnz = np.asarray(partition.nnz_per_part, dtype=np.int64)
     run = replay_parallel(traces, machine, spec, sweeps=sweeps)
-    metrics = parallel_metrics(run, machine, nnz)
+    metrics = parallel_metrics(run, machine, nnz, queueing=spec.queueing)
 
     if spec.prefetcher and spec.pf_shutoff:
         # per-socket demand utilization decides which sockets lose their
@@ -177,5 +215,6 @@ def simulate_parallel(csr, partition, machine, spec: ParallelSpec,
                     for t in range(run.n_threads)]
             run = replay_parallel(traces, machine, spec, sweeps=sweeps,
                                   pf_enabled=mask)
-            metrics = parallel_metrics(run, machine, nnz)
+            metrics = parallel_metrics(run, machine, nnz,
+                                       queueing=spec.queueing)
     return run, metrics

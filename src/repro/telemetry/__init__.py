@@ -12,14 +12,16 @@ the FD/R-MAT gap is measured end-to-end, compounding included).
 
   events     named hardware-event counters (L2_DEMAND_MISS, VICTIM_HIT, ...)
   hierarchy  set-assoc. caches + prefetcher + §V mechanisms; trace replay
-  topdown    staged metric tree (memory-bound -> L3/DRAM-bound, MPKI family)
+  topdown    staged cycle attribution (Retiring/Frontend/Backend-*,
+             bit-exact stage sums) + the VTune-style metric tree
   sweep      geometry x mechanism x reorder x thread sweep harness
+  runner     sharded, checkpointed, resumable sweep execution
   report     CSV / JSON / markdown rendering + the bottom-line tables:
              gap_report (hardware), reorder_gap_report (software),
              scaling_report / scaling_gap_report (thread scaling),
              graph_report / graph_gap_report (whole analytics)
 """
-from . import events, hierarchy, report, sweep, topdown
+from . import events, hierarchy, report, runner, sweep, topdown
 from .events import EventCounters, known_events, register_event
 from .hierarchy import (CacheLevel, Hierarchy, HierarchySpec, MissCache,
                         SequentialPrefetcher, SetAssocCache, StreamBuffers,
@@ -27,16 +29,23 @@ from .hierarchy import (CacheLevel, Hierarchy, HierarchySpec, MissCache,
                         spmv_address_trace)
 from .report import (graph_gap_report, graph_report, plan_cache_report,
                      scaling_gap_report, scaling_report)
+from .runner import (SweepCell, SweepConfig, execute_cells, graph_cells,
+                     mech_cells, scaling_cells, sort_cells)
 from .sweep import GraphPoint, ScalingPoint, graph_sweep, scaling_sweep
-from .topdown import MetricNode, topdown_tree, topdown_summary
+from .topdown import (STAGE_FIELDS, MetricNode, TopdownStages,
+                      machine_stages, stage_cycles, topdown_tree,
+                      topdown_summary)
 
 __all__ = [
-    "events", "hierarchy", "report", "sweep", "topdown",
+    "events", "hierarchy", "report", "runner", "sweep", "topdown",
     "EventCounters", "known_events", "register_event",
     "CacheLevel", "Hierarchy", "HierarchySpec", "MissCache",
     "SequentialPrefetcher", "SetAssocCache", "StreamBuffers", "VictimCache",
     "spmv_address_trace", "format_address_trace", "hyb_address_trace",
     "MetricNode", "topdown_tree", "topdown_summary",
+    "STAGE_FIELDS", "TopdownStages", "stage_cycles", "machine_stages",
+    "SweepCell", "SweepConfig", "execute_cells", "mech_cells",
+    "scaling_cells", "graph_cells", "sort_cells",
     "ScalingPoint", "scaling_sweep", "scaling_report", "scaling_gap_report",
     "GraphPoint", "graph_sweep", "graph_report", "graph_gap_report",
     "plan_cache_report",

@@ -110,6 +110,18 @@ class EventCounters:
     def per_kinst(self, name: str, kinst: float) -> float:
         return self.counts.get(name, 0) / kinst if kinst else 0.0
 
+    def __eq__(self, other) -> bool:
+        """Value equality over nonzero counts (zero entries are equivalent
+        to absent ones), so a replayed and a checkpoint-restored counter
+        bag compare equal.  Instances stay unhashable (mutable)."""
+        if not isinstance(other, EventCounters):
+            return NotImplemented
+        a = {k: v for k, v in self.counts.items() if v}
+        b = {k: v for k, v in other.counts.items() if v}
+        return a == b
+
+    __hash__ = None
+
     def __repr__(self) -> str:
         inner = ", ".join(f"{k}={v}" for k, v in sorted(self.counts.items()))
         return f"EventCounters({inner})"

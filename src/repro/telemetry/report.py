@@ -79,7 +79,7 @@ def gap_report(points: Sequence[SweepPoint]) -> str:
             mechs.append(p.mechanism)
     lines = ["# FD vs R-MAT gap per mechanism",
              "log2n,threads,mechanism,fd_gflops,rmat_gflops,gap,"
-             "rmat_l2_mpki,gap_closed_vs_baseline"]
+             "rmat_l2_mpki,fd_bound,rmat_bound,gap_closed_vs_baseline"]
     for (log2n, threads) in keys:
         base_gap = None
         base = (by.get(("fd", log2n, threads, "baseline")),
@@ -102,6 +102,7 @@ def gap_report(points: Sequence[SweepPoint]) -> str:
                 f"{rm.summary.gflops_est:.4g}",
                 f"{gap:.3f}",
                 f"{rm.summary.l2_mpki:.3f}",
+                fd.summary.bound(), rm.summary.bound(),
                 closed,
             ]))
     return "\n".join(lines)
@@ -122,7 +123,9 @@ def plan_cache_report(stats: Dict, before: Dict = None,
         for k in ("hits", "misses", "evictions", "compiles", "compile_s"):
             s[k] = s.get(k, 0) - before.get(k, 0)
     served = s.get("hits", 0) + s.get("misses", 0)
-    hit_rate = s["hits"] / served if served else 0.0
+    # .get throughout: an empty/partial stats dict renders a zero row
+    # instead of raising
+    hit_rate = s.get("hits", 0) / served if served else 0.0
     compiles = s.get("compiles", 0)
     mean_compile = s.get("compile_s", 0.0) / compiles if compiles else 0.0
     head = ["plans", "hits", "misses", "hit_rate", "evictions",
@@ -175,7 +178,8 @@ def scaling_gap_report(points: Sequence[ScalingPoint]) -> str:
         if p.reorder not in reorders:
             reorders.append(p.reorder)
     extra = [r for r in reorders if r != "none"]
-    head = (["log2n", "threads", "fd_speedup", "rmat_speedup", "gap"]
+    head = (["log2n", "threads", "fd_speedup", "rmat_speedup", "gap",
+             "fd_bound", "rmat_bound"]
             + [f"gap_closed_{r}" for r in extra]
             + [f"gap_closed_gflops_{r}" for r in extra])
     lines = ["# FD vs R-MAT speedup gap per reordering strategy",
@@ -190,7 +194,8 @@ def scaling_gap_report(points: Sequence[ScalingPoint]) -> str:
         gap_ok = gap > 0.05
         gf_ok = gf_gap > 0.02 * fd.metrics.gflops_est()
         row = [str(log2n), str(threads), f"{fd.speedup:.3f}",
-               f"{rm.speedup:.3f}", f"{gap:.3f}"]
+               f"{rm.speedup:.3f}", f"{gap:.3f}",
+               fd.metrics.stages.bound(), rm.metrics.stages.bound()]
         closed, closed_gf = [], []
         for r in extra:
             rr = by.get(("rmat", log2n, r, threads))

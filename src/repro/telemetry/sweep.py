@@ -64,12 +64,13 @@ class SweepPoint:
     def row(self) -> List:
         return ([self.kind, self.log2n, self.nnz, self.threads,
                  self.reorder, self.mechanism]
-                + [getattr(self.summary, f) for f in TopdownSummary.FIELDS])
+                + [getattr(self.summary, f) for f in TopdownSummary.FIELDS]
+                + [self.summary.bound()])
 
     @staticmethod
     def header() -> List[str]:
         return (["kind", "log2n", "nnz", "threads", "reorder", "mechanism"]
-                + list(TopdownSummary.FIELDS))
+                + list(TopdownSummary.FIELDS) + ["bound"])
 
 
 def _matrix(kind: str, n: int, seed: int = 0) -> CSR:
@@ -144,52 +145,97 @@ def run_point(csr: CSR, spec: HierarchySpec,
     return spec.instantiate(machine).run_trace(trace, sweeps=sweeps)
 
 
+# ---------------------------------------------------------------------------
+# Per-cell execution (the unit `telemetry.runner` shards and checkpoints).
+# Every cell function is a pure function of its arguments, so serial thin
+# clients and worker processes produce bit-identical points -- the memos
+# below are per-process accelerators, never semantic state.
+# ---------------------------------------------------------------------------
+
+# (kind, log2n, rlabel, strategy, threads, seed, machine) -> prepared
+# replay inputs.  Sorted cell order keeps consecutive cells on the same
+# plan, so a tiny cache suffices; entries hold a full trace list (MBs at
+# 2^16), hence the small bound.
+_TRACE_MEMO: Dict[Tuple, Tuple] = {}
+_TRACE_MEMO_MAX = 3
+
+
+def _cell_inputs(kind: str, log2n: int, rlabel: str, strategy, threads: int,
+                 seed: int, machine: MachineModel):
+    """(sub_csr, sub_nnz, full_nnz, trace_list) for one mech cell."""
+    key = (kind, log2n, rlabel, strategy, threads, seed, machine)
+    hit = _TRACE_MEMO.get(key)
+    if hit is not None:
+        return hit
+    base = _matrix(kind, 2 ** log2n, seed=seed)
+    p = _planned(base, strategy)
+    full = p.csr
+    if threads <= 1:
+        sub, sub_nnz = full, full.nnz
+        trace = p.address_trace(machine).tolist()
+    else:
+        sub, sub_nnz = _thread_slice(full, threads)
+        trace = spmv_address_trace(sub, machine).tolist()
+    if len(_TRACE_MEMO) >= _TRACE_MEMO_MAX:
+        _TRACE_MEMO.pop(next(iter(_TRACE_MEMO)))
+    out = (sub, sub_nnz, int(full.nnz), trace)
+    _TRACE_MEMO[key] = out
+    return out
+
+
+def run_mech_cell(kind: str, log2n: int, rlabel: str, strategy,
+                  threads: int, mech_label: str, spec: HierarchySpec,
+                  machine: MachineModel = SANDY_BRIDGE,
+                  sweeps: int = 2, seed: int = 0) -> SweepPoint:
+    """One (matrix, reorder, thread, mechanism) cell of `run_sweep`."""
+    sub, sub_nnz, full_nnz, trace = _cell_inputs(
+        kind, log2n, rlabel, strategy, threads, seed, machine)
+    c = run_point(sub, spec, machine, threads=threads, sweeps=sweeps,
+                  trace=trace)
+    return SweepPoint(
+        kind=kind, log2n=log2n, nnz=full_nnz, threads=threads,
+        mechanism=mech_label, spec=spec, counters=c, reorder=rlabel,
+        summary=topdown_summary(c, machine, sub_nnz))
+
+
 def run_sweep(log2ns: Sequence[int] = (12, 14, 16),
               kinds: Sequence[str] = ("fd", "rmat"),
               mechanisms: Optional[Dict[str, HierarchySpec]] = None,
               machine: MachineModel = SANDY_BRIDGE,
               threads_list: Sequence[int] = (1,),
               sweeps: int = 2, seed: int = 0,
-              reorderings: Optional[Dict] = None) -> List[SweepPoint]:
-    """The full grid.  Each (kind, size, reorder) cell is compiled ONCE
-    into a cached `repro.plan` plan (permutation applied, trace memoized)
-    and replayed across the mechanism/thread axes, so mechanism columns
-    are exactly comparable and repeated sweeps in one process re-analyze
-    nothing.
+              reorderings: Optional[Dict] = None,
+              workers: int = 1,
+              ckpt_dir: Optional[str] = None) -> List[SweepPoint]:
+    """The full grid, in sorted canonical cell order.  Each (kind, size,
+    reorder) cell is compiled ONCE into a cached `repro.plan` plan
+    (permutation applied, trace memoized) and replayed across the
+    mechanism/thread axes, so mechanism columns are exactly comparable
+    and repeated sweeps in one process re-analyze nothing.
 
     `reorderings` maps a label to a `repro.reorder` strategy (callable
     CSR -> Reordering) or None for the unpermuted matrix; each strategy is
     applied to the generated matrix *before* slicing and tracing, making
     the sweep a before/after comparison between software reordering and
     the §V hardware mechanisms.
+
+    This is a thin client of `telemetry.runner`: `workers` shards the
+    cells across processes and `ckpt_dir` checkpoints completed cells
+    (and resumes from them) -- results are bit-identical either way.
     """
+    from . import runner
+
     mechanisms = mechanisms if mechanisms is not None else MECHANISMS
     reorderings = reorderings if reorderings is not None else {"none": None}
-    points: List[SweepPoint] = []
-    for kind in kinds:
-        for log2n in log2ns:
-            base = _matrix(kind, 2 ** log2n, seed=seed)
-            for rlabel, strategy in reorderings.items():
-                # compile-once: the plan pins the permuted matrix (and its
-                # memoized full trace) across the mechanism x thread grid
-                p = _planned(base, strategy)
-                full = p.csr
-                for threads in threads_list:
-                    if threads <= 1:
-                        sub, sub_nnz = full, full.nnz
-                        trace = p.address_trace(machine).tolist()
-                    else:
-                        sub, sub_nnz = _thread_slice(full, threads)
-                        trace = spmv_address_trace(sub, machine).tolist()
-                    for label, spec in mechanisms.items():
-                        c = run_point(sub, spec, machine, threads=threads,
-                                      sweeps=sweeps, trace=trace)
-                        points.append(SweepPoint(
-                            kind=kind, log2n=log2n, nnz=full.nnz,
-                            threads=threads, mechanism=label, spec=spec,
-                            counters=c, reorder=rlabel,
-                            summary=topdown_summary(c, machine, sub_nnz)))
-    return points
+    cells = runner.mech_cells(log2ns=log2ns, kinds=kinds,
+                              mechanisms=mechanisms,
+                              threads_list=threads_list,
+                              reorderings=reorderings)
+    cfg = runner.SweepConfig(machine=machine, sweeps=sweeps, seed=seed,
+                             mechanisms=dict(mechanisms),
+                             reorderings=dict(reorderings))
+    return runner.execute_cells(cells, cfg, workers=workers,
+                                ckpt_dir=ckpt_dir)
 
 
 def reorder_sweep(log2ns: Sequence[int] = (12,),
@@ -233,18 +279,85 @@ class ScalingPoint:
 
     def row(self) -> List:
         m = self.metrics
-        return [self.kind, self.log2n, self.nnz, self.reorder,
-                self.partition, self.threads, self.speedup, self.efficiency,
-                m.time_s * 1e6, self.imbalance, m.l2_mpki_mean,
-                m.l2_mpki_max, float(np.mean(m.llc_mpki)), m.dram_util,
-                m.pf_on_frac]
+        fr = m.stages.fractions()
+        return ([self.kind, self.log2n, self.nnz, self.reorder,
+                 self.partition, self.threads, self.speedup, self.efficiency,
+                 m.time_s * 1e6, self.imbalance, m.l2_mpki_mean,
+                 m.l2_mpki_max, float(np.mean(m.llc_mpki)), m.dram_util,
+                 m.pf_on_frac, m.stages.bound(), fr["retiring"],
+                 fr["frontend"], fr["backend_llc"], fr["backend_dram"],
+                 fr["backend_contention"], fr["backend_bandwidth"]])
 
     @staticmethod
     def header() -> List[str]:
         return ["kind", "log2n", "nnz", "reorder", "partition", "threads",
                 "speedup", "efficiency", "time_us", "imbalance",
                 "l2_mpki_mean", "l2_mpki_max", "llc_mpki_mean", "dram_util",
-                "pf_on"]
+                "pf_on", "bound", "retiring", "frontend", "llc_frac",
+                "dram_frac", "contention", "bw_frac"]
+
+
+# 1-thread reference times for speedup columns, memoized per process so
+# the thread axis pays for its baseline replay once.  Recomputing it in
+# another process yields the identical float (the replay and time model
+# are deterministic pure functions), so this never breaks bit-identity.
+_T1_MEMO: Dict[Tuple, float] = {}
+
+
+def _scaling_run(kind: str, log2n: int, rlabel: str, strategy,
+                 partition: str, threads: int, spec,
+                 machine: MachineModel, sweeps: int, seed: int):
+    from repro.core.partition import (nnz_split, rowblock_balanced,
+                                      rowblock_equal)
+    from repro.parallel import nnz_partitioned_traces, simulate_parallel
+
+    base = _matrix(kind, 2 ** log2n, seed=seed)
+    p = _planned(base, strategy)
+    csr = p.csr
+    trace = p.address_trace(machine)
+    if partition == "merge":
+        part = nnz_split(csr, threads)
+        slices = nnz_partitioned_traces(csr, part, machine, trace=trace)
+        _, m = simulate_parallel(csr, part, machine, spec, sweeps=sweeps,
+                                 traces=slices)
+    else:
+        part_fn = (rowblock_balanced if partition == "balanced"
+                   else rowblock_equal)
+        part = part_fn(csr, threads)
+        _, m = simulate_parallel(csr, part, machine, spec, sweeps=sweeps,
+                                 trace=trace)
+    return csr, part, m
+
+
+def run_scaling_cell(kind: str, log2n: int, rlabel: str, strategy,
+                     partition: str, threads: int, spec=None,
+                     machine: MachineModel = SANDY_BRIDGE,
+                     sweeps: int = 2, seed: int = 0) -> ScalingPoint:
+    """One (matrix, reorder, partition, thread-count) cell of
+    `scaling_sweep`, including its own 1-thread speedup reference
+    (memoized per process)."""
+    from repro.parallel import ParallelSpec
+
+    spec = spec if spec is not None else ParallelSpec()
+    csr, part, m = _scaling_run(kind, log2n, rlabel, strategy, partition,
+                                threads, spec, machine, sweeps, seed)
+    t1_key = (kind, log2n, rlabel, partition, spec, machine, sweeps, seed)
+    t1_time = _T1_MEMO.get(t1_key)
+    if t1_time is None:
+        if part.n_parts == 1:
+            t1_time = m.time_s
+        else:
+            _, _, m1 = _scaling_run(kind, log2n, rlabel, strategy, partition,
+                                    1, spec, machine, sweeps, seed)
+            t1_time = m1.time_s
+        _T1_MEMO[t1_key] = t1_time
+    speedup = t1_time / max(m.time_s, 1e-30)
+    # partitioners cap parts at n_rows; record what ran
+    threads_eff = part.n_parts
+    return ScalingPoint(
+        kind=kind, log2n=log2n, nnz=csr.nnz, threads=threads_eff,
+        reorder=rlabel, partition=partition, imbalance=part.imbalance(),
+        speedup=speedup, efficiency=speedup / threads_eff, metrics=m)
 
 
 def scaling_sweep(log2ns: Sequence[int] = (12,),
@@ -253,7 +366,9 @@ def scaling_sweep(log2ns: Sequence[int] = (12,),
                   spec=None, machine: MachineModel = SANDY_BRIDGE,
                   partition: str = "equal",
                   reorderings: Optional[Dict] = None,
-                  sweeps: int = 2, seed: int = 0) -> List[ScalingPoint]:
+                  sweeps: int = 2, seed: int = 0,
+                  workers: int = 1,
+                  ckpt_dir: Optional[str] = None) -> List[ScalingPoint]:
     """The thread axis: multithreaded replay through `repro.parallel`.
 
     For every (kind, size, reorder) the matrix is partitioned per thread
@@ -267,53 +382,26 @@ def scaling_sweep(log2ns: Sequence[int] = (12,),
     the nnz CDF) or 'merge' (the segmented/merge-CSR execution: equal
     *nonzero* segments that may cut mid-row, sliced from the same global
     trace by `parallel.nnz_partitioned_traces`).
+
+    Thin client of `telemetry.runner` (sorted canonical cell order;
+    `workers`/`ckpt_dir` shard and checkpoint the grid, bit-identically
+    to the serial path).
     """
-    from repro.core.partition import (nnz_split, rowblock_balanced,
-                                      rowblock_equal)
-    from repro.parallel import (ParallelSpec, nnz_partitioned_traces,
-                                simulate_parallel)
+    from repro.parallel import ParallelSpec
+
+    from . import runner
 
     spec = spec if spec is not None else ParallelSpec()
-    part_fn = rowblock_balanced if partition == "balanced" else rowblock_equal
     reorderings = reorderings if reorderings is not None else {"none": None}
-    points: List[ScalingPoint] = []
-    for kind in kinds:
-        for log2n in log2ns:
-            base = _matrix(kind, 2 ** log2n, seed=seed)
-            for rlabel, strategy in reorderings.items():
-                # one plan per (matrix, reorder): every thread count below
-                # re-slices the plan's cached global trace instead of
-                # re-permuting and re-tracing the matrix
-                p = _planned(base, strategy)
-                csr = p.csr
-                trace = p.address_trace(machine)
-                tl = sorted(set(threads_list) | {1})
-                t1_time = None
-                for threads in tl:
-                    if partition == "merge":
-                        part = nnz_split(csr, threads)
-                        slices = nnz_partitioned_traces(csr, part, machine,
-                                                        trace=trace)
-                        _, m = simulate_parallel(csr, part, machine, spec,
-                                                 sweeps=sweeps, traces=slices)
-                    else:
-                        part = part_fn(csr, threads)
-                        _, m = simulate_parallel(csr, part, machine, spec,
-                                                 sweeps=sweeps, trace=trace)
-                    if threads == 1:
-                        t1_time = m.time_s
-                    if threads not in threads_list:
-                        continue
-                    speedup = t1_time / max(m.time_s, 1e-30)
-                    # partitioners cap parts at n_rows; record what ran
-                    threads_eff = part.n_parts
-                    points.append(ScalingPoint(
-                        kind=kind, log2n=log2n, nnz=csr.nnz,
-                        threads=threads_eff, reorder=rlabel,
-                        partition=partition,
-                        imbalance=part.imbalance(), speedup=speedup,
-                        efficiency=speedup / threads_eff, metrics=m))
-    return points
+    cells = runner.scaling_cells(log2ns=log2ns, kinds=kinds,
+                                 threads_list=threads_list,
+                                 partition=partition,
+                                 reorderings=reorderings)
+    cfg = runner.SweepConfig(machine=machine, sweeps=sweeps, seed=seed,
+                             reorderings=dict(reorderings),
+                             parallel_spec=spec)
+    return runner.execute_cells(cells, cfg, workers=workers,
+                                ckpt_dir=ckpt_dir)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -334,11 +422,13 @@ class GraphPoint:
 
     @property
     def cold_cycles_per_nnz(self) -> float:
-        return self.iters[0].cycles_per_nnz
+        return self.iters[0].cycles_per_nnz if self.iters else 0.0
 
     @property
     def warm_cycles_per_nnz(self) -> float:
         tail = self.iters[1:] or self.iters
+        if not tail:
+            return 0.0
         return float(np.mean([s.cycles_per_nnz for s in tail]))
 
     @property
@@ -348,18 +438,23 @@ class GraphPoint:
         return float(sum(s.cycles_per_nnz for s in self.iters))
 
     def row(self) -> List:
+        # a 0-iteration run (converged before its first SpMV) still renders
         return [self.kind, self.log2n, self.nnz, self.analytic,
                 self.semiring, self.format_name, self.n_iters,
                 int(self.converged),
                 self.cold_cycles_per_nnz, self.warm_cycles_per_nnz,
                 self.total_cycles_per_nnz,
-                self.iters[0].l2_mpki, self.iters[-1].l2_mpki]
+                self.iters[0].l2_mpki if self.iters else 0.0,
+                self.iters[-1].l2_mpki if self.iters else 0.0,
+                self.iters[0].bound() if self.iters else "",
+                self.iters[-1].bound() if self.iters else ""]
 
     @staticmethod
     def header() -> List[str]:
         return ["kind", "log2n", "nnz", "analytic", "semiring", "format",
                 "n_iters", "converged", "cold_cyc_nnz", "warm_cyc_nnz",
-                "total_cyc_nnz", "l2_mpki_cold", "l2_mpki_warm"]
+                "total_cyc_nnz", "l2_mpki_cold", "l2_mpki_warm",
+                "bound_cold", "bound_warm"]
 
 
 def graph_sweep(log2ns: Sequence[int] = (10,),
@@ -368,7 +463,9 @@ def graph_sweep(log2ns: Sequence[int] = (10,),
                 spec: Optional[HierarchySpec] = None,
                 machine: MachineModel = SANDY_BRIDGE,
                 seed: int = 0, max_iters: int = 64,
-                format: Optional[str] = None) -> List[GraphPoint]:
+                format: Optional[str] = None,
+                workers: int = 1,
+                ckpt_dir: Optional[str] = None) -> List[GraphPoint]:
     """Whole-analytic axis: run each `repro.graph` driver to convergence,
     then replay its plan's memoized address trace once per executed
     iteration through a warm hierarchy.  The per-iteration summaries show
@@ -386,34 +483,44 @@ def graph_sweep(log2ns: Sequence[int] = (10,),
     format, giving benches a fixed-format baseline to quantify what the
     nnz-balanced candidates recover.
     """
+    from . import runner
+
+    cells = runner.graph_cells(log2ns=log2ns, kinds=kinds,
+                               analytics=analytics, format=format)
+    cfg = runner.SweepConfig(machine=machine, seed=seed, hier_spec=spec,
+                             max_iters=max_iters, graph_format=format)
+    return runner.execute_cells(cells, cfg, workers=workers,
+                                ckpt_dir=ckpt_dir)
+
+
+def run_graph_cell(kind: str, log2n: int, analytic: str,
+                   spec: Optional[HierarchySpec] = None,
+                   machine: MachineModel = SANDY_BRIDGE,
+                   seed: int = 0, max_iters: int = 64,
+                   format: Optional[str] = None) -> GraphPoint:
+    """One (matrix, analytic) cell of `graph_sweep`: run the driver to
+    convergence, then replay its plan's trace once per iteration."""
     from repro.graph import DRIVERS
     from repro.graph.telemetry import iteration_summaries
 
-    points: List[GraphPoint] = []
-    for kind in kinds:
-        for log2n in log2ns:
-            base = _matrix(kind, 2 ** log2n, seed=seed)
-            source = int(np.argmax(np.diff(np.asarray(base.indptr))))
-            r0 = np.random.default_rng(seed).uniform(
-                0.5, 1.5, size=base.n_rows).astype(np.float32)
-            for name in analytics:
-                driver = DRIVERS[name]
-                if name in ("bfs", "sssp"):
-                    res = driver(base, source, max_iters=max_iters,
-                                 format=format)
-                elif name == "pagerank":
-                    res = driver(base, r0=r0, max_iters=max_iters,
-                                 format=format)
-                else:
-                    res = driver(base, max_iters=max_iters, format=format)
-                iters = tuple(iteration_summaries(
-                    res.plan, res.n_iters, machine=machine, spec=spec))
-                points.append(GraphPoint(
-                    kind=kind, log2n=log2n, nnz=res.plan.csr.nnz,
-                    analytic=name, semiring=res.plan.semiring,
-                    n_iters=res.n_iters, converged=res.converged,
-                    iters=iters, format_name=res.plan.format_name))
-    return points
+    base = _matrix(kind, 2 ** log2n, seed=seed)
+    source = int(np.argmax(np.diff(np.asarray(base.indptr))))
+    r0 = np.random.default_rng(seed).uniform(
+        0.5, 1.5, size=base.n_rows).astype(np.float32)
+    driver = DRIVERS[analytic]
+    if analytic in ("bfs", "sssp"):
+        res = driver(base, source, max_iters=max_iters, format=format)
+    elif analytic == "pagerank":
+        res = driver(base, r0=r0, max_iters=max_iters, format=format)
+    else:
+        res = driver(base, max_iters=max_iters, format=format)
+    iters = tuple(iteration_summaries(
+        res.plan, res.n_iters, machine=machine, spec=spec))
+    return GraphPoint(
+        kind=kind, log2n=log2n, nnz=int(res.plan.csr.nnz),
+        analytic=analytic, semiring=res.plan.semiring,
+        n_iters=int(res.n_iters), converged=bool(res.converged),
+        iters=iters, format_name=res.plan.format_name)
 
 
 def geometry_sweep(log2n: int = 14,
