@@ -93,18 +93,22 @@ def spmv_dense_jnp(a: jax.Array, x: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def auto_format(csr: CSR, report: structure.StructureReport | None = None,
-                reordering=None):
+                reordering=None, threads: int = 1):
     """Pick the TPU-friendly format for this matrix's structure.
 
     Thin client of `repro.plan`: the decision rule is
     `plan.choose_format` and the conversion `plan.convert` (one-shot --
-    compile a `plan.SpmvPlan` instead to also freeze the kernel layout).
+    compile a `plan.SpmvPlan` instead to also freeze the kernel layout,
+    or `plan.compile(csr, predictor='auto')` to let the learned cost
+    model pick the reordering too).
 
     With `reordering` (a `repro.reorder.Reordering`), the permutation is
     applied first and the structure re-analyzed on the permuted matrix, so
     the format decision reflects the post-reorder structure -- an RCM'd
     scrambled-banded matrix becomes DIA-eligible again.  Pass the same
     reordering to `spmv` to multiply in the original row order.
+    `threads` biases dispersed unstructured matrices toward the
+    nnz-balanced segmented layout, exactly as plan compilation would.
     """
     from repro import plan as _plan
 
@@ -112,7 +116,7 @@ def auto_format(csr: CSR, report: structure.StructureReport | None = None,
         csr = reordering.apply(csr)
         report = None
     rep = report or structure.analyze(csr)
-    return _plan.convert(csr, _plan.choose_format(rep))
+    return _plan.convert(csr, _plan.choose_format(rep, threads=threads))
 
 
 def spmv(matrix, x: jax.Array, use_pallas: bool = False,

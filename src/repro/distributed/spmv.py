@@ -57,7 +57,8 @@ def default_row_partition(csr: CSR, mesh: Mesh) -> RowPartition:
 
 def spmv_row_sharded(csr: CSR, x: jax.Array, mesh: Optional[Mesh] = None,
                      partition: Optional[RowPartition] = None,
-                     bm: int = 128, interpret: Optional[bool] = None
+                     bm: int = 128, interpret: Optional[bool] = None,
+                     reorder: str = "none", predictor: str = "auto"
                      ) -> jax.Array:
     """y = A @ x with rows sharded across the mesh's 'shards' axis.
 
@@ -67,6 +68,12 @@ def spmv_row_sharded(csr: CSR, x: jax.Array, mesh: Optional[Mesh] = None,
     packed shard slabs are cached in `repro.plan.DEFAULT_CACHE` keyed by
     matrix contents + partition, so repeated multiplies pay the ELL
     packing once.
+
+    `reorder` defaults to 'none' (keeping historical cache keys);
+    `reorder='auto'` lets the compiler's candidate scoring pick the
+    shard-local ordering, scored by the learned cost model when one is
+    shipped (`predictor='auto'`) -- a cheap decision even on the first
+    touch of a large matrix.
     """
     from repro import plan as _plan
 
@@ -77,9 +84,11 @@ def spmv_row_sharded(csr: CSR, x: jax.Array, mesh: Optional[Mesh] = None,
     if partition.n_parts != n_shards:
         raise ValueError(f"partition has {partition.n_parts} parts for "
                          f"{n_shards} devices on axis '{_AXIS}'")
+    if reorder == "none":
+        predictor = "none"     # nothing to score; keep historical keys
     p = _plan.DEFAULT_CACHE.get_or_compile(
-        csr, mesh=mesh, partition=partition, bm=bm, reorder="none",
-        predictor="none", keep_csr=False)
+        csr, mesh=mesh, partition=partition, bm=bm, reorder=reorder,
+        predictor=predictor, keep_csr=False)
     return p.execute(x, interpret=interpret)
 
 

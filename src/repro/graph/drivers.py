@@ -125,13 +125,18 @@ def _graph_plan(matrix: CSR, semiring, *, reorder, plan_cache, format=None,
         interpret=interpret))
 
 
-def plan_options(semiring, *, reorder="none", format=None, use_pallas=True,
-                 interpret=None) -> Dict:
+def plan_options(semiring, *, reorder="none", predictor="none", format=None,
+                 use_pallas=True, interpret=None) -> Dict:
     """The exact compile-option dict the drivers use -- shared with
     `serve_graph` admission so its warm-pool check (`PlanCache.key_for`)
-    and its compiles produce the same cache keys the drivers would."""
+    and its compiles produce the same cache keys the drivers would.
+
+    `predictor` defaults to 'none' (no candidate scoring), preserving the
+    historical cache keys; pass 'model'/'oracle' together with
+    `reorder='auto'` when the engine should pick reorderings per graph.
+    """
     name = semiring.name if isinstance(semiring, Semiring) else str(semiring)
-    opts = dict(reorder=reorder, predictor="none", semiring=name,
+    opts = dict(reorder=reorder, predictor=predictor, semiring=name,
                 use_pallas=use_pallas, interpret=interpret, keep_csr=True)
     if format is not None:
         opts["format"] = format

@@ -15,7 +15,12 @@ This package freezes that decision chain once per matrix:
                power_iteration / address_trace
   cache        PlanCache + the process-wide DEFAULT_CACHE behind the
                thin-client call paths (core.spmv, distributed.spmv)
-  serial       save_plan / load_plan through repro.checkpoint
+  costmodel    the learned candidate scorer (structural features ->
+               predicted throughput) that replaces trace replay on the
+               default compile path, plus its replay-labeled training
+               pipeline (`python -m repro.plan.costmodel`)
+  serial       save_plan / load_plan (and save_model / load_model)
+               through repro.checkpoint
 
 Quick use:
 
@@ -29,9 +34,12 @@ Quick use:
 from .cache import DEFAULT_CACHE, PlanCache, get_plan
 from .compiler import (REPLAY_NNZ_MAX, choose_format, compile, convert,
                        plan_for_container)
+from .costmodel import (CostModel, default_model, fit_cost_model,
+                        set_default_model)
 from .fingerprint import fingerprint_arrays, is_concrete, matrix_fingerprint
 from .plan import SpmvPlan
-from .serial import load_plan, plan_from_state, plan_state, save_plan
+from .serial import (load_model, load_plan, model_from_state, model_state,
+                     plan_from_state, plan_state, save_model, save_plan)
 
 # alias for callers who prefer not to shadow the builtin
 compile_plan = compile
@@ -40,6 +48,8 @@ __all__ = [
     "SpmvPlan", "compile", "compile_plan", "plan_for_container",
     "choose_format", "convert", "REPLAY_NNZ_MAX",
     "PlanCache", "DEFAULT_CACHE", "get_plan",
+    "CostModel", "fit_cost_model", "default_model", "set_default_model",
     "matrix_fingerprint", "fingerprint_arrays", "is_concrete",
     "save_plan", "load_plan", "plan_state", "plan_from_state",
+    "save_model", "load_model", "model_state", "model_from_state",
 ]

@@ -73,6 +73,15 @@ class PlanCache:
         self.evictions = 0
         self.compiles = 0
         self.compile_s = 0.0
+        # compile counters split by the plan's resolved scoring mode
+        # ('model' -> predictor_*; 'replay'/'analytic' -> oracle_*;
+        # unscored compiles count only in the totals above), so serving
+        # reports don't average microsecond model compiles into the
+        # oracle's seconds
+        self.predictor_compiles = 0
+        self.predictor_compile_s = 0.0
+        self.oracle_compiles = 0
+        self.oracle_compile_s = 0.0
 
     def __len__(self) -> int:
         return len(self._plans)
@@ -105,6 +114,14 @@ class PlanCache:
                 self.misses += 1
                 self.compiles += 1
                 self.compile_s += elapsed
+                scoring = (getattr(value, "compile_stats", None)
+                           or {}).get("scoring")
+                if scoring == "model":
+                    self.predictor_compiles += 1
+                    self.predictor_compile_s += elapsed
+                elif scoring in ("replay", "analytic"):
+                    self.oracle_compiles += 1
+                    self.oracle_compile_s += elapsed
                 self._plans[key] = value
                 while len(self._plans) > self.max_plans:
                     self._plans.popitem(last=False)
@@ -159,6 +176,10 @@ class PlanCache:
             self.evictions = 0
             self.compiles = 0
             self.compile_s = 0.0
+            self.predictor_compiles = 0
+            self.predictor_compile_s = 0.0
+            self.oracle_compiles = 0
+            self.oracle_compile_s = 0.0
 
     def stats(self) -> Dict[str, float]:
         """Counter snapshot.  `hit_rate` is hits/(hits+misses) over the
@@ -171,6 +192,10 @@ class PlanCache:
                     "misses": self.misses, "evictions": self.evictions,
                     "compiles": self.compiles,
                     "compile_s": round(self.compile_s, 6),
+                    "predictor_compiles": self.predictor_compiles,
+                    "predictor_compile_s": round(self.predictor_compile_s, 6),
+                    "oracle_compiles": self.oracle_compiles,
+                    "oracle_compile_s": round(self.oracle_compile_s, 6),
                     "hit_rate": self.hits / served if served else 0.0}
 
 

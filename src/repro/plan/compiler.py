@@ -19,6 +19,14 @@ Forcing `format=` skips the O(nnz) structure analysis altogether.
 
 Predictors (`predictor=`):
 
+  * 'model'     the learned cost model (`plan.costmodel`): each
+                candidate's permuted structure report is featurized and
+                scored by the shipped gradient-boosted ensemble in
+                microseconds — no trace replay.  Falls back to 'oracle'
+                (recorded in `compile_stats`) when no model is loaded.
+  * 'oracle'    the simulation-backed scorer the model was trained
+                against: 'replay' when nnz <= REPLAY_NNZ_MAX, else
+                'analytic'.
   * 'replay'    `repro.parallel.simulate_parallel` — per-thread trace
                 replay through private caches + the shared contended LLC,
                 scored by `ParallelMetrics.gflops_est()`.  Exact but
@@ -27,11 +35,18 @@ Predictors (`predictor=`):
                 Che-approximation model (with its shared-LLC thread
                 scaling), scored by `CacheMetrics.gflops`.  O(distinct
                 line counts); right for the 2^26 regime.
-  * 'auto'      'replay' when nnz <= REPLAY_NNZ_MAX, else 'analytic'.
+  * 'auto'      'model' when a pretrained model ships in-repo
+                (`costmodel.default_model()`), else 'oracle' — the
+                default: plan-cache misses on the serving path score in
+                microseconds instead of seconds.
   * 'none'      no scoring: keeps the single given candidate (used by
                 sweep harnesses that pin the reordering themselves);
                 with reorder='auto' it degenerates to the identity
                 ordering — no candidate work is done at all.
+
+`compile_stats['scoring']` records the *resolved* mode ('model',
+'replay', 'analytic', or 'none'), which is what `PlanCache` buckets its
+predictor-vs-oracle compile counters by.
 """
 from __future__ import annotations
 
@@ -218,7 +233,7 @@ def compile(matrix: CSR, *,                       # noqa: A001 (plan.compile)
                `execute_many`'s SpMM path and telemetry trace replay)
     """
     fp = matrix_fingerprint(matrix)
-    stats: Dict[str, float] = {}
+    stats: Dict[str, object] = {}   # timings + the resolved scoring mode
 
     sr = None
     if semiring != "plus_times":
@@ -251,6 +266,23 @@ def compile(matrix: CSR, *,                       # noqa: A001 (plan.compile)
         # be chosen by a score: 'auto' degenerates to the identity order
         reorder = "none"
 
+    # Resolve 'auto'/'model'/'oracle' to a concrete scorer up front so the
+    # candidate loop below is mode-free and the cache can bucket compile
+    # counters by what actually ran.
+    model = None
+    if predictor in ("auto", "model"):
+        from .costmodel import default_model
+
+        model = default_model()
+        if model is None:
+            if predictor == "model":
+                stats["model_fallback"] = 1.0
+            predictor = "oracle"
+        else:
+            predictor = "model"
+    if predictor == "oracle":
+        predictor = "replay" if matrix.nnz <= REPLAY_NNZ_MAX else "analytic"
+
     t0 = time.perf_counter()
     cands = _candidates(matrix, reorder)
     permuted_by = {label: (r.apply(matrix) if r is not None else matrix)
@@ -279,14 +311,55 @@ def compile(matrix: CSR, *,                       # noqa: A001 (plan.compile)
         stats["analyze_s"] = time.perf_counter() - t0
     ordered = sorted(cands, key=lambda lab: (fmt_by[lab], lab))
 
+    if len(ordered) > 1:
+        # Drop candidates whose (permuted bytes, format) duplicates an
+        # earlier one -- RCM on an already-banded matrix returns the
+        # identity permutation, and scoring it would replay the exact
+        # stream 'none' already covers.  'none' is preferred as survivor
+        # (no x-gather/y-scatter at execute time); a compile this leaves
+        # with one candidate skips scoring entirely below.
+        pref = [lab for lab in ("none",) if lab in cands] + \
+            [lab for lab in ordered if lab != "none"]
+        seen: Dict[object, str] = {}
+        for label in pref:
+            sig = (matrix_fingerprint(permuted_by[label]), fmt_by[label])
+            seen.setdefault(sig, label)
+        keep = set(seen.values())
+        ordered = [lab for lab in ordered if lab in keep]
+
     t0 = time.perf_counter()
     predicted: Dict[str, Dict] = {}
     if predictor == "none" or len(ordered) == 1:
         chosen = ordered[0]
+        stats["scoring"] = "none"
     else:
-        for label in ordered:
-            predicted[label] = _predict(permuted_by[label], threads, machine,
-                                        parallel_spec, predictor)
+        if predictor == "model":
+            import numpy as _np
+
+            from .costmodel import features_for
+
+            l2b = getattr(parallel_spec, "l2_bytes", None)
+            llcb = getattr(parallel_spec, "llc_bytes", None)
+            feats = []
+            for label in ordered:
+                rep = report_by[label]
+                if rep is None:
+                    # format was forced, so the loop above skipped the
+                    # analysis -- the model still needs features
+                    rep = structure.analyze(permuted_by[label],
+                                            sample_rows=sample_rows)
+                    report_by[label] = rep
+                feats.append(features_for(rep, threads, l2_bytes=l2b,
+                                          llc_bytes=llcb, machine=machine))
+            scores = model.predict(_np.stack(feats))
+            for label, yhat in zip(ordered, scores):
+                predicted[label] = {"predictor": "model",
+                                    "gflops": float(2.0 ** yhat)}
+        else:
+            for label in ordered:
+                predicted[label] = _predict(permuted_by[label], threads,
+                                            machine, parallel_spec,
+                                            predictor)
         chosen = ordered[0]
         for label in ordered[1:]:       # strict >: ties keep sorted order
             if predicted[label]["gflops"] > predicted[chosen]["gflops"]:
@@ -296,6 +369,7 @@ def compile(matrix: CSR, *,                       # noqa: A001 (plan.compile)
             bar = predicted["none"]["gflops"] * (1.0 + REORDER_MARGIN)
             if predicted[chosen]["gflops"] <= bar:
                 chosen = "none"
+        stats["scoring"] = predictor
     stats["predict_s"] = time.perf_counter() - t0
 
     reordering, permuted = cands[chosen], permuted_by[chosen]

@@ -241,6 +241,103 @@ def plan_from_state(state: Dict, mesh=None) -> SpmvPlan:
         compile_stats=meta.get("compile_stats", {}), mesh=mesh)
 
 
+def _f64_leaf(arr: np.ndarray) -> np.ndarray:
+    """float64 array as a uint8 leaf.  Checkpoint restore funnels every
+    leaf through `jnp.asarray`, which truncates float64 to float32 under
+    the default x64-off config -- split thresholds and leaf values must
+    survive bit-exactly (the CI byte-compare depends on it), so they ride
+    as raw bytes like the msgpack'd meta leaf does."""
+    return np.frombuffer(np.ascontiguousarray(arr, np.float64).tobytes(),
+                         dtype=np.uint8).copy()
+
+
+def _f64_from_leaf(leaf) -> np.ndarray:
+    return np.frombuffer(np.asarray(leaf, np.uint8).tobytes(),
+                         dtype=np.float64).copy()
+
+
+def model_state(model) -> Dict:
+    """A `costmodel.CostModel` as one checkpointable pytree: the trees'
+    node arrays concatenated (CSR-style `offsets` delimit trees), the
+    scalar/record fields msgpack'd into the usual uint8 `meta` leaf."""
+    meta = {
+        "version": _VERSION,
+        "kind": "costmodel",
+        "base": float(model.base),
+        "learning_rate": float(model.learning_rate),
+        "feature_names": list(model.feature_names),
+        "config": _plain(dict(model.config)),
+        "meta": _plain(dict(model.meta)),
+    }
+    trees = model.trees
+    offsets = np.zeros(len(trees) + 1, dtype=np.int32)
+    for i, t in enumerate(trees):
+        offsets[i + 1] = offsets[i] + t.feat.shape[0]
+
+    def cat(name, dtype):
+        if not trees:
+            return np.zeros(0, dtype)
+        return np.concatenate([np.asarray(getattr(t, name), dtype)
+                               for t in trees])
+
+    return {
+        "meta": np.frombuffer(msgpack.packb(meta), dtype=np.uint8).copy(),
+        "offsets": offsets,
+        "feat": cat("feat", np.int32),
+        "left": cat("left", np.int32),
+        "right": cat("right", np.int32),
+        "thresh": _f64_leaf(cat("thresh", np.float64)),
+        "value": _f64_leaf(cat("value", np.float64)),
+    }
+
+
+def model_from_state(state: Dict):
+    """Rebuild a `costmodel.CostModel` from `model_state` output."""
+    from .costmodel import CostModel, _Tree
+
+    meta = msgpack.unpackb(np.asarray(state["meta"]).tobytes(),
+                           strict_map_key=False)
+    if meta["version"] != _VERSION or meta.get("kind") != "costmodel":
+        raise ValueError(f"not a cost-model state: {meta.get('kind')!r} "
+                         f"v{meta.get('version')!r}")
+    offsets = np.asarray(state["offsets"], dtype=np.int64)
+    thresh = _f64_from_leaf(state["thresh"])
+    value = _f64_from_leaf(state["value"])
+    trees = []
+    for i in range(offsets.shape[0] - 1):
+        lo, hi = int(offsets[i]), int(offsets[i + 1])
+        trees.append(_Tree(
+            feat=np.asarray(state["feat"][lo:hi], np.int32),
+            thresh=thresh[lo:hi].copy(),
+            left=np.asarray(state["left"][lo:hi], np.int32),
+            right=np.asarray(state["right"][lo:hi], np.int32),
+            value=value[lo:hi].copy()))
+    return CostModel(base=float(meta["base"]),
+                     learning_rate=float(meta["learning_rate"]),
+                     trees=tuple(trees),
+                     feature_names=tuple(meta["feature_names"]),
+                     config=meta.get("config", {}),
+                     meta=meta.get("meta", {}))
+
+
+def save_model(model, ckpt_dir: str, step: int = 0,
+               manager: Optional[CheckpointManager] = None) -> str:
+    """Write a cost model as a committed checkpoint step.  The codec is
+    pinned to zlib (not the zstd-preferring default), so the shipped
+    in-repo artifact restores in environments without optional
+    compressors installed."""
+    mgr = manager if manager is not None else CheckpointManager(
+        ckpt_dir, codec="zlib")
+    return mgr.save(step, model_state(model), blocking=True)
+
+
+def load_model(ckpt_dir: str, step: Optional[int] = None):
+    """Load (model, step) from a checkpoint written by `save_model`."""
+    mgr = CheckpointManager(ckpt_dir)
+    state, step = mgr.restore_any(step)
+    return model_from_state(state), step
+
+
 def save_plan(plan: SpmvPlan, ckpt_dir: str, step: int = 0,
               manager: Optional[CheckpointManager] = None) -> str:
     """Write the plan as a committed checkpoint step.  Returns the step dir."""

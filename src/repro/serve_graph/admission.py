@@ -17,7 +17,7 @@ and all of them release together when it lands.
 from __future__ import annotations
 
 from collections import deque
-from typing import Callable, Deque, Dict, List
+from typing import Callable, Deque, Dict, List, Optional
 
 from .requests import AnalyticRequest
 
@@ -62,11 +62,17 @@ class AdmissionController:
         self.waiting = still
         return ready
 
-    def run_compiles(self, budget: int, compile_key: Callable[[str], object]
+    def run_compiles(self, budget: Optional[int],
+                     compile_key: Callable[[str], object]
                      ) -> List[AnalyticRequest]:
         """Compile up to `budget` queued keys (FIFO) and release every
-        request that was pending on them."""
+        request that was pending on them.  `budget=None` drains the whole
+        queue this step -- the right setting when compiles are scored by
+        the learned cost model (microseconds each), where rationing them
+        one per step would park requests for no reason."""
         released: List[AnalyticRequest] = []
+        if budget is None:
+            budget = len(self.compile_q)
         while budget > 0 and self.compile_q:
             key = self.compile_q.popleft()
             compile_key(key)

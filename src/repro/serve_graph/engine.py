@@ -49,9 +49,17 @@ from .scheduler import GraphScheduler, RunningRequest
 class GraphEngineConfig:
     n_lanes: int = 64               # batch-lane pool (= max coalesced width)
     compile_queue_cap: int = 8      # bounded miss queue (back-pressure past it)
-    compiles_per_step: int = 1      # compile budget per engine step
+    compiles_per_step: Optional[int] = 1   # compile budget per engine step;
+                                    # None drains the queue every step (the
+                                    # right pairing with predictor='model',
+                                    # where a compile is microseconds)
     max_plans: int = 64             # plan-cache LRU capacity
     reorder: str = "none"           # compile option for every served plan
+    predictor: str = "none"         # candidate scoring mode for served plans
+                                    # ('none' keeps cache keys identical to
+                                    # the blocking drivers' defaults; 'model'
+                                    # enables the learned fast path for
+                                    # reorder='auto' fleets)
     use_pallas: bool = True
     interpret: Optional[bool] = None
     max_iters_default: int = 256    # per-request iteration cap
@@ -124,6 +132,7 @@ class GraphEngine:
         matrix, semiring, aux = analytic_operand(analytic,
                                                  self.graphs[graph_id])
         opts = plan_options(semiring, reorder=self.cfg.reorder,
+                            predictor=self.cfg.predictor,
                             use_pallas=self.cfg.use_pallas,
                             interpret=self.cfg.interpret)
         key = self.plan_cache.key_for(matrix, **opts)

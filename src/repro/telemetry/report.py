@@ -120,7 +120,9 @@ def plan_cache_report(stats: Dict, before: Dict = None,
     """
     s = dict(stats)
     if before is not None:
-        for k in ("hits", "misses", "evictions", "compiles", "compile_s"):
+        for k in ("hits", "misses", "evictions", "compiles", "compile_s",
+                  "predictor_compiles", "predictor_compile_s",
+                  "oracle_compiles", "oracle_compile_s"):
             s[k] = s.get(k, 0) - before.get(k, 0)
     served = s.get("hits", 0) + s.get("misses", 0)
     # .get throughout: an empty/partial stats dict renders a zero row
@@ -128,11 +130,18 @@ def plan_cache_report(stats: Dict, before: Dict = None,
     hit_rate = s.get("hits", 0) / served if served else 0.0
     compiles = s.get("compiles", 0)
     mean_compile = s.get("compile_s", 0.0) / compiles if compiles else 0.0
+    # compile cost split by scoring mode: learned-predictor compiles are
+    # microseconds, oracle (replay/analytic) compiles can be seconds --
+    # one blended mean would misstate both
+    pn, ps = s.get("predictor_compiles", 0), s.get("predictor_compile_s", 0.0)
+    on, os_ = s.get("oracle_compiles", 0), s.get("oracle_compile_s", 0.0)
     head = ["plans", "hits", "misses", "hit_rate", "evictions",
-            "compiles", "compile_s", "mean_compile_s"]
+            "compiles", "compile_s", "mean_compile_s",
+            "predictor_compiles", "predictor_compile_s",
+            "oracle_compiles", "oracle_compile_s"]
     row = [s.get("plans", 0), s.get("hits", 0), s.get("misses", 0),
            hit_rate, s.get("evictions", 0), compiles,
-           s.get("compile_s", 0.0), mean_compile]
+           s.get("compile_s", 0.0), mean_compile, pn, ps, on, os_]
     return "\n".join([f"# {title}" + (" (windowed)" if before else ""),
                       ",".join(head), ",".join(_fmt(v) for v in row)])
 

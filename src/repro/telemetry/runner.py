@@ -56,14 +56,15 @@ class SweepCell:
     stable across processes and runs -- the checkpoint key.
     """
 
-    sweep: str                # 'mech' | 'scaling' | 'graph'
-    kind: str                 # 'fd' | 'rmat'
+    sweep: str                # 'mech' | 'scaling' | 'graph' | 'label'
+    kind: str                 # 'fd' | 'rmat' | (label: costmodel.LABEL_KINDS)
     log2n: int
     reorder: str = "none"
     format: str = ""          # graph: pinned container format ('' = auto)
     threads: int = 1
     partition: str = ""       # scaling: 'equal' | 'balanced' | 'merge'
-    mechanism: str = ""       # mech: label into SweepConfig.mechanisms
+    mechanism: str = ""       # mech: label into SweepConfig.mechanisms;
+                              # label: costmodel.LABEL_SPECS geometry key
     analytic: str = ""        # graph: driver name
 
     def key(self) -> str:
@@ -159,6 +160,15 @@ def run_cell(cell: SweepCell, cfg: SweepConfig):
             cell.kind, cell.log2n, cell.analytic, spec=cfg.hier_spec,
             machine=cfg.machine, seed=cfg.seed, max_iters=cfg.max_iters,
             format=cell.format or cfg.graph_format or None)
+    if cell.sweep == "label":
+        # cost-model training rows: replay-oracle throughput labels
+        # (the spec geometry rides the free `mechanism` field)
+        from repro.plan import costmodel
+
+        return costmodel.run_label_cell(
+            cell.kind, cell.log2n, cell.reorder, cell.threads,
+            spec_label=cell.mechanism, machine=cfg.machine,
+            seed=cfg.seed, sweeps=cfg.sweeps)
     raise ValueError(f"unknown sweep family {cell.sweep!r}")
 
 
@@ -185,9 +195,13 @@ def _plain(o):
 
 def encode_point(p) -> bytes:
     """Canonical JSON payload for a sweep point (sorted keys, utf-8)."""
+    from repro.plan.costmodel import LabelPoint
+
     from .sweep import GraphPoint, ScalingPoint, SweepPoint
 
-    if isinstance(p, SweepPoint):
+    if isinstance(p, LabelPoint):
+        tag, d = "label", dataclasses.asdict(p)
+    elif isinstance(p, SweepPoint):
         tag, d = "mech", {
             "kind": p.kind, "log2n": p.log2n, "nnz": p.nnz,
             "threads": p.threads, "mechanism": p.mechanism,
@@ -222,6 +236,15 @@ def decode_point(blob: bytes):
 
     obj = json.loads(blob.decode("utf-8"))
     tag, d = obj["t"], obj["d"]
+    if tag == "label":
+        from repro.plan.costmodel import LabelPoint
+
+        return LabelPoint(
+            kind=d["kind"], log2n=int(d["log2n"]), seed=int(d["seed"]),
+            reorder=d["reorder"], threads=int(d["threads"]),
+            spec=d["spec"], nnz=int(d["nnz"]), gflops=float(d["gflops"]),
+            time_s=float(d["time_s"]),
+            features=tuple(float(v) for v in d["features"]))
     if tag == "mech":
         return SweepPoint(
             kind=d["kind"], log2n=int(d["log2n"]), nnz=int(d["nnz"]),

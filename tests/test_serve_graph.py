@@ -146,6 +146,58 @@ def test_engine_coalesces_same_plan_requests():
 
 
 # ---------------------------------------------------------------------------
+# learned-predictor serving: scoring mode never changes results
+# ---------------------------------------------------------------------------
+
+def _run_fleet(**cfg_over):
+    eng = _engine(**cfg_over)
+    for i in range(4):
+        eng.submit(AnalyticRequest(i, "fd" if i % 2 else "rmat", "bfs",
+                                   sources=(i,)))
+    eng.submit(AnalyticRequest(4, "rmat", "pagerank", params={"tol": 1e-6}))
+    out = eng.run()
+    return eng, {rid: (r.values.tobytes(), r.n_iters, r.converged)
+                 for rid, r in sorted(out.items())}
+
+
+def test_model_scored_serving_matches_oracle_bitwise():
+    """predictor='model' (cost-model compiles, queue drained per step)
+    must serve bit-identical results to the replay-scored oracle config
+    -- scoring picks the plan, never what it computes."""
+    em, dm = _run_fleet(reorder="auto", predictor="model",
+                        compiles_per_step=None)
+    eo, do = _run_fleet(reorder="auto", predictor="replay",
+                        compiles_per_step=1)
+    assert dm == do
+    sm, so = em.plan_cache.stats(), eo.plan_cache.stats()
+    assert sm["predictor_compiles"] == sm["compiles"] > 0
+    assert sm["oracle_compiles"] == 0
+    assert so["oracle_compiles"] == so["compiles"] > 0
+    assert so["predictor_compiles"] == 0
+
+
+def test_drain_compile_queue_admits_in_one_step():
+    """compiles_per_step=None pairs with the learned fast path: every
+    queued plan compiles the same step it is enqueued, so no cold
+    request waits behind the per-step ration."""
+    paced = _engine(reorder="auto", predictor="model", compiles_per_step=1)
+    drain = _engine(reorder="auto", predictor="model",
+                    compiles_per_step=None)
+    for eng in (paced, drain):
+        eng.submit(AnalyticRequest(0, "fd", "bfs", sources=(0,)))
+        eng.submit(AnalyticRequest(1, "rmat", "bfs", sources=(0,)))
+        eng.submit(AnalyticRequest(2, "fd", "sssp", sources=(1,)))
+        eng.step()
+    assert len(drain.admission.compile_q) == 0
+    assert len(paced.admission.compile_q) > 0
+    admitted = {e[2] for e in drain.scheduler.log if e[1] == "admit"}
+    assert admitted == {0, 1, 2}
+    out_p, out_d = paced.run(), drain.run()
+    assert {r: out_d[r].values.tobytes() for r in out_d} == \
+        {r: out_p[r].values.tobytes() for r in out_p}
+
+
+# ---------------------------------------------------------------------------
 # preemption: oldest delayed work evicts the youngest runner
 # ---------------------------------------------------------------------------
 

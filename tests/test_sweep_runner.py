@@ -86,7 +86,9 @@ def test_keys_unique_across_sweeps():
     SweepCell(sweep="scaling", kind="rmat", log2n=7, threads=2,
               partition="balanced"),
     SweepCell(sweep="graph", kind="fd", log2n=6, analytic="pagerank"),
-], ids=["mech", "scaling", "graph"])
+    SweepCell(sweep="label", kind="banded", log2n=7, reorder="rcm",
+              threads=2, mechanism="scaled"),
+], ids=["mech", "scaling", "graph", "label"])
 def test_encode_decode_roundtrip(cell):
     cfg = dataclasses.replace(CFG, max_iters=4)
     p = runner.run_cell(cell, cfg)
@@ -94,6 +96,24 @@ def test_encode_decode_roundtrip(cell):
     q = decode_point(blob)
     assert q == p
     assert encode_point(q) == blob
+
+
+def test_label_cells_ride_the_runner():
+    """The cost-model labeler is a fourth sweep family: `run_cell`
+    dispatches on sweep='label' (geometry label riding the `mechanism`
+    field, seed from the config) and returns the exact row the direct
+    entry point produces."""
+    from repro.plan.costmodel import label_cells, run_label_cell
+
+    cells = label_cells(kinds=("banded",), log2ns=(7,), threads_list=(2,),
+                        reorders=("none",), specs=("scaled",))
+    assert [c.key() for c in cells] == \
+        ["label|banded|7|none|-|2|-|scaled|-"]
+    cfg = SweepConfig(seed=5, sweeps=1)
+    got = runner.run_cell(cells[0], cfg)
+    want = run_label_cell("banded", 7, "none", 2, spec_label="scaled",
+                          seed=5, sweeps=1)
+    assert got == want and got.seed == 5
 
 
 # ---------------------------------------------------------------------------
