@@ -5,9 +5,11 @@ CSV blocks.  `--fast` trims the empirical sweep (CI); default reproduces
 the full paper sweep via synthetic profiles to 2^26.  `--smoke` is the
 benchmark smoke job: reorder + scaling + plan amortization + a
 tiny-geometry graph-analytic case + the analytics serving bench
-(hundreds of requests, ≥20 graphs, asserted warm hit rate), thread
-axis {1, 2} — just enough execution that those benches (and the plan
-warm/cold ratio and serving hit-rate assertions) cannot silently rot.
+(hundreds of requests, ≥20 graphs, asserted warm hit rate) + the
+streaming bench (asserted overlay-vs-recompile update latency and
+warm-start savings), thread axis {1, 2} — just enough execution that
+those benches (and the plan warm/cold ratio and serving hit-rate
+assertions) cannot silently rot.
 """
 from __future__ import annotations
 
@@ -16,7 +18,7 @@ import sys
 import time
 
 ALL = ("paper,kernels,traffic,moe,serve,telemetry,reorder,scaling,plan,"
-       "graph,serve_graph")
+       "graph,serve_graph,stream")
 
 
 def main(argv=None) -> None:
@@ -43,7 +45,8 @@ def main(argv=None) -> None:
     common.WORKERS = max(args.workers, 1)
     common.SWEEP_CKPT = args.resume
 
-    default = "reorder,scaling,plan,graph,serve_graph" if args.smoke else ALL
+    default = ("reorder,scaling,plan,graph,serve_graph,stream"
+               if args.smoke else ALL)
     want = set((args.only or default).split(","))
     t0 = time.time()
 
@@ -80,6 +83,9 @@ def main(argv=None) -> None:
     if "serve_graph" in want:
         from . import serve_bench_graph
         serve_bench_graph.main()
+    if "stream" in want:
+        from . import stream_bench
+        stream_bench.main()
 
     print(f"# benchmarks.run completed in {time.time()-t0:.1f}s",
           file=sys.stderr)

@@ -108,8 +108,8 @@ def _modelled_ms(eng: GraphEngine, results, memo: Dict) -> Dict[int, float]:
     for rid, res in results.items():
         ck = (res.graph_id, res.analytic)
         if ck not in memo:
-            matrix, opts, _, _ = eng._derive(*ck)
-            plan = eng.plan_cache.get_or_compile(matrix, **opts)
+            st = eng._derive(*ck)
+            plan = eng.plan_cache.get_or_compile(st.matrix, **st.opts)
             s = iteration_summaries(plan, 2, spec=SCALED_CELL)
             nnz = plan.csr.nnz if plan.csr is not None else plan.n_rows
             memo[ck] = (nnz, s[0].cycles_per_nnz, s[1].cycles_per_nnz,
@@ -266,7 +266,7 @@ def _pressure_section(cfg) -> None:
         wall_s = time.perf_counter() - t0
         cs = eng.plan_cache.stats()
         stp = [float(r.latency_steps) for r in out.values()]
-        touched = len({v[3] for v in eng._derived.values()})
+        touched = len({v.key for v in eng._derived.values()})
         rows.append([label, n_req, eng.step_count, wall_s,
                      cs["misses"], cs["misses"] - touched, cs["evictions"],
                      cs["predictor_compiles"], cs["oracle_compiles"],

@@ -1,0 +1,336 @@
+"""Batched edge deltas: the mutation container for streaming matrices.
+
+The plan pipeline freezes a matrix at compile time; a live graph does
+not hold still.  `EdgeDelta` is the bridge: a batch of edge inserts and
+deletes expressed against one *base* CSR, small enough to apply as a
+COO correction pass after the planned SpMV (`repro.plan.overlay`) and
+to materialize cheaply when the plan must be rebuilt
+(`CSR.apply_delta`).
+
+Overlay algebra
+---------------
+Under plus_times, SpMV is linear: (A + Δ)x = Ax + Δx, so an insert is
+a COO entry with its value and a *delete* is the same entry negated --
+both exact (no float cancellation issues arise for the bit-exactness
+contract because the subtraction removes precisely the term the base
+kernel added only in exact arithmetic; the property suite therefore
+pins bit-identity on integer-valued matrices, where every f32 sum is
+exact).  The other semirings have no ⊕-inverse: an insert still
+overlays (y' = y ⊕ (Δ ⊗ x) is exact because ⊕ is idempotent or the
+coordinate was absent from the base), but a delete cannot be undone
+after the base reduction -- `has_deletes` under a non-invertible
+semiring marks the delta *overlay-ineligible* and forces
+materialization (`repro.plan.overlay.overlay_eligible`).
+
+Contract
+--------
+Coordinates are unique per operation: an insert targets a coordinate
+absent from the effective matrix, a delete targets a present one, and
+"change this value" is a delete plus an insert of the same coordinate
+in one batch (deletes apply first).  This keeps every semiring
+unambiguous -- a duplicate-summing insert would be plus_times-specific.
+Base CSRs must be canonical (built via `CSR.from_coo`, duplicate-free);
+non-canonical bases are refused rather than silently corrupted.
+
+`EdgeDelta` is host-side numpy, deliberately NOT a pytree: deltas live
+on the mutation path (plan lifecycle bookkeeping), and only the small
+arrays the overlay pass needs are shipped to the device by
+`OverlaidPlan`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Tuple
+
+import numpy as np
+
+from .formats import CSR
+
+
+def _canonical_keys(csr: CSR, who: str) -> np.ndarray:
+    """Flattened (row * n_cols + col) keys of a canonical CSR, strictly
+    ascending.  Raises on unsorted or duplicate coordinates."""
+    indptr = np.asarray(csr.indptr, dtype=np.int64)
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), np.diff(indptr))
+    keys = rows * csr.n_cols + np.asarray(csr.indices, dtype=np.int64)
+    if keys.size and not np.all(np.diff(keys) > 0):
+        raise ValueError(
+            f"{who} requires a canonically (row, col)-sorted, duplicate-free "
+            "CSR (build via CSR.from_coo with unique coordinates)")
+    return keys
+
+
+def _member(query_keys: np.ndarray, base_keys: np.ndarray
+            ) -> Tuple[np.ndarray, np.ndarray]:
+    """(found mask, position) of each query key in sorted `base_keys`."""
+    if base_keys.size == 0:
+        z = np.zeros(query_keys.shape, dtype=np.int64)
+        return np.zeros(query_keys.shape, dtype=bool), z
+    pos = np.searchsorted(base_keys, query_keys)
+    pos_c = np.minimum(pos, base_keys.size - 1)
+    return (pos < base_keys.size) & (base_keys[pos_c] == query_keys), pos_c
+
+
+def csr_lookup(csr: CSR, rows, cols) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized coordinate lookup: (values, found mask) for each
+    (rows[i], cols[i]) in a canonical CSR.  Absent coordinates report
+    value 0.0 and found=False."""
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    keys = _canonical_keys(csr, "csr_lookup")
+    found, pos = _member(rows * csr.n_cols + cols, keys)
+    data = np.asarray(csr.data)
+    vals = np.where(found, data[pos] if data.size else 0.0, 0.0)
+    return vals.astype(data.dtype if data.size else np.float32), found
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeDelta:
+    """A canonical batch of edge mutations against one base matrix.
+
+    Entries are (row, col, value, is_delete), sorted by (row, col) with
+    a coordinate's delete ordered before its re-insert; at most one
+    delete and one insert may name a coordinate.  Delete values record
+    the base value being removed (that is what the plus_times overlay
+    negates).  Build through `from_updates` / `csr_diff` / `merge`; the
+    raw constructor is an implementation detail shared with `_build`.
+    """
+
+    rows: np.ndarray       # (nnz,) int64
+    cols: np.ndarray       # (nnz,) int64
+    vals: np.ndarray       # (nnz,) float32; for deletes, the removed value
+    deletes: np.ndarray    # (nnz,) bool
+    n_rows: int
+    n_cols: int
+
+    # -- geometry -----------------------------------------------------------
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n_rows, self.n_cols)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.size)
+
+    @property
+    def n_deletes(self) -> int:
+        return int(self.deletes.sum())
+
+    @property
+    def n_inserts(self) -> int:
+        return self.nnz - self.n_deletes
+
+    @property
+    def has_deletes(self) -> bool:
+        return bool(self.deletes.any())
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def _build(rows, cols, vals, deletes, n_rows: int, n_cols: int
+               ) -> "EdgeDelta":
+        rows = np.asarray(rows, dtype=np.int64).ravel()
+        cols = np.asarray(cols, dtype=np.int64).ravel()
+        vals = np.asarray(vals, dtype=np.float32).ravel()
+        deletes = np.asarray(deletes, dtype=bool).ravel()
+        if not (rows.shape == cols.shape == vals.shape == deletes.shape):
+            raise ValueError("rows/cols/vals/deletes must be equal-length")
+        if rows.size:
+            if (rows.min() < 0 or rows.max() >= n_rows
+                    or cols.min() < 0 or cols.max() >= n_cols):
+                raise ValueError(
+                    f"delta coordinates out of range for {n_rows}x{n_cols}")
+            order = np.lexsort((~deletes, cols, rows))
+            rows, cols = rows[order], cols[order]
+            vals, deletes = vals[order], deletes[order]
+            keys = rows * n_cols + cols
+            same = keys[1:] == keys[:-1]
+            pair_ok = deletes[:-1] & ~deletes[1:]       # delete then insert
+            if (same & ~pair_ok).any() or (same[1:] & same[:-1]).any():
+                raise ValueError(
+                    "a coordinate may carry at most one delete and one "
+                    "insert per delta batch")
+        return EdgeDelta(rows=rows, cols=cols, vals=vals, deletes=deletes,
+                         n_rows=int(n_rows), n_cols=int(n_cols))
+
+    @staticmethod
+    def empty(n_rows: int, n_cols: int) -> "EdgeDelta":
+        z = np.zeros(0, dtype=np.int64)
+        return EdgeDelta(rows=z, cols=z.copy(),
+                         vals=np.zeros(0, dtype=np.float32),
+                         deletes=np.zeros(0, dtype=bool),
+                         n_rows=int(n_rows), n_cols=int(n_cols))
+
+    @staticmethod
+    def from_updates(base: CSR, inserts: Iterable = (),
+                     deletes: Iterable = ()) -> "EdgeDelta":
+        """Validated delta from user-level updates against `base`.
+
+        `inserts` are (row, col, value) triples naming coordinates absent
+        from `base`; `deletes` are (row, col) pairs naming present ones
+        (the removed value is looked up here -- callers never supply it).
+        Changing a stored value = delete + insert of the same coordinate
+        in one batch.  Violations raise instead of producing a delta
+        whose overlay and materialization would disagree.
+        """
+        ins = np.asarray(list(inserts), dtype=np.float64).reshape(-1, 3)
+        dels = np.asarray(list(deletes), dtype=np.int64).reshape(-1, 2)
+        ir = ins[:, 0].astype(np.int64)
+        ic = ins[:, 1].astype(np.int64)
+        iv = ins[:, 2].astype(np.float32)
+        dr, dc = dels[:, 0], dels[:, 1]
+        dvals, found = csr_lookup(base, dr, dc)
+        if not found.all():
+            missing = [(int(r), int(c)) for r, c in
+                       zip(dr[~found][:5], dc[~found][:5])]
+            raise ValueError(f"deletes name absent coordinates: {missing}")
+        _, present = csr_lookup(base, ir, ic)
+        if present.any():
+            del_keys = dr * base.n_cols + dc
+            bad = present & ~np.isin(ir * base.n_cols + ic, del_keys)
+            if bad.any():
+                clash = [(int(r), int(c)) for r, c in
+                         zip(ir[bad][:5], ic[bad][:5])]
+                raise ValueError(
+                    f"inserts target stored coordinates {clash}; delete "
+                    "first (delete+insert in one batch updates the value)")
+        return EdgeDelta._build(
+            np.concatenate([dr, ir]), np.concatenate([dc, ic]),
+            np.concatenate([dvals.astype(np.float32), iv]),
+            np.concatenate([np.ones(dr.size, bool), np.zeros(ir.size, bool)]),
+            base.n_rows, base.n_cols)
+
+    def merge(self, other: "EdgeDelta") -> "EdgeDelta":
+        """Net effect of `self` followed by `other` (chained against the
+        same lineage: `other` was built against `self` applied to the
+        base).  Insert-then-delete of the same coordinate annihilates;
+        delete-then-reinsert folds to a value change.  The result is a
+        single delta against the original base."""
+        if self.shape != other.shape:
+            raise ValueError(f"shape mismatch: {self.shape} vs {other.shape}")
+        state: "dict[int, tuple]" = {}
+        for d in (self, other):
+            for r, c, v, is_del in zip(d.rows, d.cols, d.vals, d.deletes):
+                key = int(r) * self.n_cols + int(c)
+                dv, iv = state.get(key, (None, None))
+                if is_del:
+                    if iv is not None:
+                        iv = None          # deleting our own insert: net zero
+                    elif dv is None:
+                        dv = float(v)      # deleting a base edge
+                    else:
+                        raise ValueError(
+                            f"coordinate ({r}, {c}) deleted twice without an "
+                            "intervening insert")
+                else:
+                    if iv is not None:
+                        raise ValueError(
+                            f"coordinate ({r}, {c}) inserted twice without an "
+                            "intervening delete")
+                    iv = float(v)
+                state[key] = (dv, iv)
+        rows, cols, vals, dels = [], [], [], []
+        for key, (dv, iv) in state.items():
+            r, c = divmod(key, self.n_cols)
+            if dv is not None:
+                rows.append(r); cols.append(c); vals.append(dv)
+                dels.append(True)
+            if iv is not None:
+                rows.append(r); cols.append(c); vals.append(iv)
+                dels.append(False)
+        return EdgeDelta._build(rows, cols, vals, dels,
+                                self.n_rows, self.n_cols)
+
+    # -- overlay views ------------------------------------------------------
+
+    def signed_coo(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(rows, cols, values) with delete values negated -- the
+        plus_times overlay stream: (A + Δ)x = Ax + Δx."""
+        vals = np.where(self.deletes, -self.vals, self.vals)
+        return self.rows, self.cols, vals.astype(np.float32)
+
+    def insert_coo(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(rows, cols, values) of the inserts only -- the overlay stream
+        for ⊕-only semirings.  Refuses a delta with deletes: those have
+        no overlay under a non-invertible ⊕ (materialize instead)."""
+        if self.has_deletes:
+            raise ValueError(
+                "delta carries deletes, which are overlay-ineligible "
+                "outside plus_times; materialize via CSR.apply_delta")
+        return self.rows, self.cols, self.vals
+
+    def column_order(self) -> np.ndarray:
+        """Permutation sorting entries by (col, row) -- the ascending-x
+        stream order the delta address trace replays (same discipline as
+        the HYB heavy partition)."""
+        return np.lexsort((self.rows, self.cols))
+
+    def summary(self) -> str:
+        return (f"EdgeDelta[{self.n_rows}x{self.n_cols}] "
+                f"+{self.n_inserts} -{self.n_deletes}")
+
+
+def csr_diff(old: CSR, new: CSR) -> EdgeDelta:
+    """The delta turning `old` into `new`: `old.apply_delta(csr_diff(old,
+    new))` reproduces `new` exactly.  A changed stored value appears as a
+    delete of the old value plus an insert of the new one.  This is how
+    the serving engine derives *operand* deltas (stochastic transpose,
+    patterns) generically from an adjacency mutation, without per-analytic
+    delta calculus."""
+    if old.shape != new.shape:
+        raise ValueError(f"shape mismatch: {old.shape} vs {new.shape}")
+    ok = _canonical_keys(old, "csr_diff")
+    nk = _canonical_keys(new, "csr_diff")
+    ov = np.asarray(old.data)
+    nv = np.asarray(new.data)
+    in_new, pn = _member(ok, nk)
+    in_old, po = _member(nk, ok)
+    diff_old = in_new & (np.where(in_new, nv[pn] if nv.size else 0.0, 0.0)
+                         != ov) if ok.size else np.zeros(0, bool)
+    diff_new = in_old & (np.where(in_old, ov[po] if ov.size else 0.0, 0.0)
+                         != nv) if nk.size else np.zeros(0, bool)
+    del_mask = (~in_new) | diff_old
+    ins_mask = (~in_old) | diff_new
+    dk, ik = ok[del_mask], nk[ins_mask]
+    return EdgeDelta._build(
+        np.concatenate([dk // old.n_cols, ik // old.n_cols]),
+        np.concatenate([dk % old.n_cols, ik % old.n_cols]),
+        np.concatenate([ov[del_mask], nv[ins_mask]]),
+        np.concatenate([np.ones(dk.size, bool), np.zeros(ik.size, bool)]),
+        old.n_rows, old.n_cols)
+
+
+def apply_delta(base: CSR, delta: EdgeDelta) -> CSR:
+    """Materialize `base` + `delta` as a fresh canonical CSR: deleted
+    coordinates removed structurally (even when the stored value is 0.0
+    -- the cc operand's zero weights stay intact for everything else),
+    inserts appended, the whole rebuilt through `CSR.from_coo`."""
+    if delta.shape != base.shape:
+        raise ValueError(f"shape mismatch: {base.shape} vs {delta.shape}")
+    bk = _canonical_keys(base, "apply_delta")
+    vals = np.asarray(base.data)
+    dmask = delta.deletes
+    del_keys = delta.rows[dmask] * base.n_cols + delta.cols[dmask]
+    found, pos = _member(del_keys, bk)
+    if not found.all():
+        missing = del_keys[~found][:5]
+        raise ValueError(
+            "delta deletes coordinates absent from the base: "
+            f"{[(int(k // base.n_cols), int(k % base.n_cols)) for k in missing]}")
+    keep = np.ones(bk.size, dtype=bool)
+    keep[pos[found]] = False
+    ins = ~dmask
+    clash, _ = _member(delta.rows[ins] * base.n_cols + delta.cols[ins],
+                       bk[keep])
+    if clash.any():
+        raise ValueError("delta inserts coordinates already stored in the "
+                         "base (delete first to change a value)")
+    rows = np.concatenate([bk[keep] // base.n_cols, delta.rows[ins]])
+    cols = np.concatenate([bk[keep] % base.n_cols, delta.cols[ins]])
+    v = np.concatenate([vals[keep], delta.vals[ins].astype(vals.dtype)])
+    return CSR.from_coo(rows, cols, v, base.n_rows, base.n_cols,
+                        dtype=vals.dtype)
+
+
+__all__ = ["EdgeDelta", "csr_lookup", "csr_diff", "apply_delta"]

@@ -114,6 +114,15 @@ class CSR:
         indptr = np.asarray(self.indptr)
         return np.diff(indptr)
 
+    def apply_delta(self, delta) -> "CSR":
+        """Materialize this matrix with an `repro.core.delta.EdgeDelta`
+        applied: deleted coordinates removed structurally, inserts
+        appended, result rebuilt canonically through `from_coo`.  The
+        streaming plan lifecycle calls this when a delta outgrows its
+        overlay budget and the plan re-compiles."""
+        from .delta import apply_delta as _apply
+        return _apply(self, delta)
+
     def permute(self, row_perm=None, col_perm=None) -> "CSR":
         """A' with A'[i, j] = A[row_perm[i], col_perm[j]].
 

@@ -19,7 +19,8 @@ as iterated semiring SpMVs over `repro.plan`:
 from .drivers import (ANALYTICS, DRIVERS, AnalyticDef, GraphResult,
                       analytic_operand, bfs, check_sources,
                       connected_components, make_stepper, pagerank,
-                      plan_options, sssp, transpose_csr)
+                      plan_options, sssp, transpose_csr,
+                      warm_start_params)
 from .semiring import (MAX_TIMES, MIN_PLUS, OR_AND, PLUS_TIMES, SEMIRINGS,
                        Semiring, resolve, spmv_csr_semiring_jnp,
                        spmv_ell_semiring_jnp, spmv_semiring_jnp)
@@ -32,6 +33,6 @@ __all__ = [
     "GraphResult", "DRIVERS", "pagerank", "bfs", "sssp",
     "connected_components", "transpose_csr",
     "AnalyticDef", "ANALYTICS", "analytic_operand", "make_stepper",
-    "check_sources", "plan_options",
+    "check_sources", "plan_options", "warm_start_params",
     "iteration_counters", "iteration_summaries",
 ]

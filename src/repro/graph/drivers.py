@@ -186,9 +186,13 @@ def cc_operand(adj: CSR) -> Tuple[CSR, Dict]:
     indptr = np.asarray(adj.indptr, dtype=np.int64)
     rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
     cols = np.asarray(adj.indices, dtype=np.int64)
-    sym = CSR.from_coo(np.concatenate([rows, cols]),
-                       np.concatenate([cols, rows]),
-                       np.zeros(2 * len(rows), dtype=np.float32), n, n)
+    # deduplicate coordinates (an edge stored in both directions would
+    # symmetrize to a doubled entry): the min_plus reduction is
+    # unaffected, and canonical duplicate-free operands are what the
+    # streaming lifecycle's csr_diff requires
+    keys = np.unique(np.concatenate([rows * n + cols, cols * n + rows]))
+    sym = CSR.from_coo(keys // n, keys % n,
+                       np.zeros(keys.size, dtype=np.float32), n, n)
     return sym, {}
 
 
@@ -221,8 +225,13 @@ class PageRankStepper:
             t = np.full((1, n), 1.0 / max(n, 1), np.float32)
         self.teleport = jnp.asarray(t)
         if r0 is not None:
-            r = jnp.asarray(r0, jnp.float32).reshape(1, n)
-            r = r / jnp.maximum(r.sum(), 1e-30)
+            r = jnp.asarray(r0, jnp.float32)
+            r = r.reshape(1, n) if r.ndim == 1 else r
+            if r.shape != self.teleport.shape:
+                raise ValueError(
+                    f"r0 shape {tuple(r.shape)} does not match the "
+                    f"{tuple(self.teleport.shape)} lane layout")
+            r = r / jnp.maximum(r.sum(axis=1, keepdims=True), 1e-30)
         else:
             r = self.teleport
         self.r = r
@@ -251,7 +260,13 @@ class PageRankStepper:
 class BfsStepper:
     """or_and frontier propagation; `values()[l, v]` is v's hop depth
     from lane l's source (+inf if unreachable).  Duplicate sources are
-    fine (equal lanes); zero sources is a zero-lane no-op run."""
+    fine (equal lanes); zero sources is a zero-lane no-op run.
+
+    No warm-start: depths are assigned level-synchronously (a vertex's
+    depth is the global `level` counter the step its frontier bit first
+    rises), so even an insert-only delta can LOWER finite depths --
+    resuming from old depths would keep the stale values.  Any delta
+    re-seeds BFS (`warm_start_params` returns None)."""
 
     analytic = "bfs"
 
@@ -285,17 +300,27 @@ class BfsStepper:
 
 
 class SsspStepper:
-    """min_plus Bellman-Ford relaxation, k source lanes."""
+    """min_plus Bellman-Ford relaxation, k source lanes.
+
+    `d0` warm-starts from prior distances (shape (k, n) matching the
+    sources): after insert-only edge deltas the old converged distances
+    are valid upper bounds, so relaxation resumes from them and only
+    re-settles the vertices the new edges improved.  Deletes can RAISE
+    true distances, which monotone relaxation can never do -- callers
+    must re-seed then (`warm_start_params` encodes the rule)."""
 
     analytic = "sssp"
 
-    def __init__(self, plan, aux: Dict, sources=(), **_):
+    def __init__(self, plan, aux: Dict, sources=(), d0=None, **_):
         n = plan.n_cols
         sources = check_sources(sources, n, "sssp")
         k = len(sources)
         self.plan, self.k = plan, k
         self.dist = np.full((k, n), np.inf, dtype=np.float32)
         self.dist[np.arange(k), sources] = 0.0
+        if d0 is not None:
+            self.dist = np.minimum(
+                np.asarray(d0, np.float32).reshape(k, n), self.dist)
         self.lane_done = np.zeros(k, bool)
         self.done = k == 0
 
@@ -316,14 +341,24 @@ class SsspStepper:
 
 class CcStepper:
     """min-label propagation to the component-wise minimum vertex id.
-    Always one lane; sources are ignored."""
+    Always one lane; sources are ignored.
+
+    `l0` warm-starts from prior labels: after insert-only deltas each
+    vertex's old label (the min id of its old component) is a reachable
+    upper bound in the new graph, so propagation resumes and only the
+    merged components re-settle.  Edge deletes can split components --
+    labels would have to rise -- so deletes force a re-seed
+    (`warm_start_params`)."""
 
     analytic = "connected_components"
 
-    def __init__(self, plan, aux: Dict, sources=(), **_):
+    def __init__(self, plan, aux: Dict, sources=(), l0=None, **_):
         n = plan.n_cols
         self.plan, self.k = plan, 1
         self.labels = np.arange(n, dtype=np.float32)[None]
+        if l0 is not None:
+            self.labels = np.minimum(
+                np.asarray(l0, np.float32).reshape(1, n), self.labels)
         self.lane_done = np.zeros(1, bool)
         self.done = False
 
@@ -385,6 +420,39 @@ def make_stepper(analytic: str, plan, aux: Dict, sources=(), params=None):
         raise ValueError(f"unknown analytic {analytic!r}; "
                          f"have {sorted(ANALYTICS)}")
     return d.stepper(plan, aux, sources=sources, **(params or {}))
+
+
+#: Stepper kwarg each analytic consumes to resume from prior values.
+WARM_START_PARAM = {"pagerank": "r0", "sssp": "d0",
+                    "connected_components": "l0"}
+
+
+def warm_start_params(analytic: str, values, delta=None) -> Optional[Dict]:
+    """Stepper params resuming `analytic` from converged `values` after
+    edge delta `delta`, or None when correctness demands a re-seed.
+
+    The rules (each argued in the steppers' docstrings):
+
+      pagerank   always warm -- power iteration converges to its unique
+                 fixpoint from any start; old scores are just a better
+                 start than teleport;
+      sssp / cc  warm after insert-only deltas (old values are valid
+                 upper bounds the monotone iteration drives down to the
+                 new fixpoint); deletes can raise true values, which
+                 min-reductions cannot, so they re-seed;
+      bfs        never warm -- level-synchronous depth assignment goes
+                 stale under any delta.
+
+    `delta` may be the adjacency delta or the derived operand delta
+    (inserts map to inserts either way); None means "unknown mutation",
+    treated as delete-bearing.
+    """
+    kw = WARM_START_PARAM.get(analytic)
+    if kw is None:
+        return None
+    if analytic != "pagerank" and (delta is None or delta.has_deletes):
+        return None
+    return {kw: np.asarray(values, dtype=np.float32)}
 
 
 def _drive(stepper, plan, max_iters: int, multi: bool) -> GraphResult:
@@ -462,8 +530,8 @@ def bfs(adj: CSR, source: Union[int, Sequence[int]],
 
 
 def sssp(adj: CSR, source: int, max_iters: Optional[int] = None, *,
-         reorder="none", format: Optional[str] = None, plan_cache=None,
-         use_pallas: bool = True,
+         d0=None, reorder="none", format: Optional[str] = None,
+         plan_cache=None, use_pallas: bool = True,
          interpret: Optional[bool] = None) -> GraphResult:
     """Single-source shortest paths by Bellman-Ford relaxation:
     d' = d ⊕ (A^T (⊕=min, ⊗=+) d), iterated to fixpoint.
@@ -471,19 +539,21 @@ def sssp(adj: CSR, source: int, max_iters: Optional[int] = None, *,
     Edge weights are the stored values (nonnegative for the shortest-path
     interpretation); unreachable vertices keep +inf.  Converges in at
     most n-1 relaxations; typically far fewer (`history` counts the
-    distances lowered per iteration).
+    distances lowered per iteration).  `d0` warm-starts from prior
+    distances (valid after insert-only graph deltas; see `SsspStepper`).
     """
     n = _require_square(adj, "sssp")
     matrix, _, aux = analytic_operand("sssp", adj)
     p = _graph_plan(matrix, MIN_PLUS, reorder=reorder, format=format,
                     plan_cache=plan_cache, use_pallas=use_pallas,
                     interpret=interpret)
-    st = SsspStepper(p, aux, sources=[source])
+    st = SsspStepper(p, aux, sources=[source], d0=d0)
     return _drive(st, p, n if max_iters is None else max_iters, multi=False)
 
 
 def connected_components(adj: CSR, max_iters: Optional[int] = None, *,
-                         reorder="none", format: Optional[str] = None,
+                         l0=None, reorder="none",
+                         format: Optional[str] = None,
                          plan_cache=None, use_pallas: bool = True,
                          interpret: Optional[bool] = None) -> GraphResult:
     """Component labels by min-label propagation over the symmetrized
@@ -501,7 +571,7 @@ def connected_components(adj: CSR, max_iters: Optional[int] = None, *,
     p = _graph_plan(matrix, MIN_PLUS, reorder=reorder, format=format,
                     plan_cache=plan_cache, use_pallas=use_pallas,
                     interpret=interpret)
-    st = CcStepper(p, aux)
+    st = CcStepper(p, aux, l0=l0)
     return _drive(st, p, n if max_iters is None else max_iters, multi=False)
 
 
@@ -512,4 +582,5 @@ __all__ = ["GraphResult", "transpose_csr", "pagerank", "bfs", "sssp",
            "connected_components", "DRIVERS",
            "AnalyticDef", "ANALYTICS", "analytic_operand", "make_stepper",
            "check_sources", "plan_options",
+           "warm_start_params", "WARM_START_PARAM",
            "PageRankStepper", "BfsStepper", "SsspStepper", "CcStepper"]

@@ -13,6 +13,8 @@ This package freezes that decision chain once per matrix:
                builds absorbing-padded plans for `repro.graph` analytics
   plan         SpmvPlan: execute / execute_many (SpMM) /
                power_iteration / address_trace
+  overlay      OverlaidPlan: a frozen plan + edge delta served warm
+               (streaming matrices; staleness-budgeted re-plan)
   cache        PlanCache + the process-wide DEFAULT_CACHE behind the
                thin-client call paths (core.spmv, distributed.spmv)
   costmodel    the learned candidate scorer (structural features ->
@@ -36,7 +38,10 @@ from .compiler import (REPLAY_NNZ_MAX, choose_format, compile, convert,
                        plan_for_container)
 from .costmodel import (CostModel, default_model, fit_cost_model,
                         set_default_model)
-from .fingerprint import fingerprint_arrays, is_concrete, matrix_fingerprint
+from .fingerprint import (chain_fingerprint, delta_fingerprint,
+                          fingerprint_arrays, is_concrete, matrix_fingerprint)
+from .overlay import (DEFAULT_STALENESS_BUDGET, OverlaidPlan, overlay,
+                      overlay_eligible)
 from .plan import SpmvPlan
 from .serial import (load_model, load_plan, model_from_state, model_state,
                      plan_from_state, plan_state, save_model, save_plan)
@@ -49,7 +54,10 @@ __all__ = [
     "choose_format", "convert", "REPLAY_NNZ_MAX",
     "PlanCache", "DEFAULT_CACHE", "get_plan",
     "CostModel", "fit_cost_model", "default_model", "set_default_model",
+    "OverlaidPlan", "overlay", "overlay_eligible",
+    "DEFAULT_STALENESS_BUDGET",
     "matrix_fingerprint", "fingerprint_arrays", "is_concrete",
+    "delta_fingerprint", "chain_fingerprint",
     "save_plan", "load_plan", "plan_state", "plan_from_state",
     "save_model", "load_model", "model_state", "model_from_state",
 ]

@@ -82,6 +82,12 @@ class PlanCache:
         self.predictor_compile_s = 0.0
         self.oracle_compiles = 0
         self.oracle_compile_s = 0.0
+        # streaming plan lifecycle (repro.plan.overlay): overlaid plans
+        # installed, atomic base swaps landed, re-plans forced by a
+        # past-budget (or overlay-ineligible) delta
+        self.overlays = 0
+        self.swaps = 0
+        self.delta_recompiles = 0
 
     def __len__(self) -> int:
         return len(self._plans)
@@ -97,6 +103,59 @@ class PlanCache:
         every scheduling step, and a probe is not a serve."""
         with self._lock:
             return key in self._plans
+
+    def peek(self, key: str):
+        """The resident value for `key`, or None.  Like `contains`, a
+        probe: no LRU promotion, no hit/miss accounting."""
+        with self._lock:
+            return self._plans.get(key)
+
+    @staticmethod
+    def chained_key(old_key: str, fingerprint: str) -> str:
+        """Re-key an entry under a new (chained) fingerprint, preserving
+        the option salt -- the streaming lifecycle's key derivation, with
+        no matrix re-hash (`plan.fingerprint.chain_fingerprint` supplies
+        the digest)."""
+        _, salt = old_key.split("|", 1)
+        return f"{fingerprint}|{salt}"
+
+    def install_overlay(self, key: str, overlaid, supersedes: str | None = None
+                        ) -> None:
+        """Insert an `OverlaidPlan` under its chained key.  The
+        superseded generation (previous overlay, or the base plan's key
+        when the base should no longer be served directly) is dropped in
+        the same critical section, so no scheduling step ever observes
+        both generations as warm."""
+        with self._lock:
+            self._plans[key] = overlaid
+            self._plans.move_to_end(key)
+            self.overlays += 1
+            if supersedes is not None and supersedes != key:
+                self._plans.pop(supersedes, None)
+            while len(self._plans) > self.max_plans:
+                self._plans.popitem(last=False)
+                self.evictions += 1
+
+    def swap(self, key: str, builder: Callable[[], object],
+             supersedes: str | None = None):
+        """Atomic re-plan landing: build (or reuse) the plan for `key`
+        and retire the superseded generation.  The drop and the counter
+        bump share one critical section -- after `swap` returns, probes
+        see exactly one generation."""
+        value = self.get_or_build(key, builder)
+        with self._lock:
+            if supersedes is not None and supersedes != key:
+                self._plans.pop(supersedes, None)
+            self.swaps += 1
+        return value
+
+    def note_delta_recompile(self) -> None:
+        """Count one delta-forced re-plan (past staleness budget, or an
+        overlay-ineligible delete) -- bumped when the re-plan is
+        *scheduled*, so reports show pressure even while the compile is
+        still queued."""
+        with self._lock:
+            self.delta_recompiles += 1
 
     def get_or_build(self, key: str, builder: Callable[[], object]):
         """Low-level entry: return the cached value for `key` or build,
@@ -180,6 +239,9 @@ class PlanCache:
             self.predictor_compile_s = 0.0
             self.oracle_compiles = 0
             self.oracle_compile_s = 0.0
+            self.overlays = 0
+            self.swaps = 0
+            self.delta_recompiles = 0
 
     def stats(self) -> Dict[str, float]:
         """Counter snapshot.  `hit_rate` is hits/(hits+misses) over the
@@ -196,6 +258,9 @@ class PlanCache:
                     "predictor_compile_s": round(self.predictor_compile_s, 6),
                     "oracle_compiles": self.oracle_compiles,
                     "oracle_compile_s": round(self.oracle_compile_s, 6),
+                    "overlays": self.overlays,
+                    "swaps": self.swaps,
+                    "delta_recompiles": self.delta_recompiles,
                     "hit_rate": self.hits / served if served else 0.0}
 
 

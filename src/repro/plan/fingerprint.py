@@ -45,7 +45,25 @@ def fingerprint_arrays(*arrays, extra: str = "") -> str:
 # digest.  Containers are frozen pytrees of immutable arrays; mutating
 # one's underlying buffer in place is outside the content-addressing
 # contract.
+#
+# The callback keeps the memo bounded by *live* containers; `_MEMO_CAP`
+# is the backstop for the pathological case of that many containers
+# held alive at once (a long-running serve fleet pinning every graph it
+# ever saw) -- past it, the oldest entries are dropped FIFO and simply
+# re-hash on next use.
 _FP_MEMO: dict = {}
+_DELTA_MEMO: dict = {}       # same discipline, for EdgeDelta digests
+_MEMO_CAP = 4096
+
+
+def _memo_put(memo: dict, key: int, obj, fp: str) -> None:
+    try:
+        ref = weakref.ref(obj, lambda _, k=key, m=memo: m.pop(k, None))
+    except TypeError:
+        return                          # not weakref-able: skip the memo
+    memo[key] = (ref, fp)
+    while len(memo) > _MEMO_CAP:
+        memo.pop(next(iter(memo)))
 
 
 def forget_fingerprint(matrix) -> str | None:
@@ -77,9 +95,39 @@ def matrix_fingerprint(matrix) -> str:
         return entry[1]
     leaves = jax.tree_util.tree_leaves(matrix)
     fp = fingerprint_arrays(*leaves, extra=type(matrix).__name__)
-    try:
-        ref = weakref.ref(matrix, lambda _, k=key: _FP_MEMO.pop(k, None))
-    except TypeError:
-        return fp                       # not weakref-able: skip the memo
-    _FP_MEMO[key] = (ref, fp)
+    _memo_put(_FP_MEMO, key, matrix, fp)
     return fp
+
+
+def delta_fingerprint(delta) -> str:
+    """Digest of an `EdgeDelta`'s contents (coordinates, values, delete
+    flags, shape).  Memoized per delta object with the same weakref
+    discipline as `matrix_fingerprint` -- a delta hashes once no matter
+    how many overlay generations carry it."""
+    key = id(delta)
+    entry = _DELTA_MEMO.get(key)
+    if entry is not None and entry[0]() is delta:
+        return entry[1]
+    fp = fingerprint_arrays(
+        delta.rows, delta.cols, delta.vals, delta.deletes,
+        extra=f"EdgeDelta:{delta.n_rows}x{delta.n_cols}")
+    _memo_put(_DELTA_MEMO, key, delta, fp)
+    return fp
+
+
+def chain_fingerprint(base_fp: str, delta_fp: str) -> str:
+    """Fingerprint of base + delta, derived from the two digests alone.
+
+    This is what makes the streaming plan lifecycle O(delta) instead of
+    O(matrix): the base matrix is NEVER re-hashed when a delta arrives
+    -- its frozen digest is chained with the delta's digest, and chains
+    compose (overlay generation k hashes only batch k).  Two different
+    batch histories reaching the same net matrix get different chained
+    digests; that is deliberately conservative -- both keys still map to
+    correct plans for the matrix they describe."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(b"chain:")
+    h.update(base_fp.encode())
+    h.update(b"+")
+    h.update(delta_fp.encode())
+    return h.hexdigest()

@@ -1,0 +1,281 @@
+"""`OverlaidPlan` — a frozen plan plus a small edge delta, served warm.
+
+The streaming-graph answer to "any mutation recompiles from scratch":
+keep serving the *frozen* base plan and correct its output with a COO
+pass over the delta.  Execution is
+
+    y = base.execute(x)            # the planned SpMV, untouched
+    y = y (⊕) delta-pass(x)        # O(delta nnz) correction
+
+which is exact (see `repro.core.delta` for the algebra): under
+plus_times both inserts and deletes overlay (deletes as negated
+values); under the ⊕-only semirings inserts overlay and deletes force
+materialization (`overlay_eligible`).
+
+Plan lifecycle (the state machine `serve_graph` drives):
+
+    FRESH --mutation--> OVERLAID --mutation--> OVERLAID (merged delta)
+      ^                     |
+      |     past budget / ineligible delete: re-plan materialized
+      +--------------- atomic swap ----------------------+
+
+The staleness budget is `delta.nnz / base.nnz`: the overlay pass costs
+O(delta) extra per multiply and the base plan's format/reordering
+choices go stale as structure drifts (SpChar's drift observation), so
+once the delta outgrows `staleness_budget` the lifecycle recompiles the
+materialized matrix in the background and swaps atomically
+(`PlanCache.swap`).  Cache keys chain fingerprints
+(`fingerprint.chain_fingerprint`): no overlay generation ever re-hashes
+the base matrix.
+
+An `OverlaidPlan` is plan-shaped: `execute` / `execute_many` /
+`address_trace` / `summary` and the geometry properties delegate or
+wrap, so steppers, the serving engine, and `graph.telemetry` never
+branch on plan vs overlay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.delta import EdgeDelta
+
+from .fingerprint import chain_fingerprint, delta_fingerprint
+
+#: Default re-plan threshold: delta nnz over base nnz.  5% keeps the
+#: overlay pass a rounding error next to the base SpMV while bounding
+#: how far structure can drift from what the plan's format/reordering
+#: decisions saw (`benchmarks/stream_bench.py` measures both sides).
+DEFAULT_STALENESS_BUDGET = 0.05
+
+
+def overlay_eligible(delta: EdgeDelta, semiring: str) -> bool:
+    """True when `delta` can be served as an overlay under `semiring`:
+    always for plus_times (⊕ has inverses -- deletes are negations),
+    insert-only otherwise (min/max/or have no way to retract a term
+    already folded into the base reduction)."""
+    return semiring == "plus_times" or not delta.has_deletes
+
+
+@dataclasses.dataclass
+class OverlaidPlan:
+    """A base `SpmvPlan` plus an accumulated `EdgeDelta`, plan-shaped.
+
+    `base_matrix` is the ORIGINAL-ORDER CSR the base plan froze (the
+    matrix `delta` is expressed against); `fingerprint` is the chained
+    digest distinguishing this generation in the `PlanCache`.  Build via
+    `overlay(...)`, which handles fingerprint chaining and delta merging
+    across generations.
+    """
+
+    base: Any                        # the frozen SpmvPlan
+    base_matrix: Any                 # original-order CSR the delta targets
+    delta: EdgeDelta
+    fingerprint: str
+    staleness_budget: float = DEFAULT_STALENESS_BUDGET
+    _delta_fn: Any = dataclasses.field(default=None, repr=False)
+    _many_fn: Any = dataclasses.field(default=None, repr=False)
+    _materialized: Any = dataclasses.field(default=None, repr=False)
+    _traces: Dict = dataclasses.field(default_factory=dict, repr=False)
+
+    # -- geometry / plan-shape delegation -----------------------------------
+
+    @property
+    def n_rows(self) -> int:
+        return self.base.n_rows
+
+    @property
+    def n_cols(self) -> int:
+        return self.base.n_cols
+
+    @property
+    def csr(self):
+        return self.base.csr
+
+    @property
+    def container(self):
+        return self.base.container
+
+    @property
+    def format_name(self) -> str:
+        return self.base.format_name
+
+    @property
+    def semiring(self) -> str:
+        return self.base.semiring
+
+    @property
+    def threads(self) -> int:
+        return self.base.threads
+
+    @property
+    def reordering(self):
+        return self.base.reordering
+
+    @property
+    def report(self):
+        return self.base.report
+
+    @property
+    def compile_stats(self) -> Dict:
+        return self.base.compile_stats
+
+    # -- lifecycle state ----------------------------------------------------
+
+    @property
+    def staleness(self) -> float:
+        """Delta size relative to the base: the quantity the budget caps."""
+        return self.delta.nnz / max(self.base_matrix.nnz, 1)
+
+    @property
+    def eligible(self) -> bool:
+        return overlay_eligible(self.delta, self.semiring)
+
+    @property
+    def stale(self) -> bool:
+        """True when the lifecycle must re-plan instead of (or despite)
+        overlaying: budget exceeded, or a delete under a non-invertible
+        semiring."""
+        return self.staleness > self.staleness_budget or not self.eligible
+
+    def materialize(self):
+        """base_matrix + delta as a fresh canonical CSR (cached): the
+        matrix a past-budget re-plan compiles, and the reference the
+        exactness tests compare against."""
+        if self._materialized is None:
+            self._materialized = self.base_matrix.apply_delta(self.delta)
+        return self._materialized
+
+    # -- execution ----------------------------------------------------------
+
+    def _build_delta_fn(self):
+        """The jitted O(delta) correction pass (y, x) -> y'."""
+        n = self.n_rows
+        if self.semiring == "plus_times":
+            rows_np, cols_np, vals_np = self.delta.signed_coo()
+        else:
+            if not self.eligible:
+                raise ValueError(
+                    f"delta carries deletes under semiring "
+                    f"{self.semiring!r}: overlay-ineligible, materialize "
+                    "and re-plan instead")
+            rows_np, cols_np, vals_np = self.delta.insert_coo()
+        rows = jnp.asarray(rows_np.astype(np.int32))
+        cols = jnp.asarray(cols_np.astype(np.int32))
+        vals = jnp.asarray(vals_np.astype(np.float32))
+        if self.semiring == "plus_times":
+            def fn(y, x):
+                terms = vals * jnp.take(x, cols, axis=0)
+                return y + jax.ops.segment_sum(terms, rows, num_segments=n)
+            return jax.jit(fn)
+        from repro.graph.semiring import resolve
+        sr = resolve(self.semiring)
+
+        def fn(y, x):
+            prods = sr.mul(vals, jnp.take(x, cols, axis=0))
+            h = sr.segment(prods, rows, num_segments=n)
+            counts = jax.ops.segment_sum(jnp.ones_like(prods), rows,
+                                         num_segments=n)
+            h = jnp.where(counts > 0, h, jnp.asarray(sr.identity, h.dtype))
+            return sr.add(y, h)
+        return jax.jit(fn)
+
+    def execute(self, x: jax.Array, interpret: Optional[bool] = None
+                ) -> jax.Array:
+        """y = (base + delta) @ x: the planned SpMV then the delta pass."""
+        y = self.base.execute(x, interpret=interpret)
+        if self.delta.nnz == 0:
+            return y
+        if self._delta_fn is None:
+            self._delta_fn = self._build_delta_fn()
+        return self._delta_fn(y, jnp.asarray(x))
+
+    __call__ = execute
+
+    def execute_many(self, X: jax.Array) -> jax.Array:
+        """Batched (k, n) path: base SpMM then the delta pass vmapped
+        over lanes, jitted once per overlay generation."""
+        Y = self.base.execute_many(X)
+        if self.delta.nnz == 0:
+            return Y
+        if self._many_fn is None:
+            if self._delta_fn is None:
+                self._delta_fn = self._build_delta_fn()
+            self._many_fn = jax.jit(jax.vmap(self._delta_fn))
+        return self._many_fn(Y, jnp.asarray(X))
+
+    # -- telemetry ----------------------------------------------------------
+
+    def address_trace(self, machine):
+        """Base plan trace plus the overlay pass priced as a
+        column-sorted COO stream (ascending x gathers, same discipline
+        as the HYB heavy partition).  Cached per machine, like
+        `SpmvPlan.address_trace`."""
+        if machine not in self._traces:
+            from repro.telemetry.hierarchy import overlay_address_trace
+            rows, cols = self.delta.rows, self.delta.cols
+            if self.base.reordering is not None:
+                irp = np.asarray(self.base.reordering.inv_row_perm)
+                icp = np.asarray(self.base.reordering.inv_col_perm)
+                rows, cols = irp[rows], icp[cols]
+            self._traces[machine] = overlay_address_trace(
+                self.base.csr, self.base.format_name, rows, cols, machine,
+                container=self.base.container)
+        return self._traces[machine]
+
+    # -- reporting ----------------------------------------------------------
+
+    def summary(self) -> str:
+        return (f"OverlaidPlan[{self.fingerprint[:8]}] "
+                f"+{self.delta.n_inserts} -{self.delta.n_deletes} "
+                f"staleness={self.staleness:.3f}/{self.staleness_budget:g} "
+                f"over {self.base.summary()}")
+
+
+def overlay(plan_or_overlaid, delta: EdgeDelta, *, base_matrix=None,
+            staleness_budget: Optional[float] = None) -> OverlaidPlan:
+    """Extend a plan (or an existing overlay) with one more delta batch.
+
+    Wrapping a fresh `SpmvPlan` starts a lineage: `base_matrix` defaults
+    to the plan's retained CSR, un-permuted back to original order when
+    the plan reordered (the delta's coordinates are original-order).
+    Wrapping an `OverlaidPlan` merges the new batch into the accumulated
+    delta and chains the fingerprint -- only the new batch is hashed.
+    """
+    if isinstance(plan_or_overlaid, OverlaidPlan):
+        prev = plan_or_overlaid
+        merged = prev.delta.merge(delta)
+        return OverlaidPlan(
+            base=prev.base, base_matrix=prev.base_matrix, delta=merged,
+            fingerprint=chain_fingerprint(prev.fingerprint,
+                                          delta_fingerprint(delta)),
+            staleness_budget=(prev.staleness_budget if staleness_budget is None
+                              else float(staleness_budget)))
+    plan = plan_or_overlaid
+    if base_matrix is None:
+        if plan.csr is None:
+            raise ValueError(
+                "plan was compiled with keep_csr=False; pass base_matrix= "
+                "explicitly to overlay it")
+        base_matrix = plan.csr
+        if plan.reordering is not None:
+            base_matrix = base_matrix.permute(plan.reordering.inv_row_perm,
+                                              plan.reordering.inv_col_perm)
+    if (delta.n_rows, delta.n_cols) != (base_matrix.n_rows,
+                                        base_matrix.n_cols):
+        raise ValueError(f"delta shape {delta.shape} does not match the "
+                         f"base matrix {base_matrix.shape}")
+    return OverlaidPlan(
+        base=plan, base_matrix=base_matrix, delta=delta,
+        fingerprint=chain_fingerprint(plan.fingerprint,
+                                      delta_fingerprint(delta)),
+        staleness_budget=(DEFAULT_STALENESS_BUDGET if staleness_budget is None
+                          else float(staleness_budget)))
+
+
+__all__ = ["OverlaidPlan", "overlay", "overlay_eligible",
+           "DEFAULT_STALENESS_BUDGET"]

@@ -6,17 +6,23 @@ sources, params), admission is a `PlanCache` warm-pool check with a
 bounded compile queue, and each engine step coalesces every running
 request on the same compiled plan into one `execute_many` SpMV.
 
-  requests    AnalyticRequest / AnalyticResult records
-  admission   warm-hit vs bounded compile queue with FIFO back-pressure
-  scheduler   lane-pool FIFO admission, youngest-first preemption
-  engine      the per-step loop: intake -> compile budget -> admit ->
-              coalesced iterate -> per-request convergence release
+  requests    AnalyticRequest / AnalyticResult records, plus the edge
+              stream: GraphMutation batches and their MutationResult
+  admission   warm-hit vs bounded compile queue with FIFO back-pressure;
+              `park` queues forced background re-plans past the cap
+  scheduler   lane-pool FIFO admission, youngest-first preemption,
+              `migrate` for streaming plan retirement
+  engine      the per-step loop: apply mutations -> intake -> compile
+              budget -> admit -> coalesced iterate -> convergence
+              release; mutations move each derived plan through the
+              overlay / background-replan / rebase lifecycle
 """
 from .admission import AdmissionController
 from .engine import GraphEngine, GraphEngineConfig
-from .requests import AnalyticRequest, AnalyticResult
+from .requests import (AnalyticRequest, AnalyticResult, GraphMutation,
+                       MutationResult)
 from .scheduler import GraphScheduler, RunningRequest
 
 __all__ = ["AdmissionController", "GraphEngine", "GraphEngineConfig",
-           "AnalyticRequest", "AnalyticResult", "GraphScheduler",
-           "RunningRequest"]
+           "AnalyticRequest", "AnalyticResult", "GraphMutation",
+           "MutationResult", "GraphScheduler", "RunningRequest"]

@@ -62,6 +62,20 @@ class AdmissionController:
         self.waiting = still
         return ready
 
+    def park(self, key: str) -> None:
+        """Schedule a *background* compile for `key` -- no requester yet.
+
+        The streaming lifecycle parks past-budget re-plans here: the key
+        shares the per-step compile budget with request-driven misses
+        (FIFO behind whatever is already queued) but bypasses the queue
+        cap, because a forced re-plan cannot be dropped -- its old plan
+        generation has already been retired from the serving key.  Later
+        misses on the same key join the pending entry as usual."""
+        if key in self.pending:
+            return
+        self.compile_q.append(key)
+        self.pending[key] = []
+
     def run_compiles(self, budget: Optional[int],
                      compile_key: Callable[[str], object]
                      ) -> List[AnalyticRequest]:

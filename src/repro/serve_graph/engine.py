@@ -30,18 +30,22 @@ identical schedules, preemption logs, and bit-identical results
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
-from typing import Dict, List, Optional, Tuple
+from collections import OrderedDict, deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.delta import EdgeDelta, csr_diff
 from repro.graph.drivers import (ANALYTICS, analytic_operand, check_sources,
-                                 make_stepper, plan_options)
-from repro.plan import PlanCache
+                                 make_stepper, plan_options,
+                                 warm_start_params)
+from repro.plan import PlanCache, compile as compile_plan
+from repro.plan.overlay import OverlaidPlan, overlay, overlay_eligible
 
 from .admission import AdmissionController
-from .requests import AnalyticRequest, AnalyticResult
+from .requests import (AnalyticRequest, AnalyticResult, GraphMutation,
+                       MutationResult)
 from .scheduler import GraphScheduler, RunningRequest
 
 
@@ -64,6 +68,27 @@ class GraphEngineConfig:
     interpret: Optional[bool] = None
     max_iters_default: int = 256    # per-request iteration cap
     lane_bucket: bool = True        # pad batches to pow2 lane counts
+    staleness_budget: float = 0.05  # delta_nnz/base_nnz past which a
+                                    # mutation forces a background re-plan
+                                    # + atomic swap instead of an overlay
+
+
+@dataclasses.dataclass
+class _Derived:
+    """Per-(graph, analytic) plan lineage state.
+
+    `matrix` is the CURRENT effective operand (what a cold compile under
+    `key` would freeze); `base_matrix` is the operand the resident base
+    plan froze, and `delta` the accumulated operand delta between them
+    (None once rebased).  `key` is the serving cache key -- content key
+    for a fresh/rebased lineage, chained key for an overlaid one."""
+
+    matrix: object
+    opts: Dict
+    aux: Dict
+    key: str
+    base_matrix: object
+    delta: Optional[EdgeDelta] = None
 
 
 class GraphEngine:
@@ -76,11 +101,16 @@ class GraphEngine:
             self.plan_cache, compile_queue_cap=self.cfg.compile_queue_cap)
         self.scheduler = GraphScheduler(self.cfg.n_lanes)
         self.graphs: Dict[str, object] = {}
-        self._derived: Dict[Tuple[str, str], Tuple[object, Dict, Dict, str]] = {}
+        self._derived: Dict[Tuple[str, str], _Derived] = {}
         self._by_key: Dict[str, Tuple[object, Dict]] = {}
         self.results: Dict[int, AnalyticResult] = {}
+        self.mutation_results: Dict[int, MutationResult] = {}
+        self._mutations: Deque[GraphMutation] = deque()
+        self._swap_on_land: Dict[str, str] = {}   # new key -> key to retire
+        self._warm_state: Dict[int, Dict] = {}    # req_id -> stepper params
         self.step_count = 0
         self.submitted = 0
+        self.mutations_applied = 0
         self.spmm_calls = 0
         self.max_running = 0
         self.max_inflight = 0
@@ -96,10 +126,20 @@ class GraphEngine:
                              f"got {adj.n_rows}x{adj.n_cols}")
         self.graphs[graph_id] = adj
 
-    def submit(self, req: AnalyticRequest) -> None:
+    def submit(self, req) -> None:
         """Validate and enqueue.  Rejections are immediate (unknown
         graph/analytic, out-of-range sources, wider than the lane pool)
-        so malformed requests can never deadlock admission."""
+        so malformed requests can never deadlock admission.
+        `GraphMutation`s queue separately and apply at the top of the
+        next step, before any admission or iteration -- submit order is
+        the serialization order of the edge stream."""
+        if isinstance(req, GraphMutation):
+            if req.graph_id not in self.graphs:
+                raise KeyError(f"graph {req.graph_id!r} is not registered; "
+                               f"have {sorted(self.graphs)}")
+            req.arrived_step = self.step_count
+            self._mutations.append(req)
+            return
         adj = self.graphs.get(req.graph_id)
         if adj is None:
             raise KeyError(f"graph {req.graph_id!r} is not registered; "
@@ -120,11 +160,11 @@ class GraphEngine:
 
     # -- plan resolution -----------------------------------------------------
 
-    def _derive(self, graph_id: str, analytic: str):
-        """(operand matrix, compile opts, aux, plan key) for one
-        (graph, analytic) -- derived once, then reused by every request.
-        Uses the drivers' own `plan_options`, so engine-compiled plans
-        and blocking-driver plans share cache entries."""
+    def _derive(self, graph_id: str, analytic: str) -> _Derived:
+        """The `_Derived` lineage record for one (graph, analytic) --
+        derived once, then kept current by `_apply_mutation`.  Uses the
+        drivers' own `plan_options`, so engine-compiled plans and
+        blocking-driver plans share cache entries."""
         ck = (graph_id, analytic)
         hit = self._derived.get(ck)
         if hit is not None:
@@ -136,32 +176,162 @@ class GraphEngine:
                             use_pallas=self.cfg.use_pallas,
                             interpret=self.cfg.interpret)
         key = self.plan_cache.key_for(matrix, **opts)
-        self._derived[ck] = (matrix, opts, aux, key)
+        st = _Derived(matrix=matrix, opts=opts, aux=aux, key=key,
+                      base_matrix=matrix)
+        self._derived[ck] = st
         self._by_key[key] = (matrix, opts)
-        return self._derived[ck]
+        return st
 
     def _key_of(self, req: AnalyticRequest) -> str:
-        return self._derive(req.graph_id, req.analytic)[3]
+        return self._derive(req.graph_id, req.analytic).key
 
     def _compile_key(self, key: str):
+        """Compile (or fetch) the plan stored under `key`.  Keys are
+        looked up, never re-derived from matrix content -- an overlaid
+        generation's chained key has no content-key equivalent.  A key
+        flagged by the mutation lifecycle lands as a `PlanCache.swap`:
+        the superseded generation retires atomically with the insert."""
         matrix, opts = self._by_key[key]
-        return self.plan_cache.get_or_compile(matrix, **opts)
+        supersedes = self._swap_on_land.pop(key, None)
+        if supersedes is not None:
+            return self.plan_cache.swap(
+                key, lambda: compile_plan(matrix, **opts),
+                supersedes=supersedes)
+        return self.plan_cache.get_or_build(
+            key, lambda: compile_plan(matrix, **opts))
 
     def _start(self, req: AnalyticRequest) -> RunningRequest:
-        matrix, opts, aux, key = self._derive(req.graph_id, req.analytic)
-        plan = self.plan_cache.get_or_compile(matrix, **opts)  # warm: a hit
-        stepper = make_stepper(req.analytic, plan, aux,
+        st = self._derive(req.graph_id, req.analytic)
+        plan = self._compile_key(st.key)          # warm: a hit
+        params = dict(req.params)
+        warm = self._warm_state.pop(req.req_id, None)
+        if warm is not None:
+            params.update(warm)                   # resume migrated state
+        stepper = make_stepper(req.analytic, plan, st.aux,
                                sources=np.asarray(req.sources, np.int64),
-                               params=req.params)
+                               params=params)
         cap = (req.max_iters if req.max_iters is not None
                else self.cfg.max_iters_default)
         return RunningRequest(req=req, stepper=stepper, plan=plan,
-                              plan_key=key, max_iters=cap)
+                              plan_key=st.key, max_iters=cap)
+
+    # -- the streaming mutation lifecycle -------------------------------------
+
+    def _apply_mutation(self, mut: GraphMutation) -> None:
+        """Apply one edge batch: mutate the adjacency, then move every
+        derived (graph, analytic) lineage through the plan state
+        machine -- overlay / background re-plan + swap / cold rebase --
+        and rebind in-flight requests.  Runs at the top of a step, so
+        within a step every iteration serves one generation."""
+        adj = self.graphs[mut.graph_id]
+        adj_delta = EdgeDelta.from_updates(adj, inserts=mut.inserts,
+                                           deletes=mut.deletes)
+        self.graphs[mut.graph_id] = adj.apply_delta(adj_delta)
+        actions: Dict[str, str] = {}
+        for (gid, analytic), st in list(self._derived.items()):
+            if gid != mut.graph_id:
+                continue
+            actions[analytic] = self._shift_lineage(gid, analytic, st)
+        self.mutations_applied += 1
+        self.mutation_results[mut.req_id] = MutationResult(
+            req_id=mut.req_id, graph_id=mut.graph_id,
+            applied_step=self.step_count, delta_nnz=adj_delta.nnz,
+            actions=actions)
+
+    def _shift_lineage(self, gid: str, analytic: str, st: _Derived) -> str:
+        """Move one derived lineage onto the mutated graph.  Returns the
+        action taken (see `MutationResult`).  The serving key flips
+        *here*, synchronously: new requests either warm-hit the
+        installed overlay or wait on the parked compile -- there is no
+        window in which a request can be admitted against the retired
+        generation."""
+        new_matrix, _, new_aux = analytic_operand(analytic,
+                                                  self.graphs[gid])
+        op_delta = csr_diff(st.matrix, new_matrix)
+        old_key = st.key
+        if op_delta.nnz == 0:
+            st.matrix, st.aux = new_matrix, new_aux
+            self._by_key[old_key] = (new_matrix, st.opts)
+            return "noop"
+        total = st.delta.merge(op_delta) if st.delta is not None else op_delta
+        semiring = st.opts["semiring"]
+        within = (overlay_eligible(total, semiring)
+                  and total.nnz / max(st.base_matrix.nnz, 1)
+                  <= self.cfg.staleness_budget)
+        resident = self.plan_cache.peek(old_key) if within else None
+        if resident is not None:
+            if isinstance(resident, OverlaidPlan):
+                over = overlay(resident, op_delta)
+            else:
+                over = overlay(resident, total, base_matrix=st.base_matrix,
+                               staleness_budget=self.cfg.staleness_budget)
+            new_key = self.plan_cache.chained_key(old_key, over.fingerprint)
+            self.plan_cache.install_overlay(new_key, over,
+                                            supersedes=old_key)
+            st.delta = total
+            action = "overlay"
+        elif within:
+            # nothing resident to overlay: re-root the lineage at the
+            # materialized operand; the next request compiles it cold
+            st.base_matrix, st.delta = new_matrix, None
+            new_key = self.plan_cache.key_for(new_matrix, **st.opts)
+            action = "rebase"
+        else:
+            # past budget or overlay-ineligible delete: retire the
+            # serving key now, park exactly one background re-plan of
+            # the materialized matrix, swap atomically when it lands
+            st.base_matrix, st.delta = new_matrix, None
+            new_key = self.plan_cache.key_for(new_matrix, **st.opts)
+            self.plan_cache.note_delta_recompile()
+            if new_key != old_key:
+                self._swap_on_land[new_key] = old_key
+            self.admission.park(new_key)
+            action = "replan"
+        st.matrix, st.aux, st.key = new_matrix, new_aux, new_key
+        self._by_key[new_key] = (new_matrix, st.opts)
+        self._rebind_running((gid, analytic), new_key, op_delta, st, action)
+        return action
+
+    def _rebind_running(self, ck: Tuple[str, str], new_key: str,
+                        op_delta: EdgeDelta, st: _Derived,
+                        action: str) -> None:
+        """Move in-flight requests on a shifted lineage to its new
+        generation.  Overlay: rebind in place (fresh stepper on the
+        overlaid plan, warm-started when `warm_start_params` allows).
+        Re-plan/rebase: migrate back through admission -- the request
+        waits for the new plan like any cold arrival, stashing warm
+        state for `_start` to consume, and keeps its original arrival
+        seniority."""
+        migrated: List[AnalyticRequest] = []
+        for run in list(self.scheduler.running):
+            if (run.req.graph_id, run.req.analytic) != ck:
+                continue
+            warm = warm_start_params(run.req.analytic, run.stepper.values(),
+                                     op_delta)
+            if action == "overlay":
+                plan = self.plan_cache.peek(new_key)
+                params = dict(run.req.params)
+                if warm is not None:
+                    params.update(warm)
+                run.plan, run.plan_key = plan, new_key
+                run.stepper = make_stepper(
+                    run.req.analytic, plan, st.aux,
+                    sources=np.asarray(run.req.sources, np.int64),
+                    params=params)
+            else:
+                self.scheduler.migrate(run, self.step_count)
+                if warm is not None:
+                    self._warm_state[run.req.req_id] = warm
+                migrated.append(run.req)
+        for req in reversed(migrated):
+            self.admission.waiting.appendleft(req)
 
     # -- the engine step ------------------------------------------------------
 
     def step(self) -> None:
         self.step_count += 1
+        while self._mutations:
+            self._apply_mutation(self._mutations.popleft())
         for req in self.admission.intake(self._key_of):
             self.scheduler.push_ready(req)
         for req in self.admission.run_compiles(self.cfg.compiles_per_step,
@@ -216,7 +386,8 @@ class GraphEngine:
 
     @property
     def idle(self) -> bool:
-        return self.admission.idle and self.scheduler.idle
+        return (not self._mutations and self.admission.idle
+                and self.scheduler.idle)
 
     def run(self, max_steps: int = 100_000) -> Dict[int, AnalyticResult]:
         """Step until every submitted request has a result (or the step
@@ -238,6 +409,7 @@ class GraphEngine:
             "steps": self.step_count,
             "submitted": self.submitted,
             "finished": len(self.results),
+            "mutations_applied": self.mutations_applied,
             "preemptions": self.scheduler.preemptions,
             "warm_hits": adm["warm_hits"],
             "cold_misses": adm["cold_misses"],

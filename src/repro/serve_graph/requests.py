@@ -41,6 +41,39 @@ class AnalyticRequest:
 
 
 @dataclasses.dataclass
+class GraphMutation:
+    """An edge-stream batch against a registered graph, interleaved with
+    analytic requests.  `inserts` are (row, col, value) triples naming
+    absent coordinates, `deletes` are (row, col) pairs naming present
+    ones (change a weight by deleting + inserting in one batch) -- the
+    `repro.core.delta.EdgeDelta` contract.  The engine applies pending
+    mutations at the top of the next step, in submit order: every
+    analytic submitted after a mutation sees the mutated graph."""
+
+    req_id: int
+    graph_id: str
+    inserts: Tuple = ()
+    deletes: Tuple = ()
+    arrived_step: int = 0
+
+
+@dataclasses.dataclass
+class MutationResult:
+    """How one mutation moved each derived (graph, analytic) plan:
+    `actions[analytic]` is 'overlay' (delta-overlaid plan installed
+    warm), 'replan' (past budget / ineligible delete -- background
+    re-plan parked, atomic swap on landing), 'rebase' (no plan was
+    resident; next request compiles the materialized matrix cold), or
+    'noop' (the analytic's operand was unchanged)."""
+
+    req_id: int
+    graph_id: str
+    applied_step: int
+    delta_nnz: int
+    actions: Dict[str, str]
+
+
+@dataclasses.dataclass
 class AnalyticResult:
     req_id: int
     graph_id: str
@@ -62,4 +95,5 @@ class AnalyticResult:
         return self.finished_step - self.arrived_step
 
 
-__all__ = ["AnalyticRequest", "AnalyticResult"]
+__all__ = ["AnalyticRequest", "AnalyticResult", "GraphMutation",
+           "MutationResult"]

@@ -98,6 +98,15 @@ class GraphScheduler:
         self.preemptions += 1
         self.log.append((step, "preempt", run.req.req_id))
 
+    def migrate(self, run: RunningRequest, step: int) -> None:
+        """Pull a running request off the lane pool because its plan
+        went cold (streaming re-plan): unlike preemption the caller
+        re-routes the request through admission itself -- usually
+        carrying warm stepper state over -- so nothing is pushed to
+        `ready` here and no restart is counted."""
+        self.running.remove(run)
+        self.log.append((step, "migrate", run.req.req_id))
+
     def finish(self, run: RunningRequest, step: int) -> None:
         self.running.remove(run)
         run.req.finished_step = step

@@ -26,7 +26,7 @@ from .events import EventCounters, known_events, register_event
 from .hierarchy import (CacheLevel, Hierarchy, HierarchySpec, MissCache,
                         SequentialPrefetcher, SetAssocCache, StreamBuffers,
                         VictimCache, format_address_trace, hyb_address_trace,
-                        spmv_address_trace)
+                        overlay_address_trace, spmv_address_trace)
 from .report import (graph_gap_report, graph_report, plan_cache_report,
                      scaling_gap_report, scaling_report)
 from .runner import (SweepCell, SweepConfig, execute_cells, graph_cells,
@@ -42,6 +42,7 @@ __all__ = [
     "CacheLevel", "Hierarchy", "HierarchySpec", "MissCache",
     "SequentialPrefetcher", "SetAssocCache", "StreamBuffers", "VictimCache",
     "spmv_address_trace", "format_address_trace", "hyb_address_trace",
+    "overlay_address_trace",
     "MetricNode", "topdown_tree", "topdown_summary",
     "STAGE_FIELDS", "TopdownStages", "stage_cycles", "machine_stages",
     "SweepCell", "SweepConfig", "execute_cells", "mech_cells",

@@ -489,6 +489,74 @@ def format_address_trace(csr, format_name: str, machine,
     return spmv_address_trace(csr, machine)
 
 
+def _y_region_base(csr, format_name: str, machine, container=None) -> int:
+    """First line id of the y region in `format_address_trace`'s layout
+    for this matrix -- the overlay pass's y combines must land on the
+    *same* lines the base kernel writes, or the simulator would price
+    them as cold compulsory misses they are not."""
+    lb = machine.line_bytes
+    ebytes, ibytes = machine.elem_bytes, machine.idx_bytes
+    if format_name == "hyb":
+        from repro.core.formats import HYB
+
+        if not isinstance(container, HYB):
+            container = HYB.from_csr(csr)
+        n, w = container.n_rows, container.light_width
+        x_lines = -(-container.n_cols * ebytes // lb)
+        lval_lines = -(-n * w * ebytes // lb)
+        lidx_lines = -(-n * w * ibytes // lb)
+        return x_lines + 16 + lval_lines + 16 + lidx_lines + 16
+    n, nnz = csr.n_rows, csr.nnz
+    x_lines = -(-n * ebytes // lb)
+    val_lines = -(-nnz * ebytes // lb)
+    idx_lines = -(-nnz * ibytes // lb)
+    ptr_lines = -(-(n + 1) * ibytes // lb)
+    return x_lines + 16 + val_lines + 16 + idx_lines + 16 + ptr_lines + 16
+
+
+def overlay_address_trace(csr, format_name: str, rows, cols, machine,
+                          container=None) -> np.ndarray:
+    """Demand stream of an overlaid plan: the base plan's format trace
+    followed by the delta pass, priced as a column-sorted COO stream.
+
+    The overlay executes after the planned kernel: per delta nonzero it
+    reads the delta value / row id / col id (fresh sequential regions
+    past the base layout, 16-line guards) and gathers x[col]; one y
+    combine per distinct delta row then lands on the base layout's y
+    region.  Column-sorting the stream makes the x gathers ascend --
+    the same locality argument as the hybrid heavy stream -- which is
+    why a small overlay prices at a near-streaming marginal cost rather
+    than a second random walk over x.  An empty delta returns the base
+    trace unchanged."""
+    base = format_address_trace(csr, format_name, machine,
+                                container=container)
+    rows = np.asarray(rows, dtype=np.int64).reshape(-1)
+    cols = np.asarray(cols, dtype=np.int64).reshape(-1)
+    k = int(rows.shape[0])
+    if k == 0:
+        return base
+    lb = machine.line_bytes
+    ebytes, ibytes = machine.elem_bytes, machine.idx_bytes
+    order = np.lexsort((rows, cols))             # column-sorted COO
+    r, c = rows[order], cols[order]
+
+    dval_base = (int(base.max()) + 17) if base.size else 0
+    dval_lines = -(-k * ebytes // lb)
+    drow_base = dval_base + dval_lines + 16
+    drow_lines = -(-k * ibytes // lb)
+    dcol_base = drow_base + drow_lines + 16
+
+    p = np.arange(k, dtype=np.int64)
+    delta = np.empty(4 * k, dtype=np.int64)
+    delta[0::4] = dval_base + (p * ebytes) // lb
+    delta[1::4] = drow_base + (p * ibytes) // lb
+    delta[2::4] = dcol_base + (p * ibytes) // lb
+    delta[3::4] = (c * ebytes) // lb             # x region starts at line 0
+    y_base = _y_region_base(csr, format_name, machine, container=container)
+    tail = y_base + (np.unique(r) * ebytes) // lb
+    return np.concatenate([base, delta, tail])
+
+
 @dataclasses.dataclass(frozen=True)
 class HierarchySpec:
     """Declarative description of a hierarchy (what sweeps iterate over)."""

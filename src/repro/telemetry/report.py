@@ -122,7 +122,8 @@ def plan_cache_report(stats: Dict, before: Dict = None,
     if before is not None:
         for k in ("hits", "misses", "evictions", "compiles", "compile_s",
                   "predictor_compiles", "predictor_compile_s",
-                  "oracle_compiles", "oracle_compile_s"):
+                  "oracle_compiles", "oracle_compile_s",
+                  "overlays", "swaps", "delta_recompiles"):
             s[k] = s.get(k, 0) - before.get(k, 0)
     served = s.get("hits", 0) + s.get("misses", 0)
     # .get throughout: an empty/partial stats dict renders a zero row
@@ -138,10 +139,15 @@ def plan_cache_report(stats: Dict, before: Dict = None,
     head = ["plans", "hits", "misses", "hit_rate", "evictions",
             "compiles", "compile_s", "mean_compile_s",
             "predictor_compiles", "predictor_compile_s",
-            "oracle_compiles", "oracle_compile_s"]
+            "oracle_compiles", "oracle_compile_s",
+            "overlays", "swaps", "delta_recompiles"]
+    # streaming-lifecycle counters (.get: pre-streaming stats dicts and
+    # snapshots recorded before the counters existed render as zeros)
     row = [s.get("plans", 0), s.get("hits", 0), s.get("misses", 0),
            hit_rate, s.get("evictions", 0), compiles,
-           s.get("compile_s", 0.0), mean_compile, pn, ps, on, os_]
+           s.get("compile_s", 0.0), mean_compile, pn, ps, on, os_,
+           s.get("overlays", 0), s.get("swaps", 0),
+           s.get("delta_recompiles", 0)]
     return "\n".join([f"# {title}" + (" (windowed)" if before else ""),
                       ",".join(head), ",".join(_fmt(v) for v in row)])
 

@@ -6,8 +6,13 @@ blocks' names, like a reader typing the document into one REPL).  Shell
 blocks (```sh etc.) are not executed.  A block can opt out with a first
 line of `# doctest: skip` (reserved for examples that need hardware or
 network; none currently do).
+
+`EXECUTED_EXAMPLES` scripts run end to end as subprocesses (they carry
+their own assertions -- the streaming demo asserts overlays and a
+delta-forced recompile both actually happened).
 """
 import re
+import subprocess
 import sys
 from pathlib import Path
 
@@ -62,3 +67,21 @@ def test_doc_python_blocks_execute(doc, capsys):
         except Exception as e:  # noqa: BLE001 - report which block broke
             pytest.fail(f"{doc.name} python block {i} failed: {e!r}\n"
                         f"---\n{block}\n---")
+
+
+# Example scripts executed end to end (each carries its own assertions).
+EXECUTED_EXAMPLES = ["examples/streaming_demo.py"]
+
+
+@pytest.mark.parametrize("script", EXECUTED_EXAMPLES)
+def test_example_scripts_execute(script):
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / script)], env=env, cwd=REPO,
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, \
+        f"{script} exited {proc.returncode}\n--- stdout\n{proc.stdout}" \
+        f"\n--- stderr\n{proc.stderr}"

@@ -187,6 +187,100 @@ def test_segment_boundary_carry_is_exact(n, seed, seg_len):
     assert np.array_equal(y_hyb, ref)
 
 
+def _random_delta(csr: CSR, n_ins: int, n_del: int, seed: int,
+                  lo: int = 1, hi: int = 8):
+    """Insert/delete batch against `csr`: inserts at absent coordinates
+    with integer-valued f32 weights, deletes at present ones."""
+    from repro.core.delta import EdgeDelta
+
+    rng = np.random.default_rng(seed + 3)
+    ip = np.asarray(csr.indptr)
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), np.diff(ip))
+    cols = np.asarray(csr.indices, dtype=np.int64)
+    present = set(zip(rows.tolist(), cols.tolist()))
+    inserts, seen = [], set()
+    tries = 0
+    while len(inserts) < n_ins and tries < 200:
+        tries += 1
+        r = int(rng.integers(csr.n_rows)) if csr.n_rows else 0
+        c = int(rng.integers(csr.n_cols)) if csr.n_cols else 0
+        if csr.n_rows and (r, c) not in present and (r, c) not in seen:
+            inserts.append((r, c, float(rng.integers(lo, hi + 1))))
+            seen.add((r, c))
+    deletes = []
+    if n_del and rows.size:
+        picks = rng.choice(rows.size, size=min(n_del, rows.size),
+                           replace=False)
+        deletes = [(int(rows[p]), int(cols[p])) for p in picks]
+    return EdgeDelta.from_updates(csr, inserts=inserts, deletes=deletes)
+
+
+@given(family=st.sampled_from(("fd", "rmat")), n=st.integers(8, 32),
+       seed=st.integers(0, 2 ** 16),
+       sr_name=st.sampled_from(("plus_times", "min_plus", "or_and",
+                                "max_times")),
+       reorder=st.sampled_from(("none", "rcm")),
+       n_ins=st.integers(0, 6), n_del=st.integers(0, 4))
+def test_overlaid_plan_matches_recompiled_materialization(
+        family, n, seed, sr_name, reorder, n_ins, n_del):
+    """An overlaid plan answers exactly like a fresh compile of the
+    materialized matrix: bit-identical under plus_times (deletes ride as
+    exact negations), allclose under the ⊕-only semirings (insert-only
+    — their deletes are overlay-ineligible and must be refused)."""
+    from repro.core.delta import EdgeDelta
+    from repro.plan import overlay
+
+    if sr_name == "or_and":
+        csr = _int_csr(family, n, seed, lo=1, hi=1)
+        x = _int_x(csr.n_cols, seed, lo=0, hi=1)
+        lo = hi = 1
+    elif sr_name == "max_times":
+        csr = _int_csr(family, n, seed, lo=1, hi=8)
+        x = _int_x(csr.n_cols, seed, lo=0, hi=8)
+        lo, hi = 1, 8
+    else:
+        csr = _int_csr(family, n, seed)
+        x = _int_x(csr.n_cols, seed)
+        lo, hi = 1, 8
+    if sr_name != "plus_times":
+        n_del = 0                      # ⊕-only: deletes are ineligible
+    delta = _random_delta(csr, n_ins, n_del, seed, lo=lo, hi=hi)
+
+    base = plan.compile(csr, format="csr", reorder=reorder,
+                        predictor="none", semiring=sr_name)
+    ov = overlay(base, delta, staleness_budget=1.0)
+    got = np.asarray(ov.execute(jnp.asarray(x), interpret=True))
+
+    fresh = plan.compile(csr.apply_delta(delta), format="csr",
+                         reorder=reorder, predictor="none",
+                         semiring=sr_name)
+    ref = np.asarray(fresh.execute(jnp.asarray(x), interpret=True))
+    if delta.nnz == 0:
+        assert ov.fingerprint != base.fingerprint or delta.nnz == 0
+        assert np.array_equal(
+            got, np.asarray(base.execute(jnp.asarray(x), interpret=True)))
+    if sr_name == "plus_times":
+        assert np.array_equal(got, ref), \
+            f"overlay diverged: {family}(n={n}, seed={seed}) " \
+            f"+{delta.n_inserts}/-{delta.n_deletes} {reorder}"
+    else:
+        np.testing.assert_allclose(got, ref, rtol=1e-6, atol=0)
+
+    # ⊕-only deletes cannot be overlaid: the algebra has no inverse
+    if sr_name != "plus_times" and rows_nonempty(csr):
+        ip = np.asarray(csr.indptr)
+        rr = np.repeat(np.arange(csr.n_rows, dtype=np.int64), np.diff(ip))
+        cc = np.asarray(csr.indices, dtype=np.int64)
+        bad = EdgeDelta.from_updates(
+            csr, deletes=[(int(rr[0]), int(cc[0]))])
+        from repro.plan.overlay import overlay_eligible
+        assert not overlay_eligible(bad, sr_name)
+
+
+def rows_nonempty(csr: CSR) -> bool:
+    return csr.nnz > 0
+
+
 @given(n=st.integers(4, 48), seed=st.integers(0, 2 ** 16))
 def test_permutation_round_trip_identity(n, seed):
     """permute_x then restore_y through any strategy is the identity on

@@ -350,6 +350,46 @@ def test_fingerprint_memoized_per_object():
     assert plan.matrix_fingerprint(a) == fp1      # served from the memo
 
 
+def test_dropped_container_frees_fingerprint_memo_entry():
+    """The memo holds containers by weak reference: dropping the last
+    strong reference must evict the entry, or long-running serve fleets
+    leak one entry per matrix ever fingerprinted (and id() reuse could
+    then serve a *stale* digest for a new object at the same address)."""
+    import gc
+
+    from repro.core.delta import EdgeDelta
+    from repro.plan import delta_fingerprint
+    from repro.plan import fingerprint as fpm
+
+    a = rmat_matrix(256, seed=17)
+    plan.matrix_fingerprint(a)
+    key = id(a)
+    assert key in fpm._FP_MEMO
+    del a
+    gc.collect()
+    assert key not in fpm._FP_MEMO
+
+    d = EdgeDelta.from_updates(rmat_matrix(64, seed=3),
+                               inserts=[(0, 1, 2.0)])
+    delta_fingerprint(d)
+    dkey = id(d)
+    assert dkey in fpm._DELTA_MEMO
+    del d
+    gc.collect()
+    assert dkey not in fpm._DELTA_MEMO
+
+
+def test_fingerprint_memo_capped():
+    """Even without collection pressure the memo cannot grow without
+    bound: the FIFO backstop holds it at `_MEMO_CAP` entries."""
+    from repro.plan import fingerprint as fpm
+
+    keep = [rmat_matrix(16, seed=s) for s in range(8)]
+    for m in keep:
+        plan.matrix_fingerprint(m)
+    assert len(fpm._FP_MEMO) <= fpm._MEMO_CAP
+
+
 def test_execute_many_without_retained_csr_raises_clearly():
     from repro.distributed import row_mesh
 

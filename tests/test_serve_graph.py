@@ -30,7 +30,7 @@ def _prime(eng, *pairs):
     """Compile (graph, analytic) plans up front so the scenario under
     test starts from a warm pool."""
     for gid, analytic in pairs:
-        eng._compile_key(eng._derive(gid, analytic)[3])
+        eng._compile_key(eng._derive(gid, analytic).key)
 
 
 # ---------------------------------------------------------------------------

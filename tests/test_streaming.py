@@ -1,0 +1,477 @@
+"""Streaming layer: delta semantics, overlays, lifecycle, engine swaps.
+
+Four strata, mirroring the layers the streaming refactor crosses:
+
+  * `EdgeDelta` container semantics against a dense reference
+    (apply/diff round trips, merge = sequential application);
+  * `OverlaidPlan` exactness and the chained-fingerprint cache keys;
+  * warm-start policy and correctness guards in `graph.drivers`;
+  * the serving engine's mutation lifecycle: overlays admit as warm
+    hits, past-budget deltas force exactly one background re-plan with
+    an atomic swap and no wrong-answer window, and identical traces
+    replay deterministically.
+
+Bit-exactness follows the kernel property suite's discipline: integer-
+valued f32 operands make every summation order exact, so plus-times
+comparisons are `array_equal`, not allclose.
+"""
+import numpy as np
+import pytest
+
+from repro.core.delta import EdgeDelta, apply_delta, csr_diff, csr_lookup
+from repro.core.formats import CSR
+from repro.core.generators import fd_matrix, rmat_matrix
+from repro.graph.drivers import (connected_components, pagerank, sssp,
+                                 warm_start_params)
+from repro.plan import (PlanCache, chain_fingerprint, compile as compile_plan,
+                        delta_fingerprint, matrix_fingerprint, overlay)
+from repro.plan.overlay import OverlaidPlan, overlay_eligible
+from repro.serve_graph import (AnalyticRequest, GraphEngine,
+                               GraphEngineConfig, GraphMutation)
+
+N = 64
+
+
+def _adj(seed=3, n=N):
+    return rmat_matrix(n, seed=seed)
+
+
+def _coo(csr):
+    ip = np.asarray(csr.indptr)
+    rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), np.diff(ip))
+    return rows, np.asarray(csr.indices, dtype=np.int64), \
+        np.asarray(csr.data, dtype=np.float32)
+
+
+def _fresh_coords(csr, k, rng, avoid=()):
+    rows, cols, _ = _coo(csr)
+    present = set(zip(rows.tolist(), cols.tolist())) | set(avoid)
+    out = []
+    while len(out) < k:
+        r, c = int(rng.integers(csr.n_rows)), int(rng.integers(csr.n_cols))
+        if (r, c) not in present:
+            out.append((r, c))
+            present.add((r, c))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# EdgeDelta semantics
+# ---------------------------------------------------------------------------
+
+def test_apply_delta_matches_dense_reference():
+    adj = _adj()
+    rng = np.random.default_rng(0)
+    ins = [(r, c, 3.0) for r, c in _fresh_coords(adj, 5, rng)]
+    rows, cols, _ = _coo(adj)
+    dels = [(int(rows[p]), int(cols[p]))
+            for p in rng.choice(rows.size, size=4, replace=False)]
+    delta = EdgeDelta.from_updates(adj, inserts=ins, deletes=dels)
+    got = adj.apply_delta(delta)
+
+    dense = np.asarray(adj.to_dense()).copy()
+    for r, c, v in ins:
+        dense[r, c] = v
+    mask = np.zeros_like(dense, dtype=bool)
+    for r, c in dels:
+        dense[r, c] = 0.0
+        mask[r, c] = True
+    # structural check: deleted coordinates are gone, not zero-valued
+    gr, gc, gv = _coo(got)
+    assert not any((r, c) in set(zip(gr.tolist(), gc.tolist()))
+                   for r, c in dels)
+    np.testing.assert_array_equal(np.asarray(got.to_dense()), dense)
+
+
+def test_csr_diff_round_trip_and_merge():
+    a = _adj(seed=5)
+    rng = np.random.default_rng(1)
+    d1 = EdgeDelta.from_updates(
+        a, inserts=[(r, c, 2.0) for r, c in _fresh_coords(a, 4, rng)])
+    b = a.apply_delta(d1)
+    rows, cols, _ = _coo(b)
+    d2 = EdgeDelta.from_updates(
+        b, inserts=[(r, c, 5.0) for r, c in _fresh_coords(b, 3, rng)],
+        deletes=[(int(rows[0]), int(cols[0]))])
+    c_ = b.apply_delta(d2)
+
+    # diff(a, c) reproduces c from a exactly
+    diff = csr_diff(a, c_)
+    np.testing.assert_array_equal(
+        np.asarray(a.apply_delta(diff).to_dense()), np.asarray(c_.to_dense()))
+    # merged deltas == sequential application
+    merged = d1.merge(d2)
+    np.testing.assert_array_equal(
+        np.asarray(a.apply_delta(merged).to_dense()),
+        np.asarray(c_.to_dense()))
+
+
+def test_from_updates_validates_coordinates():
+    adj = _adj()
+    rows, cols, vals = _coo(adj)
+    r0, c0 = int(rows[0]), int(cols[0])
+    with pytest.raises(ValueError, match="stored coordinates"):
+        EdgeDelta.from_updates(adj, inserts=[(r0, c0, 1.0)])
+    rng = np.random.default_rng(2)
+    (ra, ca), = _fresh_coords(adj, 1, rng)
+    with pytest.raises(ValueError, match="absent coordinates"):
+        EdgeDelta.from_updates(adj, deletes=[(ra, ca)])
+    # delete looks up the removed value -- the caller never supplies it
+    d = EdgeDelta.from_updates(adj, deletes=[(r0, c0)])
+    looked, found = csr_lookup(adj, np.array([r0]), np.array([c0]))
+    assert found.all() and d.vals[0] == looked[0]
+
+
+def test_value_change_is_delete_plus_insert():
+    adj = _adj()
+    rows, cols, vals = _coo(adj)
+    r0, c0 = int(rows[0]), int(cols[0])
+    d = EdgeDelta.from_updates(adj, inserts=[(r0, c0, 9.0)],
+                               deletes=[(r0, c0)])
+    assert d.nnz == 2 and d.has_deletes
+    out = adj.apply_delta(d)
+    got = np.asarray(out.to_dense())
+    assert got[r0, c0] == 9.0
+    # signed stream nets to the value change under plus-times
+    sr_rows, sr_cols, sr_vals = d.signed_coo()
+    net = {}
+    for r, c, v in zip(sr_rows, sr_cols, sr_vals):
+        net[(r, c)] = net.get((r, c), 0.0) + v
+    assert net[(r0, c0)] == pytest.approx(9.0 - float(vals[0]))
+
+
+def test_empty_delta_and_summary():
+    d = EdgeDelta.empty(8, 8)
+    assert d.nnz == 0 and not d.has_deletes
+    adj = _adj()
+    same = adj.apply_delta(EdgeDelta.empty(adj.n_rows, adj.n_cols))
+    np.testing.assert_array_equal(np.asarray(same.to_dense()),
+                                  np.asarray(adj.to_dense()))
+    assert "EdgeDelta" in EdgeDelta.empty(8, 8).summary()
+
+
+# ---------------------------------------------------------------------------
+# fingerprints and cache keys
+# ---------------------------------------------------------------------------
+
+def test_chained_fingerprints_distinguish_generations():
+    adj = _adj(seed=9)
+    rng = np.random.default_rng(3)
+    base_fp = matrix_fingerprint(adj)
+    d1 = EdgeDelta.from_updates(
+        adj, inserts=[(r, c, 1.0) for r, c in _fresh_coords(adj, 2, rng)])
+    d2 = EdgeDelta.from_updates(
+        adj, inserts=[(r, c, 1.0) for r, c in _fresh_coords(
+            adj, 2, rng, avoid=[(r, c) for r, c, _ in
+                                zip(d1.rows, d1.cols, d1.vals)])])
+    f1 = chain_fingerprint(base_fp, delta_fingerprint(d1))
+    f2 = chain_fingerprint(base_fp, delta_fingerprint(d2))
+    f11 = chain_fingerprint(f1, delta_fingerprint(d2))
+    assert len({base_fp, f1, f2, f11}) == 4          # all generations distinct
+    # deterministic: same chain -> same key, no full-matrix rehash needed
+    assert f1 == chain_fingerprint(base_fp, delta_fingerprint(d1))
+
+
+def test_plan_cache_overlay_install_and_swap_counters():
+    adj = _adj(seed=11)
+    cache = PlanCache(max_plans=8)
+    p = cache.get_or_compile(adj, reorder="none", predictor="none")
+    key = cache.key_for(adj, reorder="none", predictor="none")
+    rng = np.random.default_rng(4)
+    d = EdgeDelta.from_updates(
+        adj, inserts=[(r, c, 1.0) for r, c in _fresh_coords(adj, 2, rng)])
+    ov = overlay(p, d)
+    new_key = cache.chained_key(key, ov.fingerprint)
+    assert new_key != key and new_key.endswith(key.split("|", 1)[1])
+
+    cache.install_overlay(new_key, ov, supersedes=key)
+    s = cache.stats()
+    assert s["overlays"] == 1
+    assert cache.peek(new_key) is ov
+    assert cache.peek(key) is None                   # retired atomically
+
+    mat = adj.apply_delta(d)
+    swap_key = cache.key_for(mat, reorder="none", predictor="none")
+    swapped = cache.swap(swap_key,
+                         lambda: compile_plan(mat, reorder="none",
+                                              predictor="none"),
+                         supersedes=new_key)
+    s = cache.stats()
+    assert s["swaps"] == 1
+    assert cache.peek(new_key) is None
+    assert cache.peek(swap_key) is swapped
+    cache.note_delta_recompile()
+    assert cache.stats()["delta_recompiles"] == 1
+    cache.clear()
+    s = cache.stats()
+    assert s["overlays"] == s["swaps"] == s["delta_recompiles"] == 0
+
+
+def test_overlaid_plan_lifecycle_flags():
+    adj = _adj(seed=13)
+    p = compile_plan(adj, reorder="none", predictor="none")
+    rng = np.random.default_rng(5)
+    small = EdgeDelta.from_updates(
+        adj, inserts=[(r, c, 1.0) for r, c in _fresh_coords(adj, 1, rng)])
+    ov = overlay(p, small, staleness_budget=0.05)
+    assert isinstance(ov, OverlaidPlan)
+    assert ov.eligible and not ov.stale
+    assert ov.staleness == pytest.approx(1 / adj.nnz)
+
+    big = EdgeDelta.from_updates(
+        adj, inserts=[(r, c, 1.0) for r, c in _fresh_coords(
+            adj, int(0.1 * adj.nnz), rng)])
+    assert overlay(p, big, staleness_budget=0.05).stale
+
+    rows, cols, _ = _coo(adj)
+    dels = EdgeDelta.from_updates(adj, deletes=[(int(rows[0]), int(cols[0]))])
+    assert overlay_eligible(dels, "plus_times")
+    assert not overlay_eligible(dels, "min_plus")
+    # materialization equals CSR.apply_delta
+    np.testing.assert_array_equal(
+        np.asarray(overlay(p, small).materialize().to_dense()),
+        np.asarray(adj.apply_delta(small).to_dense()))
+
+
+# ---------------------------------------------------------------------------
+# warm starts
+# ---------------------------------------------------------------------------
+
+def test_warm_start_policy():
+    adj = _adj()
+    rng = np.random.default_rng(6)
+    ins = EdgeDelta.from_updates(
+        adj, inserts=[(r, c, 1.0) for r, c in _fresh_coords(adj, 2, rng)])
+    rows, cols, _ = _coo(adj)
+    dels = EdgeDelta.from_updates(adj, deletes=[(int(rows[0]), int(cols[0]))])
+    v = np.zeros(adj.n_rows, np.float32)
+
+    assert warm_start_params("bfs", v, ins) is None          # never
+    assert warm_start_params("pagerank", v, dels) is not None  # always
+    assert warm_start_params("sssp", v, ins) is not None     # insert-only
+    assert warm_start_params("sssp", v, dels) is None        # deletes: reseed
+    assert warm_start_params("connected_components", v, dels) is None
+
+
+def test_warm_started_monotone_analytics_bit_identical():
+    """Insert-only deltas: warm-started sssp/cc converge to the exact
+    cold answer (old values are valid upper bounds the monotone
+    iteration drives down)."""
+    adj = _adj(seed=21, n=128)
+    rng = np.random.default_rng(7)
+    src = int(np.argmax(adj.row_lengths()))
+    pre_d = sssp(adj, src)
+    pre_l = connected_components(adj)
+    mutated = adj.apply_delta(EdgeDelta.from_updates(
+        adj, inserts=[(r, c, 1.0) for r, c in _fresh_coords(adj, 4, rng)]))
+
+    cold = sssp(mutated, src)
+    warm = sssp(mutated, src, d0=pre_d.values.reshape(1, -1))
+    np.testing.assert_array_equal(warm.values, cold.values)
+    assert warm.n_iters <= cold.n_iters
+
+    cold_l = connected_components(mutated)
+    warm_l = connected_components(mutated, l0=pre_l.values)
+    np.testing.assert_array_equal(warm_l.values, cold_l.values)
+    assert warm_l.n_iters <= cold_l.n_iters
+
+
+def test_warm_started_pagerank_converges_to_same_fixpoint():
+    adj = _adj(seed=23, n=128)
+    rng = np.random.default_rng(8)
+    pre = pagerank(adj, tol=1e-6)
+    mutated = adj.apply_delta(EdgeDelta.from_updates(
+        adj, inserts=[(r, c, 1.0) for r, c in _fresh_coords(adj, 1, rng)]))
+    cold = pagerank(mutated, tol=1e-6)
+    warm = pagerank(mutated, tol=1e-6, r0=pre.values)
+    np.testing.assert_allclose(warm.values, cold.values,
+                               rtol=1e-3, atol=1e-4)
+    assert warm.n_iters <= cold.n_iters
+
+
+# ---------------------------------------------------------------------------
+# the serving engine's mutation lifecycle
+# ---------------------------------------------------------------------------
+
+def _engine(**over):
+    cfg = GraphEngineConfig(**{**dict(n_lanes=8, compile_queue_cap=4,
+                                      compiles_per_step=1), **over})
+    eng = GraphEngine(cfg)
+    eng.register_graph("g", _adj(seed=3, n=128))
+    return eng
+
+
+def _small_inserts(eng, k, seed=0):
+    rng = np.random.default_rng(seed)
+    return tuple((r, c, 1.0)
+                 for r, c in _fresh_coords(eng.graphs["g"], k, rng))
+
+
+def test_mutation_overlay_admits_next_request_warm():
+    eng = _engine()
+    eng.submit(AnalyticRequest(0, "g", "sssp", sources=(0,)))
+    eng.run()
+    compiles_before = eng.plan_cache.stats()["compiles"]
+
+    eng.submit(GraphMutation(100, "g", inserts=_small_inserts(eng, 2)))
+    eng.submit(AnalyticRequest(1, "g", "sssp", sources=(0,)))
+    out = eng.run()
+
+    res = eng.mutation_results[100]
+    assert res.actions == {"sssp": "overlay"}
+    s = eng.stats()
+    assert s["plan_cache"]["overlays"] == 1
+    assert s["plan_cache"]["compiles"] == compiles_before  # NO recompile
+    assert s["mutations_applied"] == 1
+    # the overlaid request was a warm hit, not a compile-queue miss
+    assert s["cold_misses"] == 1                           # only request 0
+    ref = sssp(eng.graphs["g"], 0)
+    np.testing.assert_array_equal(out[1].values[0], ref.values)
+
+
+def test_past_budget_delta_one_replan_one_swap_no_wrong_answers():
+    eng = _engine(staleness_budget=0.0005)
+    eng.submit(AnalyticRequest(0, "g", "sssp", sources=(0,)))
+    eng.run()
+
+    eng.submit(GraphMutation(100, "g", inserts=_small_inserts(eng, 4)))
+    eng.submit(AnalyticRequest(1, "g", "sssp", sources=(0,)))
+    out = eng.run()
+
+    assert eng.mutation_results[100].actions == {"sssp": "replan"}
+    s = eng.stats()["plan_cache"]
+    assert s["delta_recompiles"] == 1                # exactly one re-plan
+    assert s["swaps"] == 1                           # landed atomically
+    assert s["overlays"] == 0
+    # no wrong-answer window: the post-mutation answer is the mutated
+    # graph's answer, bit for bit
+    ref = sssp(eng.graphs["g"], 0)
+    np.testing.assert_array_equal(out[1].values[0], ref.values)
+
+
+def test_ineligible_delete_forces_replan_within_budget():
+    eng = _engine()                                  # generous 5% budget
+    eng.submit(AnalyticRequest(0, "g", "sssp", sources=(0,)))
+    eng.run()
+    rows, cols, _ = _coo(eng.graphs["g"])
+    eng.submit(GraphMutation(100, "g",
+                             deletes=((int(rows[0]), int(cols[0])),)))
+    eng.submit(AnalyticRequest(1, "g", "sssp", sources=(0,)))
+    out = eng.run()
+    assert eng.mutation_results[100].actions == {"sssp": "replan"}
+    ref = sssp(eng.graphs["g"], 0)
+    np.testing.assert_array_equal(out[1].values[0], ref.values)
+
+
+def test_chained_mutations_accumulate_and_then_swap():
+    eng = _engine(staleness_budget=0.05)
+    eng.submit(AnalyticRequest(0, "g", "sssp", sources=(0,)))
+    eng.run()
+    for i in range(2):                               # two overlay batches
+        eng.submit(GraphMutation(100 + i, "g",
+                                 inserts=_small_inserts(eng, 2, seed=i)))
+        eng.submit(AnalyticRequest(1 + i, "g", "sssp", sources=(0,)))
+        out = eng.run()
+        assert eng.mutation_results[100 + i].actions == {"sssp": "overlay"}
+    assert eng.stats()["plan_cache"]["overlays"] == 2
+    # a big third batch blows the *accumulated* budget -> replan
+    big = _small_inserts(eng, int(0.06 * eng.graphs["g"].nnz), seed=9)
+    eng.submit(GraphMutation(102, "g", inserts=big))
+    eng.submit(AnalyticRequest(3, "g", "sssp", sources=(0,)))
+    out = eng.run()
+    assert eng.mutation_results[102].actions == {"sssp": "replan"}
+    ref = sssp(eng.graphs["g"], 0)
+    np.testing.assert_array_equal(out[3].values[0], ref.values)
+
+
+def test_inflight_request_rebinds_and_warm_starts():
+    eng = _engine()
+    src = int(np.argmax(eng.graphs["g"].row_lengths()))
+    eng.submit(AnalyticRequest(0, "g", "sssp", sources=(src,)))
+    for _ in range(3):
+        eng.step()
+    assert eng.scheduler.running
+    eng.submit(GraphMutation(100, "g", inserts=_small_inserts(eng, 2)))
+    out = eng.run()
+    assert eng.mutation_results[100].actions == {"sssp": "overlay"}
+    np.testing.assert_array_equal(out[0].values[0],
+                                  sssp(eng.graphs["g"], src).values)
+
+
+def test_mutation_trace_replays_deterministically():
+    def run_once():
+        eng = _engine(staleness_budget=0.002)
+        eng.submit(AnalyticRequest(0, "g", "sssp", sources=(0, 1)))
+        eng.submit(AnalyticRequest(1, "g", "pagerank",
+                                   params={"tol": 1e-5}, max_iters=64))
+        for _ in range(3):
+            eng.step()
+        eng.submit(GraphMutation(100, "g", inserts=_small_inserts(eng, 1)))
+        eng.submit(AnalyticRequest(2, "g", "sssp", sources=(2,)))
+        eng.submit(GraphMutation(101, "g", inserts=_small_inserts(eng, 6,
+                                                                  seed=5)))
+        out = eng.run()
+        return (eng.scheduler.log,
+                {r: (v.values.tobytes(), v.n_iters)
+                 for r, v in out.items()},
+                {m: eng.mutation_results[m].actions
+                 for m in eng.mutation_results},
+                eng.stats()["plan_cache"])
+    a, b = run_once(), run_once()
+    assert a[0] == b[0]                              # identical schedules
+    assert a[1] == b[1]                              # bit-identical results
+    assert a[2] == b[2]                              # identical lifecycle
+    for k in ("overlays", "swaps", "delta_recompiles"):
+        assert a[3][k] == b[3][k]
+
+
+def test_mutation_before_any_request_rebases_cleanly():
+    """A mutation on a registered graph with no derived plans yet is a
+    pure adjacency update -- the first request then compiles the mutated
+    operand cold."""
+    eng = _engine()
+    eng.submit(GraphMutation(100, "g", inserts=_small_inserts(eng, 2)))
+    eng.submit(AnalyticRequest(0, "g", "sssp", sources=(0,)))
+    out = eng.run()
+    assert eng.mutation_results[100].actions == {}
+    ref = sssp(eng.graphs["g"], 0)
+    np.testing.assert_array_equal(out[0].values[0], ref.values)
+
+
+def test_mutation_unknown_graph_rejected():
+    eng = _engine()
+    with pytest.raises(KeyError, match="not registered"):
+        eng.submit(GraphMutation(0, "nope", inserts=((0, 1, 1.0),)))
+
+
+def test_overlay_address_trace_extends_base():
+    from repro.core.cache_model import SANDY_BRIDGE
+
+    adj = _adj(seed=3, n=128)
+    p = compile_plan(adj, reorder="none", predictor="none")
+    rng = np.random.default_rng(9)
+    d = EdgeDelta.from_updates(
+        adj, inserts=[(r, c, 1.0) for r, c in _fresh_coords(adj, 6, rng)])
+    base_trace = p.address_trace(SANDY_BRIDGE)
+    ov_trace = overlay(p, d).address_trace(SANDY_BRIDGE)
+    assert np.array_equal(ov_trace[:len(base_trace)], base_trace)
+    assert len(ov_trace) > len(base_trace)
+    # the delta pass is column-sorted: its x gathers ascend
+    xg = ov_trace[len(base_trace):len(base_trace) + 4 * d.nnz][3::4]
+    assert np.all(np.diff(xg) >= 0)
+    # empty delta leaves the trace untouched
+    empty = overlay(p, EdgeDelta.empty(adj.n_rows, adj.n_cols))
+    assert np.array_equal(empty.address_trace(SANDY_BRIDGE), base_trace)
+
+
+def test_plan_cache_report_renders_pre_streaming_stats():
+    from repro.telemetry.report import plan_cache_report
+
+    legacy = {"plans": 2, "hits": 5, "misses": 3, "evictions": 0,
+              "compiles": 3, "compile_s": 0.1}       # no streaming counters
+    out = plan_cache_report(legacy)
+    assert "overlays" in out and "KeyError" not in out
+    # windowed diff against a pre-streaming snapshot also renders
+    now = dict(legacy, overlays=2, swaps=1, delta_recompiles=1, hits=9)
+    out2 = plan_cache_report(now, before=legacy)
+    assert out2.splitlines()[-1].split(",")[-3:] == ["2", "1", "1"]
